@@ -1,0 +1,41 @@
+"""Table 1 — dynamic bond dimension accounting for the paper's presets.
+
+derived = equiv_chi/step_ratio/comp_ratio — compare with the published
+Table 1 rows (values depend on the entanglement profile; we reproduce the
+qualitative ordering: more squeezed photons → higher equivalent χ).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import gbs
+from repro.core import dynamic_bond as DB
+
+
+def run(quick: bool = True) -> None:
+    rows = []
+    for preset in gbs.PRESETS.values():
+        # entanglement plateau scales with the actual squeezed photon count
+        prof = DB.area_law_profile(preset.n_sites, preset.chi,
+                                   n_photon=preset.asp / 4.0)
+        m = DB.table1_metrics(prof, preset.chi)
+        if preset.n_sites <= 300:          # same-scale presets only
+            rows.append((preset.asp, m["equiv_chi"]))
+        emit(f"table1_{preset.name}", 0.0,
+             f"equiv_chi={m['equiv_chi']:.0f}"
+             f"|step_ratio={m['step_ratio']:.2%}"
+             f"|comp_ratio={m['comp_ratio']:.2%}")
+    # the paper's qualitative law: at fixed M, equiv χ increases with ASP
+    # (m8176 is excluded: with 8176 sites the edge fraction is tiny and the
+    # accounting is plateau-dominated — a different regime than M≈150-300)
+    rows.sort()
+    eq = [r[1] for r in rows]
+    mono = all(a <= b + 1e-9 for a, b in zip(eq, eq[1:]))
+    emit("table1_equivchi_monotone_in_asp_sameM", 0.0, str(mono))
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

@@ -1,0 +1,58 @@
+"""Fig. 5/6 — numeric-range expansion and the underflow cliff.
+
+derived: for each scaling mode, the site index at which the float32 chain
+dies (max |env| → 0), or "alive" — plus the final inter-sample range ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import mps as M
+from repro.core import sampler as S
+
+SITES, CHI, D = 200, 8, 3   # small χ widens the per-branch magnitude spread
+                            # (the Fig. 5 regime: structured, sparse data)
+
+
+def run(quick: bool = True) -> None:
+    mps = M.random_linear_mps(jax.random.key(3), SITES, CHI, D, decay=1.2,
+                              dtype=jnp.float64).astype(jnp.float32)
+    for mode in ("none", "global", "per_sample"):
+        cfg = S.SamplerConfig(scaling=mode)
+        state = S.init_state(mps, 256, jax.random.key(0), cfg)
+        fn = jax.jit(lambda m, s: S.sample_chain(m, s, cfg))
+        t = time_fn(fn, mps, state, iters=1)
+        res = fn(mps, state)
+        max_env = np.asarray(res.site_stats[:, 0])
+        dead = np.nonzero(max_env == 0.0)[0]
+        status = f"dead@site{dead[0]}" if dead.size else "alive"
+        emit(f"fig6_scaling_{mode}", t, status)
+
+    # Fig. 5: per-sample max spread (orders of magnitude), measured two ways
+    # in float64 so nothing underflows.
+    mps64 = mps.astype(jnp.float64)
+    cfg = S.SamplerConfig(scaling="per_sample")
+    state = S.init_state(mps64, 256, jax.random.key(0), cfg)
+    res = jax.jit(lambda m, s: S.sample_chain(m, s, cfg))(mps64, state)
+    # log_scale accumulates each sample's true magnitude; spread across
+    # samples = the horizontal-axis spread of Fig. 5
+    lg = np.asarray(res.state.log_scale)
+    emit("fig5_intersample_spread_log10", 0.0,
+         f"{lg.max() - lg.min():.1f}_orders")
+    # spread under a *global* scale (what a single scalar cannot contain)
+    cfg_g = S.SamplerConfig(scaling="global")
+    res_g = jax.jit(lambda m, s: S.sample_chain(m, s, cfg_g))(
+        mps64, S.init_state(mps64, 256, jax.random.key(0), cfg_g))
+    from repro.core.precision import sample_range_stats
+    sm = np.asarray(sample_range_stats(res_g.state.env)["sample_max"])
+    emit("fig5_globalscale_samplemax_spread", 0.0,
+         f"{np.log10(sm.max() / sm.min()):.1f}_orders")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

@@ -1,0 +1,36 @@
+"""§Roofline companion bench: arithmetic intensity of the fused site kernel.
+
+Reports, for the contract+measure hot spot at paper-scale shapes, the FLOPs,
+bytes and resulting v5e roofline position (compute- vs memory-bound) from
+the *compiled* XLA program — the same analysis the dry-run applies to the
+full production meshes (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.launch import hloanalysis as H
+from repro.kernels import ref
+
+
+def run(quick: bool = True) -> None:
+    for (n, chi, d) in ((5000, 2000, 3), (20000, 10000, 4)):
+        sds = jax.ShapeDtypeStruct
+        c = jax.jit(ref.contract_measure_ref).lower(
+            sds((n, chi), jnp.bfloat16),
+            sds((chi, chi, d), jnp.bfloat16),
+            sds((chi,), jnp.bfloat16)).compile()
+        cost = H.analyze(c.as_text())
+        rf = H.roofline(cost, 1, model_flops=2.0 * n * chi * chi * d)
+        ai = cost.flops / max(cost.memory_bytes, 1)
+        emit(f"roofline_site_N{n}_chi{chi}_d{d}", 0.0,
+             f"AI={ai:.0f}flops/B|bound={rf.bottleneck}"
+             f"|tc={rf.t_compute:.2e}s|tm={rf.t_memory:.2e}s")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

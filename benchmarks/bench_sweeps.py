@@ -1,0 +1,48 @@
+"""Fig. 10 — time vs χ, d, micro-batch N (CPU-scaled).
+
+The paper's three sweeps on a single A100; here one CPU device, scaled χ.
+derived = GFLOP/s of the site contraction (the 2NΧ²d GEMM dominates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import mps as M
+from repro.core import sampler as S
+
+
+def _one_site_time(chi: int, d: int, n: int, dtype=jnp.float32) -> float:
+    mps = M.random_linear_mps(jax.random.key(0), 2, chi, d, dtype=dtype)
+    cfg = S.SamplerConfig()
+    state = S.init_state(mps, n, jax.random.key(1), cfg)
+    fn = jax.jit(lambda m, s: S.sample_chain(m, s, cfg).samples)
+    t2 = time_fn(fn, mps, state)
+    return t2 / 2.0                         # per site
+
+
+def run(quick: bool = True) -> None:
+    # a) time vs χ (d=3, N=4096): expect quadratic growth
+    for chi in (128, 256, 512, 1024):
+        t = _one_site_time(chi, 3, 4096)
+        gflops = 2 * 4096 * chi * chi * 3 / t / 1e9
+        emit(f"fig10a_chi{chi}_d3_N4096", t, f"{gflops:.1f}GFLOP/s")
+
+    # b) time vs d (χ=512, N=4096): linear, with a d-independent floor
+    for d in (2, 3, 4, 6):
+        t = _one_site_time(512, d, 4096)
+        gflops = 2 * 4096 * 512 * 512 * d / t / 1e9
+        emit(f"fig10b_chi512_d{d}_N4096", t, f"{gflops:.1f}GFLOP/s")
+
+    # c) time vs micro batch N (χ=512, d=3): sub-linear until GEMM saturates
+    for n in (256, 1024, 4096, 16384):
+        t = _one_site_time(512, 3, n)
+        per_sample = t / n * 1e9
+        emit(f"fig10c_chi512_d3_N{n}", t, f"{per_sample:.1f}ns/sample")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

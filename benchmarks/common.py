@@ -1,0 +1,61 @@
+"""Shared benchmark plumbing: timing + CSV emission.
+
+Every bench prints ``name,us_per_call,derived`` rows (one per sweep point).
+``derived`` is the paper-facing number (speedup, efficiency, GFLOP/s, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# the MPS oracles/benches compare against float64 (the paper's reference
+# precision); model benches specify their dtypes explicitly
+jax.config.update("jax_enable_x64", True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kwargs) -> float:
+    """Median wall time per call in seconds (block_until_ready'd)."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str | float = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)
+
+
+def run_child(code: str, devices: int = 8, timeout: int = 600) -> dict:
+    """Run python ``code`` in a subprocess with N forced host devices.
+
+    The child must print a single JSON object on its last stdout line.
+    (The parent keeps the real 1-device view; see tests/conftest.py.)
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env, text=True,
+                          capture_output=True, timeout=timeout, cwd=root)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import header
+
+MODULES = [
+    ("fig10_sweeps", "benchmarks.bench_sweeps"),
+    ("fig11_ablation", "benchmarks.bench_ablation"),
+    ("fig5_6_precision", "benchmarks.bench_precision"),
+    ("table1_dynamic_bond", "benchmarks.bench_dynamic_bond"),
+    ("fig12_scaling", "benchmarks.bench_scaling"),
+    ("fig13_eq7_tensor_parallel", "benchmarks.bench_tensor_parallel"),
+    ("table2_3_vs_baseline", "benchmarks.bench_vs_baseline"),
+    ("roofline_site_kernel", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    header()
+    failures = []
+    for name, module in MODULES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ({module}) ---", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+        except Exception:                                  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", flush=True)
+        sys.exit(1)
+    print("# all benchmarks completed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: build an MPS, sample from it, validate against enumeration.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import displacement as D  # noqa: E402
+from repro.core import mps as M  # noqa: E402
+from repro.core import sampler as S  # noqa: E402
+
+
+def main() -> None:
+    # 1. a random 6-site, χ=8, d=3 MPS with the paper's "linear" semantics
+    mps = M.random_linear_mps(jax.random.key(0), n_sites=6, chi=8, d=3)
+
+    # 2. draw 50k samples with the chain sampler (Fig. 1 + Alg. 1)
+    samples = S.sample(mps, 50_000, jax.random.key(1))
+    print(f"samples: {samples.shape}  (N, M) outcomes in [0, d)")
+
+    # 3. validate: empirical joint vs exact enumeration
+    probs = M.enumerate_probabilities(mps)
+    idx = np.ravel_multi_index(np.asarray(samples).T, (3,) * 6)
+    emp = np.bincount(idx, minlength=3 ** 6) / samples.shape[0]
+    tv = 0.5 * np.abs(emp - probs).sum()
+    print(f"total-variation distance to exact joint: {tv:.4f} "
+          f"(sampling noise ~{np.sqrt(3 ** 6 / 50_000):.3f})")
+
+    # 4. the paper's adaptive mixed precision: bf16 GEMMs + fp32 accumulate
+    # draw the same outcomes as full fp32 for the vast majority of samples
+    # — and critically, the *distribution* is preserved (per-sample scaling
+    # keeps every row's dynamic range inside bf16's exponent budget).
+    mps32 = mps.astype(jnp.float32)
+    base32 = S.sample(mps32, 50_000, jax.random.key(1))
+    mx = S.sample(mps32, 50_000, jax.random.key(1),
+                  S.SamplerConfig(compute_dtype=jnp.bfloat16))
+    agree = float(jnp.mean(jnp.all(mx == base32, axis=1).astype(jnp.float32)))
+    print(f"bf16-MXU draws identical to fp32 draws: {agree:.1%} of samples")
+    idx_mx = np.ravel_multi_index(np.asarray(mx).T, (3,) * 6)
+    emp_mx = np.bincount(idx_mx, minlength=3 ** 6) / mx.shape[0]
+    print(f"bf16 path TV distance to exact joint: "
+          f"{0.5 * np.abs(emp_mx - probs).sum():.4f}")
+
+    # 5. GBS displacement via the Zassenhaus triangular split (§3.4.1)
+    mu = (0.3 * jax.random.normal(jax.random.key(2), (4,))
+          + 0.3j * jax.random.normal(jax.random.key(3), (4,)))
+    dz = D.displacement_zassenhaus(mu.astype(jnp.complex128), d=6)
+    de = D.displacement_exact(mu.astype(jnp.complex128), d=6)
+    err = float(jnp.max(jnp.abs(dz[:, :3, :3] - de[:, :3, :3])))
+    print(f"displacement triangular-split error (low Fock block): {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.store import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.sampler_state import save_sampler_state, load_sampler_state

@@ -1,0 +1,86 @@
+"""Architecture registry + assigned input shapes.
+
+Every ``<arch>.py`` exports ``CONFIG`` (the exact published config) and
+``SMOKE`` (a reduced same-family config for CPU tests).  GBS presets for the
+paper's own experiments live in ``gbs.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+ARCHS = [
+    "zamba2-7b", "qwen1.5-4b", "deepseek-7b", "starcoder2-15b",
+    "granite-3-2b", "llama-3.2-vision-11b", "whisper-small", "mamba2-1.3b",
+    "kimi-k2-1t-a32b", "deepseek-v3-671b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k":    ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _mod(arch: str):
+    return importlib.import_module(f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _mod(arch).SMOKE
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch × shape) is a defined cell (long_500k needs sub-quadratic)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch — 500k decode skipped (DESIGN.md)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        spec = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.family == "encdec":
+            spec["frames"] = sds((B, cfg.enc_len, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            spec["patches"] = sds((B, cfg.n_patches, cfg.d_model), cfg.dtype)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": sds((B, S), i32)}
+        if cfg.family == "encdec":
+            spec["frames"] = sds((B, cfg.enc_len, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            spec["patches"] = sds((B, cfg.n_patches, cfg.d_model), cfg.dtype)
+        return spec
+    if shape.kind == "decode":
+        spec = {"tokens": sds((B, 1), i32)}
+        if cfg.family == "encdec":
+            spec["enc_out"] = sds((B, cfg.enc_len, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            spec["patches"] = sds((B, cfg.n_patches, cfg.d_model), cfg.dtype)
+        return spec
+    raise ValueError(shape.kind)

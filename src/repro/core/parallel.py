@@ -1,0 +1,470 @@
+"""Multi-level parallel MPS sampling (paper §3.1–3.2) + the [19] baseline.
+
+Mesh layout (shared with the LM stack, see launch/mesh.py):
+
+    ("data", "model")            single pod, p = p₁ × p₂
+    ("pod", "data", "model")     multi-pod; "pod" is folded into data parallel
+
+* **Data parallel** (§3.1): samples are independent; each of the p₁ data
+  groups owns N/p₁ samples and walks the full chain.  Γ is replicated
+  (broadcast from the loader — in-XLA this is the implicit all-gather of a
+  fully-replicated operand; the host-side streaming version lives in
+  ``data/gamma_store.py``).
+
+* **Tensor parallel** (§3.2): within a group, Γᵢ and the environment are
+  split along the bond axis χ over p₂ workers.
+
+  - ``single``-site: split-K GEMM over the *left* bond; measurement is
+    computed from partial probabilities (a tiny ``psum`` of (N₂, d)) *before*
+    the big collective, so the wire carries the measured (N₂, χ) environment
+    — a factor d smaller — via ``psum_scatter``.  Bandwidth-optimal.
+    (Valid because Alg. 1 is linear in the environment; for ``born``
+    semantics this is invalid — |Σ·|² ≠ Σ|·|² — so we fall back to
+    ``psum_scatter`` of the unmeasured (N₂, χ, d) + tiny psum of partial
+    square-weights.)
+  - ``double``-site: one ``psum`` (AllReduce) of the unmeasured (N₂, χ, d)
+    every *two* sites.  The even site's Γ is split along the *right* bond, so
+    its GEMM is communication-free and leaves the environment pre-sliced for
+    the next odd site.  Half the collective count → latency-optimal; odd-site
+    measurement is replicated (the η=1 vs η=p₂ trade of Eq. 7).
+
+All schemes draw identical randoms within a TP group (the key is replicated
+over "model"), so DP and both TP schedules produce bit-identical samples for
+the same seed — asserted in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.mps import MPS
+from repro.core import precision
+from repro.core.sampler import SamplerConfig, draw_from_probs
+
+Array = jax.Array
+
+
+def _env_dtype(gamma_dtype):
+    """Environments accumulate across sites — keep them ≥ fp32 even when Γ
+    is stored low-precision (§3.3.2: storage ≠ compute precision)."""
+    return (jnp.float32 if gamma_dtype in (jnp.bfloat16, jnp.float16)
+            else gamma_dtype)
+
+
+def _contract(env: Array, gamma: Array, config: SamplerConfig) -> Array:
+    """temp[n,r,s] = Σ_l env[n,l] Γ[l,r,s] under the configured precision."""
+    n, lsz = env.shape
+    _, r, d = gamma.shape[0], gamma.shape[1], gamma.shape[2]
+    if config.compute_dtype is not None:
+        out = jax.lax.dot_general(
+            env.astype(config.compute_dtype),
+            gamma.reshape(gamma.shape[0], -1).astype(config.compute_dtype),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(env.dtype)
+        return out.reshape(n, r, d)
+    return jnp.einsum("nl,lrs->nrs", env, gamma)
+
+
+def _measure(temp: Array, lam: Array, semantics: str) -> Array:
+    if semantics == "linear":
+        return jnp.einsum("nrs,r->ns", temp, lam)
+    scaled = temp * lam[None, :, None]
+    return jnp.sum(jnp.abs(scaled) ** 2, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Data parallel (shard samples over ("pod","data"); replicate Γ)
+# ---------------------------------------------------------------------------
+
+def dp_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
+              config: SamplerConfig = SamplerConfig(),
+              data_axes: tuple[str, ...] = ("data",)) -> Array:
+    """Pure data-parallel sampling: each data shard runs the full chain."""
+    from repro.core import sampler as S
+
+    n_shards = 1
+    for ax in data_axes:
+        n_shards *= mesh.shape[ax]
+    assert n_samples % n_shards == 0
+    keys = jax.random.split(key, n_shards)
+
+    def shard_fn(keys_local, gammas, lambdas):
+        local = MPS(gammas, lambdas, mps.semantics)
+        out = S.sample(local, n_samples // n_shards, keys_local[0], config)
+        return out
+
+    f = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(data_axes), P(), P()),
+        out_specs=P(data_axes), check_vma=False,
+    )
+    return f(keys, mps.gammas, mps.lambdas)
+
+
+# ---------------------------------------------------------------------------
+# Tensor parallel — single-site (ReduceScatter) schedule
+# ---------------------------------------------------------------------------
+
+def _tp_single_site_step(env, gamma_l, lam, key, config, axis,
+                         wire_dtype=None):
+    """One site with env (N, χ/p₂) and Γ sharded on the left bond.
+
+    Returns the new sharded env and the drawn samples.
+    """
+    semantics = config.semantics
+    dtype = env.dtype
+    temp_partial = _contract(env, gamma_l, config)        # (N, χ, d) partial sum
+    if semantics == "linear":
+        # measure-before-communicate: tiny psum of (N, d) partial probs
+        probs = jax.lax.psum(_measure(temp_partial, lam, semantics), axis)
+        samples = draw_from_probs(probs, key)
+        collapsed = jnp.take_along_axis(
+            temp_partial, samples[:, None, None], axis=2)[:, :, 0]  # (N, χ) partial
+        if wire_dtype is not None:
+            collapsed = collapsed.astype(wire_dtype)
+        env_new = jax.lax.psum_scatter(
+            collapsed, axis, scatter_dimension=1, tiled=True)       # (N, χ/p₂)
+        env_new = env_new.astype(dtype)
+    else:
+        # born: must sum split-K partials before squaring.
+        temp = jax.lax.psum_scatter(temp_partial, axis,
+                                    scatter_dimension=1, tiled=True)  # (N, χ/p₂, d)
+        p2 = jax.lax.axis_size(axis)
+        idx = jax.lax.axis_index(axis)
+        lam_shard = jax.lax.dynamic_slice_in_dim(
+            lam, idx * (lam.shape[0] // p2), lam.shape[0] // p2)
+        probs = jax.lax.psum(_measure(temp, lam_shard, semantics), axis)
+        samples = draw_from_probs(probs, key)
+        env_new = jnp.take_along_axis(
+            temp, samples[:, None, None], axis=2)[:, :, 0] * lam_shard[None, :]
+    # per-sample rescale: the max must be consistent across the TP group
+    if config.scaling == "per_sample":
+        m = jax.lax.pmax(jnp.max(jnp.abs(env_new), axis=1, keepdims=True), axis)
+        env_new = env_new / jnp.where(m > 0, m, 1.0)
+    elif config.scaling == "global":
+        m = jax.lax.pmax(jnp.max(jnp.abs(env_new)), axis)
+        env_new = env_new / jnp.where(m > 0, m, 1.0)
+    return env_new, samples
+
+
+def _collapse_select_xla(env, gamma_l, samples, config):
+    """env' = env @ Γ[:, :, s_n] without materializing the (N, χ, d) temp:
+    d masked GEMMs (the Pallas kernel fuses the mask on TPU)."""
+    d = gamma_l.shape[2]
+    n, _ = env.shape
+    acc = None
+    for s in range(d):
+        mask = (samples == s).astype(env.dtype)[:, None]
+        part = _contract_2d(env * mask, gamma_l[:, :, s], config)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def _contract_2d(env, gamma2d, config):
+    if config.compute_dtype is not None:
+        return jax.lax.dot_general(
+            env.astype(config.compute_dtype),
+            gamma2d.astype(config.compute_dtype),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(jnp.float32)
+    return env @ gamma2d
+
+
+def _tp_single_site_step_measure_first(env, gamma_l, w_l, key, config, axis,
+                                       wire_dtype=None):
+    """tp-3: probs from the tiny env@W GEMM; collapse via select-GEMM.
+
+    env (N, χ/p₂) sharded; gamma_l (χ/p₂, χ, d); w_l (χ/p₂, d).
+    """
+    dtype = env.dtype
+    probs = jax.lax.psum(_contract_2d(env, w_l, config).astype(dtype), axis)
+    samples = draw_from_probs(probs, key)
+    collapsed = _collapse_select_xla(env, gamma_l, samples, config)  # (N, χ)
+    if wire_dtype is not None:
+        collapsed = collapsed.astype(wire_dtype)
+    env_new = jax.lax.psum_scatter(
+        collapsed, axis, scatter_dimension=1, tiled=True).astype(dtype)
+    if config.scaling == "per_sample":
+        m = jax.lax.pmax(jnp.max(jnp.abs(env_new), axis=1, keepdims=True), axis)
+        env_new = env_new / jnp.where(m > 0, m, 1.0)
+    elif config.scaling == "global":
+        m = jax.lax.pmax(jnp.max(jnp.abs(env_new)), axis)
+        env_new = env_new / jnp.where(m > 0, m, 1.0)
+    return env_new, samples
+
+
+# ---------------------------------------------------------------------------
+# Tensor parallel — double-site (AllReduce) schedule
+# ---------------------------------------------------------------------------
+
+def _tp_double_site_pair(env, gamma_odd_l, lam_odd, gamma_even_r, lam_even,
+                         key_pair, config, axis, wire_dtype=None):
+    """Two sites per round: AllReduce once, even site communication-free."""
+    semantics = config.semantics
+    k_odd, k_even = key_pair
+
+    # --- odd site: split-K over left bond, AllReduce the unmeasured temp ----
+    temp = _contract(env, gamma_odd_l, config)
+    if wire_dtype is not None:
+        temp = temp.astype(wire_dtype)
+    temp = jax.lax.psum(temp, axis).astype(env.dtype)     # (N, χ, d) full
+    probs = _measure(temp, lam_odd, semantics)          # replicated (η overhead)
+    samples_odd = draw_from_probs(probs, k_odd)
+    env_full = jnp.take_along_axis(temp, samples_odd[:, None, None], axis=2)[:, :, 0]
+    if semantics == "born":
+        env_full = env_full * lam_odd[None, :]
+    if config.scaling == "per_sample":
+        m = jnp.max(jnp.abs(env_full), axis=1, keepdims=True)
+        env_full = env_full / jnp.where(m > 0, m, 1.0)
+    elif config.scaling == "global":
+        m = jnp.max(jnp.abs(env_full))
+        env_full = env_full / jnp.where(m > 0, m, 1.0)
+
+    # --- even site: Γ split on the right bond; local GEMM, no collective ----
+    temp_loc = _contract(env_full, gamma_even_r, config)   # (N, χ/p₂, d) exact slice
+    p2 = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    lam_shard = jax.lax.dynamic_slice_in_dim(
+        lam_even, idx * (lam_even.shape[0] // p2), lam_even.shape[0] // p2)
+    probs = jax.lax.psum(_measure(temp_loc, lam_shard, semantics), axis)  # tiny
+    samples_even = draw_from_probs(probs, k_even)
+    env_new = jnp.take_along_axis(temp_loc, samples_even[:, None, None], axis=2)[:, :, 0]
+    if semantics == "born":
+        env_new = env_new * lam_shard[None, :]
+    if config.scaling == "per_sample":
+        m = jax.lax.pmax(jnp.max(jnp.abs(env_new), axis=1, keepdims=True), axis)
+        env_new = env_new / jnp.where(m > 0, m, 1.0)
+    elif config.scaling == "global":
+        m = jax.lax.pmax(jnp.max(jnp.abs(env_new)), axis)
+        env_new = env_new / jnp.where(m > 0, m, 1.0)
+    return env_new, (samples_odd, samples_even)
+
+
+# ---------------------------------------------------------------------------
+# Top-level multi-level sampler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    scheme: str = "dp"                 # "dp" | "tp_single" | "tp_double" | "baseline19"
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # §3.3.2 extended to the TP wire (beyond-paper, §Perf iteration tp-2):
+    # cast the collapsed environment to this dtype before the big collective.
+    # bf16 keeps fp32's exponent range, so with per-sample scaling the wire
+    # cast cannot under/overflow — it only rounds the 8-bit mantissa.
+    wire_dtype: Optional[jnp.dtype] = None
+    # measure-first reformulation (beyond-paper, §Perf iteration tp-3):
+    # probs = env @ (Γ·Λ) by associativity of Alg. 1, so the (N, χ, d)
+    # unmeasured temp is never materialized; the collapse becomes a
+    # sample-selected GEMM (kernels/collapse_select.py keeps the masked
+    # operand VMEM-resident on TPU; the XLA fallback loops over the d
+    # outcomes with a per-sample row mask).  Linear semantics only.
+    measure_first: bool = False
+
+
+def multilevel_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
+                      pconfig: ParallelConfig = ParallelConfig(),
+                      config: SamplerConfig = SamplerConfig()) -> Array:
+    """DP over samples × TP over χ.  Returns (N, M) outcomes."""
+    if pconfig.scheme == "dp":
+        return dp_sample(mesh, mps, n_samples, key, config, pconfig.data_axes)
+    if pconfig.scheme == "baseline19":
+        return baseline19_sample(mesh, mps, n_samples, key, config,
+                                 pipeline_axis=pconfig.data_axes[-1])
+
+    d_axes, m_axis = pconfig.data_axes, pconfig.model_axis
+    p1 = 1
+    for ax in d_axes:
+        p1 *= mesh.shape[ax]
+    p2 = mesh.shape[m_axis]
+    assert n_samples % p1 == 0
+    n_local = n_samples // p1
+    chi = mps.chi
+    assert chi % p2 == 0, (chi, p2)
+    M = mps.n_sites
+
+    dp_keys = jax.random.split(key, p1)    # replicated over "model"
+
+    if pconfig.scheme == "tp_single":
+        measure_first = pconfig.measure_first and config.semantics == "linear"
+
+        def shard_fn(keys_local, gammas_l, lambdas):
+            # local shapes: gammas_l (M, χ/p₂, χ, d); env (N_local, χ/p₂)
+            base = keys_local[0]
+            idx = jax.lax.axis_index(m_axis)
+            env = jnp.zeros((n_local, chi // p2),
+                            dtype=_env_dtype(mps.gammas.dtype))
+            env = jnp.where(idx == 0, env.at[:, 0].set(1.0), env)
+
+            if measure_first:
+                # per-site measure-first operator W (M, χ/p₂, d) — tiny
+                w_l = jnp.einsum("mlrs,mr->mls",
+                                 gammas_l.astype(jnp.float32),
+                                 lambdas.astype(jnp.float32))
+
+                def body(env, xs):
+                    g, w, i = xs
+                    k = jax.random.fold_in(base, i)
+                    env, s = _tp_single_site_step_measure_first(
+                        env, g, w, k, config, m_axis,
+                        wire_dtype=pconfig.wire_dtype)
+                    return env, s
+
+                _, samples = jax.lax.scan(
+                    body, env,
+                    (gammas_l, w_l, jnp.arange(M, dtype=jnp.int32)))
+                return samples.T
+
+            def body(env, xs):
+                g, lam, i = xs
+                k = jax.random.fold_in(base, i)   # same schedule as sampler.py
+                env, s = _tp_single_site_step(env, g, lam, k, config, m_axis,
+                                              wire_dtype=pconfig.wire_dtype)
+                return env, s
+
+            _, samples = jax.lax.scan(
+                body, env, (gammas_l, lambdas, jnp.arange(M, dtype=jnp.int32)))
+            return samples.T                     # (N_local, M)
+
+        f = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(d_axes), P(None, m_axis, None, None), P()),
+            out_specs=P(d_axes), check_vma=False,
+        )
+        return f(dp_keys, mps.gammas, mps.lambdas)
+
+    if pconfig.scheme == "tp_double":
+        assert M % 2 == 0, "double-site schedule needs an even site count"
+        g_odd = mps.gammas[0::2]       # contracted first in each pair
+        g_even = mps.gammas[1::2]
+        lam_odd = mps.lambdas[0::2]
+        lam_even = mps.lambdas[1::2]
+
+        def shard_fn(keys_local, godd_l, lamo, geven_r, lame):
+            # godd_l (M/2, χ/p₂, χ, d) split on left bond;
+            # geven_r (M/2, χ, χ/p₂, d) split on right bond.
+            base = keys_local[0]
+            idx = jax.lax.axis_index(m_axis)
+            env = jnp.zeros((n_local, chi // p2),
+                            dtype=_env_dtype(mps.gammas.dtype))
+            env = jnp.where(idx == 0, env.at[:, 0].set(1.0), env)
+
+            def body(env, xs):
+                go, lo, ge, le, j = xs
+                kp = (jax.random.fold_in(base, 2 * j),
+                      jax.random.fold_in(base, 2 * j + 1))
+                env, (so, se) = _tp_double_site_pair(
+                    env, go, lo, ge, le, kp, config, m_axis,
+                    wire_dtype=pconfig.wire_dtype)
+                return env, jnp.stack([so, se])
+
+            _, samples = jax.lax.scan(
+                body, env,
+                (godd_l, lamo, geven_r, lame, jnp.arange(M // 2, dtype=jnp.int32)))
+            return samples.reshape(M, n_local).T
+
+        f = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(d_axes), P(None, m_axis, None, None), P(),
+                      P(None, None, m_axis, None), P()),
+            out_specs=P(d_axes), check_vma=False,
+        )
+        return f(dp_keys, g_odd, lam_odd, g_even, lam_even)
+
+    raise ValueError(f"unknown scheme {pconfig.scheme!r}")
+
+
+# ---------------------------------------------------------------------------
+# Baseline [19]: one worker per site, macro-batch pipeline over a ring
+# ---------------------------------------------------------------------------
+
+def baseline19_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
+                      config: SamplerConfig = SamplerConfig(),
+                      pipeline_axis: str = "data",
+                      n_macro: Optional[int] = None) -> Array:
+    """The model-parallel scheme of [19] (Fig. 2), for comparison benches.
+
+    p processes = M sites (p must equal M here).  The left environment of
+    each macro batch flows down a ``ppermute`` chain; at time step t, worker i
+    processes macro batch (t − i).  Total steps = n₁ + M − 1 (the pipeline
+    fill the paper criticises).  Emitted samples: worker i produces site i's
+    outcomes for every macro batch.
+    """
+    p = mesh.shape[pipeline_axis]
+    M = mps.n_sites
+    assert p == M, f"[19] binds one process per site (p={p}, M={M})"
+    n1 = n_macro or config_macro_batches(n_samples)
+    assert n_samples % n1 == 0, (n_samples, n1)
+    N1 = n_samples // n1
+    semantics = mps.semantics
+
+    # One base key per macro batch; worker i draws with fold_in(base_b, i) —
+    # the same (batch, site) schedule as the data-parallel sampler, so [19]
+    # and FastMPS produce identical samples from the same seed.
+    base_keys = jax.random.key_data(jax.random.split(key, n1))  # (n1, key_size)
+    base_keys = jnp.broadcast_to(base_keys[:, None, :],
+                                 (n1, M, base_keys.shape[-1]))
+
+    def shard_fn(gamma, lam, keys_batch):
+        # gamma (1, χ, χ, d) local site tensor; keys_batch (n1, 1, key_size)
+        gamma = gamma[0]
+        lam = lam[0]
+        i = jax.lax.axis_index(pipeline_axis)
+        T = n1 + M - 1
+        chi = gamma.shape[0]
+        dt = gamma.dtype
+
+        # ring buffer: env of whichever macro batch currently sits here
+        env0 = jnp.zeros((N1, chi), dt).at[:, 0].set(1.0)
+
+        def step(carry, t):
+            env_in = carry
+            b = t - i                      # macro batch index at this worker
+            active = (b >= 0) & (b < n1)
+            kb = jax.random.fold_in(
+                jax.random.wrap_key_data(
+                    keys_batch[jnp.clip(b, 0, n1 - 1), 0].astype(jnp.uint32)),
+                i)
+            temp = jnp.einsum("nl,lrs->nrs", env_in, gamma)
+            probs = _measure(temp, lam, semantics)
+            s = draw_from_probs(probs, kb)
+            env_out = jnp.take_along_axis(temp, s[:, None, None], axis=2)[:, :, 0]
+            if semantics == "born":
+                env_out = env_out * lam[None, :]
+            m = jnp.max(jnp.abs(env_out), axis=1, keepdims=True)
+            env_out = env_out / jnp.where(m > 0, m, 1.0)
+            s = jnp.where(active, s, -1)
+            # fresh batches enter at worker 0
+            fresh = jnp.zeros((N1, chi), dt).at[:, 0].set(1.0)
+            send = jnp.where(active, env_out, env_in)
+            nxt = jax.lax.ppermute(send, pipeline_axis,
+                                   [(j, (j + 1) % M) for j in range(M)])
+            nxt = jnp.where(i == 0, fresh, nxt)
+            return nxt, s
+
+        _, emitted = jax.lax.scan(step, env0, jnp.arange(T))
+        # emitted (T, N1): site-i outcomes of batch b are at t = b + i
+        rows = jnp.arange(n1) + i
+        return emitted[rows][None]          # (1, n1, N1)
+
+    f = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(pipeline_axis), P(pipeline_axis), P(None, pipeline_axis)),
+        out_specs=P(pipeline_axis), check_vma=False,
+    )
+    out = f(mps.gammas, mps.lambdas, base_keys)  # (M, n1, N1)
+    return out.transpose(1, 2, 0).reshape(n_samples, M)
+
+
+def config_macro_batches(n_samples: int, target: int = 4) -> int:
+    """n₁: number of macro batches (kept small for the CPU test harness)."""
+    for n1 in range(target, 0, -1):
+        if n_samples % n1 == 0:
+            return n1
+    return 1

@@ -1,0 +1,89 @@
+"""Adaptive mixed precision (paper §3.3).
+
+Three scaling modes for the left environment:
+
+- ``none``        : no rescaling — reproduces the Fig. 6 underflow failure.
+- ``global``      : the [19] auto-scale — one scalar (the global max) per
+                    micro batch.  Fixes the shift *of the mean* but not the
+                    inter-sample range expansion (Fig. 5).
+- ``per_sample``  : the paper's contribution — each sample is rescaled by its
+                    own max.  Because Alg. 1's measurement is linear in the
+                    environment and immediately normalised, the factor cancels
+                    and no reverse-scaling vector is needed.
+
+``rescale`` returns the rescaled tensor plus per-sample log10 of the factor so
+callers that *do* need absolute magnitudes (e.g. amplitude estimation) can
+recover them — the sampler just accumulates it as a diagnostic.
+
+The compute-precision policy (TF32-on-A100 → bf16-on-MXU with fp32
+accumulation) lives here too; see DESIGN.md §2 hardware adaptation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def real_dtype_of(dtype) -> jnp.dtype:
+    return jnp.zeros((), dtype=dtype).real.dtype
+
+
+def rescale(env: Array, mode: str = "per_sample") -> tuple[Array, Array]:
+    """Rescale env (N, chi); returns (env', log10_per_sample_factor (N,))."""
+    n = env.shape[0]
+    rdt = real_dtype_of(env.dtype)
+    if mode == "none":
+        return env, jnp.zeros((n,), dtype=rdt)
+    a = jnp.abs(env)
+    if mode == "global":
+        m = jnp.max(a)
+        factor = jnp.where(m > 0, m, 1.0).astype(rdt)
+        return env / factor, jnp.broadcast_to(jnp.log10(factor), (n,))
+    if mode == "per_sample":
+        m = jnp.max(a, axis=1, keepdims=True)                 # (N, 1)
+        factor = jnp.where(m > 0, m, 1.0).astype(rdt)
+        return env / factor, jnp.log10(factor[:, 0])
+    raise ValueError(f"unknown scaling mode: {mode}")
+
+
+def sample_range_stats(env: Array) -> dict[str, Array]:
+    """The Fig. 5 axes: per-sample max and max/min-nonzero ratio."""
+    a = jnp.abs(env)
+    smax = jnp.max(a, axis=1)
+    smin = jnp.min(jnp.where(a > 0, a, jnp.inf), axis=1)
+    return {"sample_max": smax, "range_ratio": smax / smin}
+
+
+# ---------------------------------------------------------------------------
+# Compute-precision policies (TPU adaptation of the paper's TF32/FP16 tiers)
+# ---------------------------------------------------------------------------
+
+POLICIES = {
+    # name: (storage dtype, gemm input dtype, accumulation dtype)
+    "fp64": (jnp.float64, jnp.float64, jnp.float64),
+    "fp32": (jnp.float32, jnp.float32, jnp.float32),
+    # paper's TF32 tier → TPU bf16 inputs + fp32 accumulate on the MXU
+    "mxu_bf16": (jnp.float32, jnp.bfloat16, jnp.float32),
+    # paper's FP16-storage tier → bf16 storage (same exponent range as fp32),
+    # upcast at contraction.  Halves I/O / bcast / memcpy exactly as §3.3.2.
+    "store_bf16": (jnp.bfloat16, jnp.bfloat16, jnp.float32),
+}
+
+
+def policy_dtypes(name: str):
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown precision policy {name!r}; have {list(POLICIES)}")
+
+
+def gemm(a: Array, b: Array, policy: str = "fp32") -> Array:
+    """dot(a, b) under a named precision policy (contraction over a's last dim)."""
+    _, in_dt, acc_dt = policy_dtypes(policy)
+    return jax.lax.dot_general(
+        a.astype(in_dt), b.astype(in_dt),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=acc_dt,
+    )

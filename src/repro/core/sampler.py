@@ -1,0 +1,191 @@
+"""Sequential MPS chain sampler (the paper's Figure 1 workflow + Alg. 1).
+
+The sampler walks the chain left→right carrying a *left environment*
+``env[N, chi]``.  At each site i:
+
+  1. contraction:  temp[n, r, s] = Σ_l env[n, l] · Γ_i[l, r, s]
+  2. measurement (Alg. 1):
+       linear:  probs[n, s] = Σ_r temp[n, r, s] Λ_i[r]
+       born:    probs[n, s] = Σ_r |temp[n, r, s] λ_i[r]|²
+     normalise → cumsum → inverse-CDF draw with one uniform per sample
+  3. collapse:  env'[n, r] = temp[n, r, s_n]   (born: ×λ_i[r])
+  4. per-sample adaptive rescale (§3.3) so the dynamic range stays bounded.
+
+The chain is a single ``lax.scan`` over the stacked Γ (static shapes), so it
+jits once regardless of M.  Micro-batching (N₂) happens *outside* via vmap-
+like batching of the whole scan; macro-batching (N₁) and the double-buffered
+Γ streaming live in ``data/gamma_store.py`` + ``core/parallel.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mps import MPS
+from repro.core import precision
+
+Array = jax.Array
+
+
+class SamplerState(NamedTuple):
+    """Carry of the chain scan — also the unit of mid-chain checkpointing."""
+    env: Array          # (N, chi) left environment (rescaled)
+    key: Array          # *base* PRNG key — never consumed; site i draws with
+                        # fold_in(key, i), so every parallel schedule (DP, TP
+                        # single/double, the [19] pipeline) that shares the
+                        # base key draws identical randoms per site.
+    log_scale: Array    # (N,) accumulated log10 of the per-sample rescale factors
+
+
+class SampleResult(NamedTuple):
+    samples: Array      # (M, N) int32 outcomes  (site-major, transpose for user)
+    state: SamplerState
+    site_stats: Array   # (M, 3) [max |env|, min nonzero |env|, mean photon] diagnostics
+
+
+def _measure_linear(temp: Array, lam: Array) -> Array:
+    """(N, chi, d), (chi,) -> unnormalised probs (N, d).  Paper Alg. 1 line 1."""
+    return jnp.einsum("nrs,r->ns", temp, lam)
+
+
+def _measure_born(temp: Array, lam: Array) -> Array:
+    scaled = temp * lam[None, :, None]
+    return jnp.sum(jnp.abs(scaled) ** 2, axis=1)
+
+
+def draw_from_probs(probs: Array, key: Array) -> Array:
+    """Alg. 1 lines 2-4: normalise, cumsum, threshold draw.  probs (N, d) ≥ 0."""
+    probs = jnp.clip(probs, 0.0, None)
+    total = jnp.sum(probs, axis=1, keepdims=True)
+    # Guard fully-underflowed rows: fall back to uniform (paper Fig. 6 failure
+    # mode — with per-sample scaling this should never trigger).
+    safe = jnp.where(total > 0, probs / jnp.where(total > 0, total, 1.0),
+                     jnp.ones_like(probs) / probs.shape[1])
+    cdf = jnp.cumsum(safe, axis=1)
+    u = jax.random.uniform(key, (probs.shape[0], 1), dtype=cdf.dtype)
+    return jnp.sum((u > cdf).astype(jnp.int32), axis=1).clip(0, probs.shape[1] - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    semantics: str = "linear"          # "linear" | "born"
+    scaling: str = "per_sample"        # "none" | "global" | "per_sample"  (§3.3)
+    compute_dtype: Optional[jnp.dtype] = None  # e.g. jnp.bfloat16 for MXU path
+    use_kernel: bool = False           # route contraction+measure through Pallas
+
+
+def init_state(mps: MPS, n_samples: int, key: Array,
+               config: SamplerConfig = SamplerConfig()) -> SamplerState:
+    """Boundary condition: env starts as the one-hot left boundary row."""
+    chi = mps.chi
+    dtype = mps.gammas.dtype
+    if dtype in (jnp.bfloat16, jnp.float16):     # low-precision Γ *storage*
+        dtype = jnp.float32                      # never a low-precision env
+    env = jnp.zeros((n_samples, chi), dtype=dtype).at[:, 0].set(1.0)
+    log_scale = jnp.zeros((n_samples,), dtype=precision.real_dtype_of(dtype))
+    return SamplerState(env, key, log_scale)
+
+
+def site_step(state: SamplerState, site: tuple[Array, Array, Array],
+              config: SamplerConfig) -> tuple[SamplerState, tuple[Array, Array]]:
+    """One site of the chain: contract → measure → collapse → rescale."""
+    gamma, lam, site_idx = site            # (chi, chi, d), (chi,), () int32
+    env, key, log_scale = state
+    sub = jax.random.fold_in(key, site_idx)
+
+    if config.compute_dtype is not None and config.semantics == "linear":
+        # Mixed-precision GEMM (§3.3): inputs in low precision, fp32 accumulate.
+        temp = jax.lax.dot_general(
+            env.astype(config.compute_dtype),
+            gamma.reshape(gamma.shape[0], -1).astype(config.compute_dtype),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(env.shape[0], gamma.shape[1], gamma.shape[2]).astype(env.dtype)
+    else:
+        temp = jnp.einsum("nl,lrs->nrs", env, gamma)
+
+    if config.semantics == "linear":
+        probs = _measure_linear(temp, lam)
+    else:
+        probs = _measure_born(temp, lam)
+
+    samples = draw_from_probs(probs, sub)
+    new_env = jnp.take_along_axis(
+        temp, samples[:, None, None].astype(jnp.int32), axis=2)[:, :, 0]
+    if config.semantics == "born":
+        new_env = new_env * lam[None, :]
+
+    new_env, dlog = precision.rescale(new_env, mode=config.scaling)
+
+    absenv = jnp.abs(new_env)
+    stats = jnp.stack([
+        jnp.max(absenv),
+        jnp.min(jnp.where(absenv > 0, absenv, jnp.inf)),
+        jnp.mean(samples.astype(absenv.dtype)),
+    ])
+    return SamplerState(new_env, key, log_scale + dlog), (samples, stats)
+
+
+@partial(jax.jit, static_argnames=("config", "start_site"))
+def sample_chain(mps: MPS, state: SamplerState,
+                 config: SamplerConfig = SamplerConfig(),
+                 start_site: int = 0) -> SampleResult:
+    """Run the full chain with a scan over stacked sites.
+
+    ``start_site`` offsets the fold_in site indices so a resumed chain draws
+    the exact randoms the uninterrupted chain would have drawn.
+    """
+    def body(carry, site):
+        carry, (s, st) = site_step(carry, site, config)
+        return carry, (s, st)
+
+    sites = jnp.arange(start_site, start_site + mps.n_sites, dtype=jnp.int32)
+    state, (samples, stats) = jax.lax.scan(
+        body, state, (mps.gammas, mps.lambdas, sites))
+    return SampleResult(samples, state, stats)
+
+
+def sample(mps: MPS, n_samples: int, key: Array,
+           config: SamplerConfig = SamplerConfig()) -> Array:
+    """User-facing: returns (N, M) outcomes."""
+    state = init_state(mps, n_samples, key, config)
+    result = sample_chain(mps, state, config)
+    return result.samples.T
+
+
+def sample_resumable(mps: MPS, state: SamplerState, start_site: int,
+                     config: SamplerConfig = SamplerConfig()) -> SampleResult:
+    """Resume mid-chain from a checkpointed ``SamplerState`` at ``start_site``.
+
+    Restart is exact: the carried PRNG key reproduces the same draws the
+    uninterrupted chain would have made (paper §4.1 seed-consistency).
+    """
+    rest = MPS(mps.gammas[start_site:], mps.lambdas[start_site:], mps.semantics)
+    return sample_chain(rest, state, config, start_site=start_site)
+
+
+# ---------------------------------------------------------------------------
+# Micro/macro batching (paper §3.1): macro batch N₁ lives in memory as the
+# left environment; micro batches N₂ bound the (N₂, chi, d) intermediate.
+# ---------------------------------------------------------------------------
+
+def sample_batched(mps: MPS, n_samples: int, key: Array, micro_batch: int,
+                   config: SamplerConfig = SamplerConfig()) -> Array:
+    """Split N into micro batches of N₂ and scan them sequentially.
+
+    Mirrors the memory model Eq. (3): only one (N₂, chi, d) intermediate is
+    alive at a time while the (N, chi) macro environment persists.
+    """
+    assert n_samples % micro_batch == 0, (n_samples, micro_batch)
+    n_micro = n_samples // micro_batch
+    keys = jax.random.split(key, n_micro)
+
+    def one(k):
+        return sample(mps, micro_batch, k, config)
+
+    outs = jax.lax.map(one, keys)           # (n_micro, N₂, M)
+    return outs.reshape(n_samples, mps.n_sites)

@@ -1,0 +1,2 @@
+from repro.data.gamma_store import GammaStore
+from repro.data.tokens import synthetic_token_stream

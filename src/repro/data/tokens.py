@@ -1,0 +1,19 @@
+"""Synthetic LM data pipeline: deterministic, shardable, restart-exact.
+
+Batches are derived from (seed, step) so any worker can regenerate any batch
+— the same idempotent work-queue property the sampler's macro batches have
+(runtime/elastic.py relies on this for both).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synthetic_token_stream(seed: int, vocab: int, batch: int, seq: int):
+    """Returns batch_at(step) -> {"tokens", "labels"} (labels = shifted)."""
+    def batch_at(step: int):
+        key = jax.random.fold_in(jax.random.key(seed), step)
+        toks = jax.random.randint(key, (batch, seq + 1), 0, vocab, jnp.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    return batch_at

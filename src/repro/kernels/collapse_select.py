@@ -1,0 +1,100 @@
+"""Sample-selected collapse GEMM — Pallas TPU kernel (§Perf iteration tp-3).
+
+The measure-first reformulation: by associativity of Alg. 1's linear
+measurement,
+
+    probs[n, s] = Σ_r (Σ_l env[n,l] Γ[l,r,s]) Λ[r] = env @ W,
+    W[l, s]     = Σ_r Γ[l,r,s] Λ[r]                       (tiny, per site)
+
+so the (N, χ, d) unmeasured temp is never needed to *draw*.  After drawing
+s_n, the new environment is
+
+    env'[n, r] = Σ_l env[n, l] · Γ[l, r, s_n]
+
+— a GEMM whose rhs differs per sample only through the physical index.
+This kernel computes it with the per-sample select fused *inside* the MXU
+loop: per (n, r, l) tile it keeps an (BN, BR) accumulator in VMEM and adds
+``dot(env ⊙ [s_n = s], Γ[:, :, s])`` for each of the d outcomes.  The
+masked operand lives only in VMEM/registers, so HBM traffic is env + Γ +
+out — the (N, χ, d) temp round-trip of the naive path is gone entirely
+(the memory term of the tp_single roofline drops ~20× at χ=10⁴; see
+EXPERIMENTS.md §Perf).
+
+FLOPs are unchanged (2NΧ²d — each outcome's dot still runs); the win is
+pure memory traffic, which is what dominates the baseline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(env_ref, gamma_ref, samples_ref, out_ref, acc_ref,
+            *, n_l: int, d: int, out_dtype):
+    k = pl.program_id(2)      # l tile (sequential reduction)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    env = env_ref[...]                         # (BN, BL)
+    gam = gamma_ref[...]                       # (BL, BR, d)
+    s_n = samples_ref[...]                     # (BN,) int32
+    acc_dtype = acc_ref.dtype
+
+    for s in range(d):                         # d ≤ ~6: unrolled, VMEM-local
+        mask = (s_n == s).astype(env.dtype)[:, None]
+        acc_ref[...] += jax.lax.dot_general(
+            env * mask, gam[:, :, s],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        )
+
+    @pl.when(k == n_l - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "br", "bl", "interpret"))
+def collapse_select(env: Array, gamma: Array, samples: Array,
+                    bn: int = 256, br: int = 256, bl: int = 256,
+                    interpret: bool = False) -> Array:
+    """env (N, L), Γ (L, R, d), samples (N,) → env' (N, R).
+
+    L is the (possibly sharded) left bond, R the right bond.  Block sizes
+    MXU-aligned; VMEM working set ≈ BN·BL + BL·BR·d + BN·BR fp32 words.
+    """
+    n, L = env.shape
+    _, R, d = gamma.shape
+    bn, br, bl = min(bn, n), min(br, R), min(bl, L)
+    assert n % bn == 0 and R % br == 0 and L % bl == 0, (n, L, R, bn, br, bl)
+    grid = (n // bn, R // br, L // bl)
+    out_dtype = (jnp.float32 if env.dtype in (jnp.bfloat16, jnp.float16)
+                 else env.dtype)
+    acc_dtype = jnp.float64 if env.dtype == jnp.float64 else jnp.float32
+
+    kern = functools.partial(_kernel, n_l=grid[2], d=d, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bl), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bl, br, d), lambda i, j, k: (k, j, 0)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn, br), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, R), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bn, br), acc_dtype)],
+        interpret=interpret,
+    )(env, gamma, samples.astype(jnp.int32))
+
+
+def measure_weights(gamma: Array, lam: Array) -> Array:
+    """W[l, s] = Σ_r Γ[l,r,s]·Λ[r] — the per-site measure-first operator."""
+    return jnp.einsum("lrs,r->ls", gamma, lam)

@@ -1,0 +1,111 @@
+"""Fused MPS site contraction + linear measurement — Pallas TPU kernel.
+
+This is the hot spot of the whole framework: per site,
+``temp[n,r,s] = Σ_l env[n,l]·Γ[l,r,s]`` (a (N×χ)·(χ×χd) GEMM, ~97 % of
+FLOPs) immediately followed by the measurement probabilities
+``probs[n,s] = Σ_r temp[n,r,s]·Λ[r]``.  Computing probs *inside* the GEMM's
+output tiles means temp never makes a round trip to HBM before measurement —
+the paper's "measure before communicate" insight applied to the memory
+hierarchy (HBM↔VMEM instead of NIC).
+
+TPU mapping (DESIGN.md §2):
+  * grid = (n_tiles, r_tiles, l_tiles), l innermost (sequential reduction on
+    TPU, accumulator lives in a VMEM scratch tile).
+  * MXU tiles: BN×BL · BL×(BR·d) with fp32 accumulation
+    (``preferred_element_type``); inputs may be bf16 (the paper's TF32 tier).
+  * probs is accumulated across r-tiles into the same (BN, d) output block —
+    legal because TPU grids execute sequentially and the probs BlockSpec
+    ignores the r/l grid axes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(env_ref, gamma_ref, lam_ref, temp_ref, probs_ref, acc_ref,
+            *, n_l: int, out_dtype, acc_dtype):
+    j = pl.program_id(1)      # r tile
+    k = pl.program_id(2)      # l tile (reduction)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    env = env_ref[...]                              # (BN, BL)
+    gam = gamma_ref[...]                            # (BL, BR, d)
+    bl, br, d = gam.shape
+    acc_ref[...] += jax.lax.dot_general(
+        env, gam.reshape(bl, br * d),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    ).reshape(env.shape[0], br, d)
+
+    @pl.when(k == n_l - 1)
+    def _emit():
+        temp = acc_ref[...]
+        temp_ref[...] = temp.astype(out_dtype)
+        # partial measurement over this r tile: (BN, BR, d) · (BR,) → (BN, d)
+        contrib = jax.lax.dot_general(
+            temp.swapaxes(1, 2).reshape(-1, br),        # (BN·d, BR)
+            lam_ref[...].astype(acc_dtype),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        ).reshape(temp.shape[0], d)
+
+        @pl.when(j == 0)
+        def _set():
+            probs_ref[...] = contrib.astype(out_dtype)
+
+        @pl.when(j > 0)
+        def _add():
+            probs_ref[...] += contrib.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "br", "bl", "interpret"))
+def contract_measure(env: Array, gamma: Array, lam: Array,
+                     bn: int = 256, br: int = 256, bl: int = 256,
+                     interpret: bool = False):
+    """env (N, χ), Γ (χ, χ, d), Λ (χ) → (temp (N, χ, d), probs (N, d)).
+
+    Block sizes default to MXU-aligned 256 (multiples of 128); VMEM working
+    set ≈ BN·BL + BL·BR·d + BN·BR·d fp32 words ≈ 1.3 MB at defaults, d=4.
+    """
+    n, chi = env.shape
+    _, chir, d = gamma.shape
+    bn = min(bn, n)
+    br = min(br, chir)
+    bl = min(bl, chi)
+    assert n % bn == 0 and chir % br == 0 and chi % bl == 0, (n, chi, bn, br, bl)
+    grid = (n // bn, chir // br, chi // bl)
+    out_dtype = jnp.float32 if env.dtype in (jnp.bfloat16, jnp.float16) else env.dtype
+    acc_dtype = jnp.float64 if env.dtype == jnp.float64 else jnp.float32
+
+    kern = functools.partial(_kernel, n_l=grid[2], out_dtype=out_dtype,
+                             acc_dtype=acc_dtype)
+    temp, probs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bl), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bl, br, d), lambda i, j, k: (k, j, 0)),
+            pl.BlockSpec((br,), lambda i, j, k: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, br, d), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((bn, d), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, chir, d), out_dtype),
+            jax.ShapeDtypeStruct((n, d), out_dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn, br, d), acc_dtype)],
+        interpret=interpret,
+    )(env, gamma, lam)
+    return temp, probs

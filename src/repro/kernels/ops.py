@@ -1,0 +1,59 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On a real TPU backend the kernels run compiled; everywhere else (this
+container) they run with ``interpret=True`` against the same BlockSpecs, and
+``tests/test_kernels.py`` sweeps shapes/dtypes against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.contract_measure import contract_measure as _cm_kernel
+from repro.kernels.displacement_expm import displacement_expm as _de_kernel
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def contract_measure(env: Array, gamma: Array, lam: Array,
+                     use_kernel: bool = True):
+    """Fused site contraction + linear measurement. Returns (temp, probs)."""
+    if not use_kernel:
+        return _ref.contract_measure_ref(env, gamma, lam)
+    n, chi = env.shape
+    d = gamma.shape[2]
+    # MXU-aligned tiles when shapes allow; fall back to whole-array blocks.
+    def tile(sz, pref):
+        for t in (pref, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+            if t <= sz and sz % t == 0:
+                return t
+        return sz
+    bn, br, bl = tile(n, 256), tile(gamma.shape[1], 256), tile(chi, 256)
+    return _cm_kernel(env, gamma, lam, bn=bn, br=br, bl=bl,
+                      interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("d", "use_kernel"))
+def displacement_matrices(mu: Array, d: int, use_kernel: bool = True) -> Array:
+    """Batched D(μ) (B, d, d) complex from complex μ (B,)."""
+    mre, mim = jnp.real(mu), jnp.imag(mu)
+    if not use_kernel:
+        ore, oim = _ref.displacement_zassenhaus_ref(mre, mim, d)
+    else:
+        bb = 128 if mu.shape[0] % 128 == 0 else (
+            mu.shape[0] if mu.shape[0] < 128 else 1)
+        ore, oim = _de_kernel(mre, mim, d, bb=bb, interpret=not _on_tpu())
+    return ore + 1j * oim
+
+
+def collapse_rescale(temp: Array, samples: Array) -> Array:
+    """Collapse + per-sample rescale (bandwidth-bound; XLA fuses this fine)."""
+    return _ref.collapse_rescale_ref(temp, samples)

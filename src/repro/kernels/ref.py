@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def contract_measure_ref(env: Array, gamma: Array, lam: Array):
+    """Fused site contraction + linear measurement (paper Fig. 1 + Alg. 1 l.1).
+
+    env (N, χ) · Γ (χ, χ, d) → temp (N, χ, d);  probs (N, d) = temp · Λ.
+    """
+    temp = jnp.einsum("nl,lrs->nrs", env, gamma)
+    probs = jnp.einsum("nrs,r->ns", temp, lam)
+    return temp, probs
+
+
+def collapse_rescale_ref(temp: Array, samples: Array):
+    """Collapse the physical leg at the drawn outcome + per-sample rescale
+    (§3.3): env'[n, r] = temp[n, r, s_n] / max_r |temp[n, r, s_n]|."""
+    env = jnp.take_along_axis(temp, samples[:, None, None].astype(jnp.int32),
+                              axis=2)[:, :, 0]
+    m = jnp.max(jnp.abs(env), axis=1, keepdims=True)
+    return env / jnp.where(m > 0, m, 1.0)
+
+
+def displacement_zassenhaus_ref(mu_re: Array, mu_im: Array, d: int):
+    """Batched D(μ) ≈ e^{−|μ|²/2} e^{μa†} e^{−μ*a} as split re/im planes.
+
+    Inputs (B,) real pairs; outputs (B, d, d) re and im planes.  Matches
+    core.displacement.displacement_zassenhaus on the complex assembly.
+    """
+    from repro.core.displacement import displacement_zassenhaus
+    mu = mu_re.astype(jnp.float64) + 1j * mu_im.astype(jnp.float64)
+    out = displacement_zassenhaus(mu.astype(jnp.complex128), d)
+    return out.real.astype(mu_re.dtype), out.imag.astype(mu_re.dtype)
+
+
+def collapse_select_ref(env, gamma, samples):
+    """env (N,L), Γ (L,R,d), samples (N,) → env' (N,R) = env·Γ[:,:,s_n]."""
+    temp = jnp.einsum("nl,lrs->nrs", env, gamma)
+    return jnp.take_along_axis(
+        temp, samples[:, None, None].astype(jnp.int32), axis=2)[:, :, 0]
+
+
+def measure_first_probs_ref(env, gamma, lam):
+    """probs via the associativity trick: env @ (Γ·Λ) — must equal
+    contract_measure_ref(...)[1]."""
+    w = jnp.einsum("lrs,r->ls", gamma, lam)
+    return env @ w
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """Naive softmax attention oracle for the flash kernel (GQA-aware)."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(b, s, h, dh)

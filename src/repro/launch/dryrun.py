@@ -1,0 +1,341 @@
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell, lower + compile the
+appropriate step function against ShapeDtypeStruct inputs (no allocation),
+print ``memory_analysis()`` / ``cost_analysis()``, and derive the roofline
+terms from the loop-corrected HLO analysis (launch/hloanalysis.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell, cached
+  PYTHONPATH=src python -m repro.launch.dryrun --gbs            # the paper's own sampler
+
+Results are cached as JSON under experiments/dryrun/; --force recompiles.
+"""
+# The dry-run needs 512 placeholder devices so jax.make_mesh can build the
+# production meshes.  MUST be set before any jax import/init.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hloanalysis as H
+from repro.launch import steps
+from repro.launch.mesh import data_axis_names, make_production_mesh
+from repro.models import transformer as T
+from repro.optim import optimizers
+
+OUT_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "dryrun")
+
+
+def _sds_with(sharding, sds):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds, sharding,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def model_flops_of(cfg: T.ModelConfig, shape: configs.ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only), N = active params."""
+    _, active = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               remat_block: int = 0):
+    """Build + lower + compile one cell.  Returns (compiled, meta dict)."""
+    cfg = configs.get_config(arch)
+    if remat_block:
+        cfg = dataclasses.replace(cfg, remat_block=remat_block)
+    shape = configs.SHAPES[shape_name]
+    ok, why = configs.cell_supported(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 1
+    for ax in mesh.axis_names:
+        n_chips *= mesh.shape[ax]
+
+    # pin per-layer activation batch sharding (models/common.py §moe-2)
+    from repro.models.common import set_mesh_axes
+    set_mesh_axes(data_axis_names(mesh))
+
+    opt = optimizers.optimizer_for(cfg)
+    fsdp = cfg.param_count()[0] * 2 > 8e9          # >8 GB of bf16 weights
+    params_sds, specs, extra_sds = steps.abstract_state(
+        cfg, opt, "train" if shape.kind == "train" else
+        ("decode" if shape.kind == "decode" else "prefill"),
+        shape.global_batch, shape.seq_len)
+    param_sh = steps.param_shardings(mesh, params_sds, specs, fsdp=fsdp)
+    batch_sds = configs.input_specs(cfg, shape)
+    batch_sh = steps.batch_shardings(mesh, batch_sds)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_sh = steps.opt_state_shardings(mesh, extra_sds, param_sh)
+            step = steps.make_train_step(cfg, opt)
+            fn = jax.jit(step, in_shardings=(param_sh, opt_sh, batch_sh),
+                         donate_argnums=(0, 1))
+            args = (_sds_with(param_sh, params_sds),
+                    _sds_with(opt_sh, extra_sds),
+                    _sds_with(batch_sh, batch_sds))
+        elif shape.kind == "prefill":
+            step = steps.make_prefill_step(cfg)
+            fn = jax.jit(step, in_shardings=(param_sh, batch_sh))
+            args = (_sds_with(param_sh, params_sds),
+                    _sds_with(batch_sh, batch_sds))
+        else:
+            cache_sh = steps.cache_shardings(mesh, cfg, extra_sds.caches)
+            state_sh = T.DecodeState(cache_sh, NamedSharding(mesh, P()))
+            step = steps.make_serve_step(cfg)
+            fn = jax.jit(step, in_shardings=(param_sh, batch_sh, state_sh),
+                         donate_argnums=(2,))
+            args = (_sds_with(param_sh, params_sds),
+                    _sds_with(batch_sh, batch_sds),
+                    T.DecodeState(_sds_with(state_sh.caches, extra_sds.caches),
+                                  jax.ShapeDtypeStruct(
+                                      (), jnp.int32,
+                                      sharding=NamedSharding(mesh, P()))))
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        t1 = time.time()
+
+    return compiled, {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "compile_s": round(t1 - t0, 1),
+        "model_flops": model_flops_of(cfg, shape),
+    }
+
+
+def analyze_cell(compiled, meta: dict) -> dict:
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    cost = H.analyze(compiled.as_text())
+    rf = H.roofline(cost, meta["n_chips"], meta["model_flops"])
+    out = dict(meta)
+    out.update({
+        "bytes_per_device": {
+            "arguments": mem.argument_size_in_bytes,
+            "outputs": mem.output_size_in_bytes,
+            "temps": mem.temp_size_in_bytes,
+            "aliased": mem.alias_size_in_bytes,
+            "peak_estimate": (mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              - mem.alias_size_in_bytes),
+        },
+        "xla_cost_analysis": {"flops_once": ca.get("flops", 0.0),
+                              "bytes_once": ca.get("bytes accessed", 0.0)},
+        "hlo": {
+            "flops_per_device": cost.flops,
+            "memory_bytes_per_device": cost.memory_bytes,
+            "collective_wire_bytes_per_device": cost.collective_wire_bytes,
+            "per_collective": cost.per_collective,
+            "n_collectives": cost.n_collectives,
+            "upcast_bytes_per_device": cost.upcast_bytes,
+        },
+        "roofline": rf.table_row(),
+    })
+    # TPU-adjusted memory term: the MXU consumes bf16 operands natively, so
+    # whole-array convert traffic (a CPU-backend lowering artifact) is
+    # removed (see hloanalysis.HLOCost.upcast_bytes).
+    out["roofline"]["t_memory_tpu_adj_s"] = (
+        (cost.memory_bytes - cost.upcast_bytes) / H.HBM_BW)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
+             out_root: str = OUT_ROOT, remat_block: int = 0) -> dict:
+    multi = mesh_kind == "multi"
+    os.makedirs(out_root, exist_ok=True)
+    rb = f"__rb{remat_block}" if remat_block else ""
+    path = os.path.join(
+        out_root,
+        f"{arch}__{shape_name}{rb}__{'multi' if multi else 'single'}.json")
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    try:
+        compiled, meta = lower_cell(arch, shape_name, multi,
+                                    remat_block=remat_block)
+        if compiled is None:
+            result = {"arch": arch, "shape": shape_name,
+                      "mesh": "2x16x16" if multi else "16x16", **meta}
+        else:
+            result = analyze_cell(compiled, meta)
+            del compiled
+    except Exception as e:                                    # noqa: BLE001
+        result = {"arch": arch, "shape": shape_name,
+                  "mesh": "2x16x16" if multi else "16x16",
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-2000:]}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(result, f, indent=1)
+    os.replace(tmp, path)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# GBS sampler dry-run (the paper's own workload on the production mesh)
+# ---------------------------------------------------------------------------
+
+def run_gbs_cell(preset_name: str, scheme: str, mesh_kind: str,
+                 force: bool = False, out_root: str = OUT_ROOT,
+                 micro_batch: int = 4096, optimized: bool = False) -> dict:
+    from repro.configs import gbs
+    from repro.core import parallel as PP
+    from repro.core.mps import MPS
+    from repro.core.sampler import SamplerConfig
+
+    multi = mesh_kind == "multi"
+    os.makedirs(out_root, exist_ok=True)
+    suffix = "_opt" if optimized else ""
+    path = os.path.join(
+        out_root,
+        f"gbs-{preset_name}__{scheme}{suffix}__"
+        f"{'multi' if multi else 'single'}.json")
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    p = gbs.PRESETS[preset_name]
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = 1
+    for ax in mesh.axis_names:
+        n_chips *= mesh.shape[ax]
+    # pure DP has no χ split — every mesh axis is a data axis (otherwise the
+    # model axis would replicate identical work, a 16× useful-FLOPs waste
+    # measured in §Perf iteration dp-1)
+    daxes = (tuple(mesh.axis_names) if scheme == "dp"
+             else data_axis_names(mesh))
+    p1 = 1
+    for ax in daxes:
+        p1 *= mesh.shape[ax]
+    n_samples = micro_batch * p1
+
+    # optimized (§Perf iterations tp-1/tp-2): Γ resident in HBM as bf16
+    # (halves weight traffic; upcast in VMEM at the contraction) and bf16
+    # collective wire (per-sample scaling bounds the range; bf16 keeps
+    # fp32's exponent so the cast cannot under/overflow)
+    gdt = jnp.bfloat16 if optimized else jnp.float32
+    mps_sds = MPS(
+        jax.ShapeDtypeStruct((p.n_sites, p.chi, p.chi, p.d), gdt),
+        jax.ShapeDtypeStruct((p.n_sites, p.chi), jnp.float32), "linear")
+    key_sds = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    scfg = SamplerConfig(compute_dtype=jnp.bfloat16)
+    pcfg = PP.ParallelConfig(
+        scheme=scheme, data_axes=daxes,
+        wire_dtype=jnp.bfloat16 if optimized else None,
+        measure_first=optimized)
+
+    def run(gammas, lambdas, seed):
+        m = MPS(gammas, lambdas, "linear")
+        return PP.multilevel_sample(mesh, m, n_samples,
+                                    jax.random.key(seed), pcfg, scfg)
+
+    try:
+        with mesh:
+            t0 = time.time()
+            lowered = jax.jit(run).lower(mps_sds.gammas, mps_sds.lambdas,
+                                         key_sds)
+            compiled = lowered.compile()
+            t1 = time.time()
+        # MODEL_FLOPS: the chain GEMMs = 2·N·M·χ²·d (+measure, lower order)
+        mf = 2.0 * n_samples * p.n_sites * p.chi * p.chi * p.d
+        meta = {"arch": f"gbs-{preset_name}", "shape": f"{scheme}",
+                "mesh": "2x16x16" if multi else "16x16",
+                "n_chips": n_chips, "compile_s": round(t1 - t0, 1),
+                "model_flops": mf, "n_samples": n_samples,
+                "chi": p.chi, "n_sites": p.n_sites, "d": p.d}
+        result = analyze_cell(compiled, meta)
+    except Exception as e:                                    # noqa: BLE001
+        result = {"arch": f"gbs-{preset_name}", "shape": scheme,
+                  "mesh": "2x16x16" if multi else "16x16",
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-2000:]}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(result, f, indent=1)
+    os.replace(tmp, path)
+    return result
+
+
+def summarize(result: dict) -> str:
+    if "skipped" in result:
+        return (f"{result['arch']:22s} {result['shape']:12s} "
+                f"{result['mesh']:8s} SKIP ({result['skipped'][:48]})")
+    if "error" in result:
+        return (f"{result['arch']:22s} {result['shape']:12s} "
+                f"{result['mesh']:8s} FAIL {result['error'][:80]}")
+    rf = result["roofline"]
+    mem = result["bytes_per_device"]["peak_estimate"] / 1e9
+    return (f"{result['arch']:22s} {result['shape']:12s} {result['mesh']:8s} "
+            f"ok  mem/dev={mem:6.1f}GB  "
+            f"tc={rf['t_compute_s']:.3e} tm={rf['t_memory_s']:.3e} "
+            f"tx={rf['t_collective_s']:.3e} [{rf['bottleneck'][:4]}] "
+            f"useful={rf['useful_ratio']:.2f} "
+            f"compile={result['compile_s']:.0f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--gbs", action="store_true")
+    ap.add_argument("--gbs-opt", action="store_true",
+                    help="optimized GBS variants (§Perf iterations)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--remat-block", type=int, default=0,
+                    help="sqrt-L block remat size (§Perf mem-1)")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.gbs or args.gbs_opt:
+        for preset in ("b-m288", "m8176"):
+            for scheme in ("dp", "tp_single", "tp_double"):
+                cells.append(("gbs", preset, scheme))
+    if args.all or args.arch:
+        archs = [args.arch] if args.arch else configs.ARCHS
+        shapes = [args.shape] if args.shape else list(configs.SHAPES)
+        for a in archs:
+            for s in shapes:
+                cells.append(("lm", a, s))
+
+    for kind, a, s in cells:
+        for mk in meshes:
+            if kind == "gbs":
+                r = run_gbs_cell(a, s, mk, force=args.force,
+                                 optimized=args.gbs_opt)
+            else:
+                r = run_cell(a, s, mk, force=args.force,
+                             remat_block=args.remat_block)
+            print(summarize(r), flush=True)
+
+
+if __name__ == "__main__":
+    main()

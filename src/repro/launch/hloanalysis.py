@@ -1,0 +1,379 @@
+"""Trip-count-aware HLO cost analysis (the dry-run "profiler").
+
+``compiled.cost_analysis()`` visits a ``while`` body **once**, so for
+scan-over-layers models (all of ours — O(1) compile in depth) it
+under-counts FLOPs, bytes and collectives by a factor of L.  This module
+re-derives the three roofline terms from ``compiled.as_text()`` with loop
+multiplicities propagated through the call graph:
+
+  * computations are parsed into instruction lists with result shapes;
+  * ``while`` trip counts are recovered from the loop-condition's integer
+    constant (jax scans lower to ``lt(i, L)``);
+  * multiplicity flows ENTRY → fusion/call/conditional/while-body edges;
+  * per instruction we account
+      - dot FLOPs:      2 · |result| · Π contracting dims   (×4 if complex)
+      - collective wire bytes (ring algorithms, per participating device):
+          all-reduce       2·b·(g−1)/g        (b = result bytes, g = group)
+          all-gather       b·(g−1)/g          (b = *result* = gathered size)
+          reduce-scatter   b·(g−1)            (result is the scattered shard)
+          all-to-all       b·(g−1)/g
+          collective-permute  b
+      - memory-traffic proxy: result bytes of every materializing op
+        (fusion internals excluded — they live in registers/VMEM) plus dot
+        operand reads.  This is a *proxy*: XLA's true ``bytes accessed`` is
+        fusion-aware, but is not loop-aware; we prefer loop-correct.
+
+All byte numbers are per-device (the compiled module is the per-device SPMD
+program).  Validated against hand-counts in tests/test_hloanalysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose results are bookkeeping, not memory traffic
+_NO_TRAFFIC = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done", "opt-barrier", "custom-call",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_NAME_EQ_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    """'f32[128,256]{1,0}' or '(s32[], f32[10])' → [(dtype, dims), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, shape in _parse_shapes(type_str):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _bytes_of(self.type_str)
+
+    @property
+    def result_shape(self) -> Optional[tuple[str, tuple[int, ...]]]:
+        shapes = _parse_shapes(self.type_str)
+        return shapes[0] if shapes else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list[Instr]
+    header: str
+
+    def find(self, name: str) -> Optional[Instr]:
+        for i in self.instrs:
+            if i.name == name:
+                return i
+        return None
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr:
+            cur = Computation(hdr.group(2), bool(hdr.group(1)), [], line)
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        line = _COMMENT_RE.sub("", line)     # strip /*index=N*/ comments
+        m = _NAME_EQ_RE.match(line)
+        if not m:
+            continue
+        rest = line[m.end():]
+        op = _OPCODE_RE.search(rest)
+        if not op:
+            continue
+        type_str = rest[: op.start()].strip()
+        cur.instrs.append(Instr(m.group(1), op.group(1), type_str, line))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound = the largest integer constant in the condition comp (and
+    its compare fusion).  jax scans compare the induction var to L."""
+    best = 1
+    for i in cond.instrs:
+        for m in _CONST_RE.finditer(i.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multiplicities(comps: dict[str, Computation]) -> dict[str, float]:
+    """Propagate execution counts from ENTRY through the call graph."""
+    mult: dict[str, float] = {c.name: 0.0 for c in comps.values()}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:        # fall back: treat first computation as entry
+        entry = next(iter(comps.values()))
+    mult[entry.name] = 1.0
+
+    # reverse-topological-ish fixed point (call graphs are acyclic in HLO)
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    for c in comps.values():
+        for i in c.instrs:
+            if i.opcode == "while":
+                names = dict(
+                    (k, v) for k, v in
+                    re.findall(r"(body|condition)=%?([\w\.\-]+)", i.line))
+                body, cond = names.get("body"), names.get("condition")
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    edges[c.name].append((body, float(trips)))
+                if cond in comps:
+                    edges[c.name].append((cond, float(trips + 1)))
+            elif i.opcode == "conditional":
+                b = _BRANCHES_RE.search(i.line)
+                if b:
+                    for name in re.findall(r"%?([\w\.\-]+)", b.group(1)):
+                        if name in comps:
+                            edges[c.name].append((name, 1.0))
+            else:
+                for name in _CALLS_RE.findall(i.line):
+                    if name in comps:
+                        edges[c.name].append((name, 1.0))
+
+    # BFS propagation (acyclic)
+    frontier = [entry.name]
+    seen_order = []
+    while frontier:
+        nxt = []
+        for cn in frontier:
+            seen_order.append(cn)
+            for callee, factor in edges[cn]:
+                mult[callee] += mult[cn] * factor
+                nxt.append(callee)
+        frontier = nxt
+        if len(seen_order) > 100_000:   # cycle guard
+            break
+    return mult
+
+
+def _dot_flops(instr: Instr, comp: Computation,
+               param_types: dict[str, str]) -> float:
+    res = instr.result_shape
+    if res is None:
+        return 0.0
+    dt, rshape = res
+    n_res = 1
+    for s in rshape:
+        n_res *= s
+    # contracting dims from the lhs operand
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    tail = instr.line.split(f"{instr.opcode}(")[-1]
+    ops = re.match(r"\s*%?([\w\.\-]+)", tail)
+    contract = 1
+    if mdims and ops:
+        lhs = comp.find(ops.group(1))
+        lhs_type = lhs.type_str if lhs else param_types.get(ops.group(1), "")
+        shapes = _parse_shapes(lhs_type)
+        if shapes:
+            _, lshape = shapes[0]
+            for d in (int(x) for x in mdims.group(1).split(",") if x):
+                if d < len(lshape):
+                    contract *= lshape[d]
+    flops = 2.0 * n_res * contract
+    if dt in ("c64", "c128"):
+        flops *= 4.0
+    return flops
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(opcode: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if opcode == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if opcode == "all-gather":
+        return result_bytes * (g - 1) / g
+    if opcode == "reduce-scatter":
+        return float(result_bytes) * (g - 1)
+    if opcode == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if opcode == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float                       # per-device, loop-corrected
+    memory_bytes: float                # per-device traffic proxy
+    collective_wire_bytes: float       # per-device, ring model
+    collective_raw_bytes: float        # Σ operand sizes (the naive metric)
+    per_collective: dict               # opcode → wire bytes
+    n_collectives: dict                # opcode → (loop-weighted) count
+    upcast_bytes: float = 0.0          # pure dtype-convert traffic.  The CPU
+    # backend has no bf16 compute units, so XLA hoists whole-array bf16→f32
+    # converts in front of loops; the TPU MXU consumes bf16 natively and
+    # this traffic does not exist there.  Kept separate so the roofline can
+    # report the TPU-true memory term (memory_bytes − upcast_bytes).
+
+
+def analyze(text: str) -> HLOCost:
+    comps = parse_hlo(text)
+    mult = _multiplicities(comps)
+
+    # computations that are a single dtype convert (wrapped_convert fusions)
+    pure_convert = set()
+    for c in comps.values():
+        body = [i for i in c.instrs if i.opcode != "parameter"]
+        if len(body) == 1 and body[0].opcode == "convert":
+            pure_convert.add(c.name)
+
+    flops = 0.0
+    mem = 0.0
+    wire = 0.0
+    raw = 0.0
+    upcast = 0.0
+    per: dict[str, float] = {}
+    cnt: dict[str, float] = {}
+
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m <= 0:
+            continue
+        # entry-header parameter types (operands referenced directly)
+        param_types: dict[str, str] = {}
+        for pm in re.finditer(r"%?([\w\.\-]+):\s*([\w\[\]\{\},\d]+)", c.header):
+            param_types[pm.group(1)] = pm.group(2)
+        fusion_names = {i.name for i in c.instrs if i.opcode == "fusion"}
+        is_fusion_comp = any(
+            c.name.startswith(p) for p in ("fused_", "wrapped_"))
+        for i in c.instrs:
+            if i.opcode == "dot" or i.opcode == "convolution":
+                f = _dot_flops(i, c, param_types)
+                flops += m * f
+                # dot reads lhs+rhs ≈ contract·(rows+cols): approximate via
+                # result + 2×result (safe proxy for square-ish GEMMs)
+                mem += m * 2 * i.result_bytes
+            if i.opcode in COLLECTIVES:
+                g = _group_size(i.line)
+                w = _wire_bytes(i.opcode, i.result_bytes, g)
+                wire += m * w
+                raw += m * i.result_bytes
+                per[i.opcode] = per.get(i.opcode, 0.0) + m * w
+                cnt[i.opcode] = cnt.get(i.opcode, 0.0) + m
+            if (i.opcode not in _NO_TRAFFIC and not is_fusion_comp):
+                if i.opcode == "convert" or (
+                        i.opcode == "fusion"
+                        and any(n in pure_convert
+                                for n in _CALLS_RE.findall(i.line))):
+                    upcast += m * i.result_bytes
+                    mem += m * i.result_bytes
+                elif i.opcode == "dynamic-update-slice":
+                    # writes only the update operand, not the whole buffer
+                    tail = i.line.split("dynamic-update-slice(")[-1]
+                    names = re.findall(r"%([\w\.\-]+)", tail)
+                    upd = comp_find = None
+                    if len(names) >= 2:
+                        comp_find = c.find(names[1])
+                    mem += m * (comp_find.result_bytes if comp_find
+                                else i.result_bytes)
+                else:
+                    mem += m * i.result_bytes
+
+    return HLOCost(flops, mem, wire, raw, per, cnt, upcast)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (§Roofline): TPU v5e constants
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops: float                # per-device × chips = total
+    useful_ratio: float             # MODEL_FLOPS / HLO_FLOPs
+
+    def table_row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def roofline(cost: HLOCost, n_chips: int, model_flops: float,
+             peak_flops: float = PEAK_FLOPS, hbm_bw: float = HBM_BW,
+             ici_bw: float = ICI_BW) -> Roofline:
+    """cost is the per-device program; totals scale by n_chips."""
+    total_flops = cost.flops * n_chips
+    t_comp = total_flops / (n_chips * peak_flops)
+    t_mem = (cost.memory_bytes * n_chips) / (n_chips * hbm_bw)
+    t_coll = (cost.collective_wire_bytes * n_chips) / (n_chips * ici_bw)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bott = max(terms, key=terms.get)
+    useful = model_flops / total_flops if total_flops else 0.0
+    return Roofline(t_comp, t_mem, t_coll, bott, model_flops, total_flops,
+                    useful)

@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — "pod" is a
+second data-parallel axis over the slow inter-pod links (gradient
+all-reduce crosses it once per step; the sampler shards samples over it).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host actually has — for tests and examples."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axis_names(mesh) -> tuple[str, ...]:
+    return tuple(ax for ax in mesh.axis_names if ax != "model")
+
+
+def data_parallel_size(mesh) -> int:
+    out = 1
+    for ax in data_axis_names(mesh):
+        out *= mesh.shape[ax]
+    return out

@@ -1,0 +1,174 @@
+"""Continuous-batching LM serving driver.
+
+The paper's §5 analogy made executable in the other direction: the
+FastMPS macro-batch work queue becomes a *request* queue, the left
+environment becomes the KV/latent/SSM cache, and slot management replaces
+macro-batch scheduling.
+
+Design (vLLM-lite, single jitted step):
+  * a fixed pool of B cache slots; each active slot decodes one request;
+  * when a request finishes (EOS token or max length), its slot is
+    *immediately* refilled from the waiting queue — the batch never drains
+    (continuous batching, not static batching);
+  * refill resets that slot's cache rows and position via masked updates,
+    so the decode step stays a single jit with static shapes;
+  * per-slot positions (B,) replace the global scalar — each slot's causal
+    mask is independent.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --smoke \
+      --requests 32 --batch 8 --max-new 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+class SlotState:
+    """Host-side bookkeeping for one cache slot."""
+
+    def __init__(self):
+        self.request_id: Optional[int] = None
+        self.generated: list[int] = []
+
+
+def make_decode_fn(cfg):
+    """(params, tokens (B,1), caches, positions (B,)) → (next, caches)."""
+
+    def step(params, tokens, caches, positions):
+        # per-slot positions: run decode_step with position = min over the
+        # batch is wrong in general — instead we exploit that the KV cache
+        # write index is per-slot: we pass each slot's own position through
+        # a batched decode.  The stacked-layer decode path expects a scalar
+        # write index, so we vmap it over the batch dimension.
+        def one(p, tok, cache, pos):
+            # re-insert a singleton batch dim for the stacked-cache layout
+            cache1 = jax.tree_util.tree_map(lambda a: a[:, None], cache)
+            st = T.DecodeState(cache1, pos)
+            logits, new = T.decode_step(p, tok[None], st, cfg)
+            return logits[0], jax.tree_util.tree_map(
+                lambda a: a[:, 0], new.caches)
+
+        logits, new_caches = jax.vmap(one, in_axes=(None, 0, 0, 0))(
+            params, tokens, caches, positions)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], new_caches
+
+    return step
+
+
+def _unstack_batch(caches, batch):
+    """(L, B, …) stacked caches → (B, L, …) for vmap-over-batch."""
+    return jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 1, 0), caches)
+
+
+def _reset_slot(caches, slot: int):
+    return jax.tree_util.tree_map(
+        lambda a: a.at[slot].set(jnp.zeros_like(a[slot])), caches)
+
+
+def serve(cfg, params, prompts, batch: int, max_new: int,
+          cache_len: int, eos: Optional[int] = None, verbose: bool = True):
+    """Greedy-decode every prompt with continuous batching.
+
+    prompts: per request either a first token (int) or (first_token,
+    max_len) — variable-length requests are what make continuous batching
+    beat static batching.  Returns {request_id: [generated tokens]}.
+    """
+    prompts = [p if isinstance(p, tuple) else (p, max_new) for p in prompts]
+    step = jax.jit(make_decode_fn(cfg))
+    init = T.init_decode_state(cfg, batch, cache_len)
+    caches = _unstack_batch(init.caches, batch)       # (B, L, …)
+    positions = jnp.zeros((batch,), jnp.int32)
+    tokens = jnp.zeros((batch, 1), jnp.int32)
+
+    waiting = list(enumerate(prompts))
+    slots = [SlotState() for _ in range(batch)]
+    done: dict[int, list[int]] = {}
+    t0 = time.perf_counter()
+    steps = 0
+
+    limits = [max_new] * batch
+
+    def refill(slot_idx, caches, positions, tokens):
+        rid, (first_tok, limit) = waiting.pop(0)
+        slots[slot_idx].request_id = rid
+        slots[slot_idx].generated = []
+        limits[slot_idx] = limit
+        caches = _reset_slot(caches, slot_idx)
+        positions = positions.at[slot_idx].set(0)
+        tokens = tokens.at[slot_idx].set(first_tok)
+        return caches, positions, tokens
+
+    # initial fill
+    for i in range(batch):
+        if waiting:
+            caches, positions, tokens = refill(i, caches, positions, tokens)
+
+    while any(s.request_id is not None for s in slots):
+        tokens, caches = step(params, tokens, caches, positions)
+        positions = positions + 1
+        steps += 1
+        toks_host = np.asarray(tokens[:, 0])
+        for i, s in enumerate(slots):
+            if s.request_id is None:
+                continue
+            s.generated.append(int(toks_host[i]))
+            finished = (len(s.generated) >= limits[i]
+                        or (eos is not None and s.generated[-1] == eos)
+                        or int(positions[i]) >= cache_len - 1)
+            if finished:
+                done[s.request_id] = s.generated
+                s.request_id = None
+                if waiting:
+                    caches, positions, tokens = refill(i, caches, positions,
+                                                       tokens)
+    dt = time.perf_counter() - t0
+    if verbose:
+        total = sum(len(v) for v in done.values())
+        print(f"served {len(done)} requests, {total} tokens in {dt:.2f}s "
+              f"({total / dt:.0f} tok/s, {steps} batch steps; "
+              f"static batching would need "
+              f"{-(-len(done) // batch) * max_new} steps, ran {steps})")
+    return done
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b", choices=configs.ARCHS)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config(args.arch)
+    params, _ = T.init_params(jax.random.key(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+    toks = rng.integers(0, cfg.vocab, size=args.requests)
+    lens = rng.integers(max(2, args.max_new // 4), args.max_new + 1,
+                        size=args.requests)
+    # variable-length requests exercise the continuous refill
+    prompts = [(int(t), int(l)) for t, l in zip(toks, lens)]
+    done = serve(cfg, params, prompts, args.batch, args.max_new,
+                 args.cache_len, eos=0)
+    lens = sorted(len(v) for v in done.values())
+    print(f"request lengths: min {lens[0]} max {lens[-1]} "
+          f"(EOS=0 ends a request early)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""train_step / serve_step builders + the sharding policy.
+
+Sharding policy (per leaf):
+  1. Resolve the model's logical specs (DATA placeholders → the mesh's
+     data-like axes).
+  2. Divisibility guard: any dim not divisible by its assigned axis size
+     degrades to replicated on that dim (e.g. qwen's 20 heads on a 16-way
+     model axis) — recorded so the roofline can show the waste.
+  3. FSDP: for models above ``fsdp_threshold`` params, leaves not already
+     data-sharded get their largest divisible dim sharded over the data
+     axes (storage sharding; XLA all-gathers at use).
+
+Decode caches: batch over data; heads over model when divisible, else the
+cache *length* over model (long contexts are sequence-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axis_names
+from repro.models.common import resolve_specs, softmax_xent
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Sharding policy
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        out = 1
+        for a in ax:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[ax]
+
+
+def guard_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is not None and (i >= len(shape) or shape[i] % _axis_size(mesh, ax)):
+            out.append(None)
+        else:
+            out.append(ax)
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+def apply_fsdp(spec: P, shape, mesh: Mesh, data_axes) -> P:
+    """Shard the largest unsharded divisible dim over the data axes."""
+    if any(ax is not None and (ax in data_axes or
+           (isinstance(ax, (tuple, list)) and set(ax) & set(data_axes)))
+           for ax in spec):
+        return spec                       # already data-sharded
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+    cands = [i for i, ax in enumerate(spec)
+             if ax is None and shape[i] % dsize == 0]
+    if not cands:
+        return spec
+    best = max(cands, key=lambda i: shape[i])
+    out = list(spec)
+    out[best] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, params_sds, specs, fsdp: bool) -> Any:
+    data_axes = data_axis_names(mesh)
+    specs = resolve_specs(specs, data_axes)
+
+    def leaf(sds, spec):
+        spec = guard_divisibility(spec, sds.shape, mesh)
+        if fsdp:
+            spec = apply_fsdp(spec, sds.shape, mesh, data_axes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(
+        leaf, params_sds, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def batch_shardings(mesh: Mesh, batch_sds) -> Any:
+    data_axes = data_axis_names(mesh)
+    dspec = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def leaf(sds):
+        spec = [None] * len(sds.shape)
+        if sds.shape and sds.shape[0] % _axis_size(mesh, dspec) == 0:
+            spec[0] = dspec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(leaf, batch_sds)
+
+
+def opt_state_shardings(mesh: Mesh, opt_sds, params_shardings) -> Any:
+    """Optimizer-state shardings mirror the parameter layout.
+
+    adamw m/v are param-shaped → reuse the param sharding.  adafactor vr/vc
+    drop the last / second-to-last dim → slice the param spec accordingly.
+    """
+    def leaf(sds_dict, psh):
+        out = {}
+        for k, v in sds_dict.items():
+            if k in ("m", "v"):
+                out[k] = psh
+            elif k in ("vr", "vc"):
+                # factored vectors have param_rank − 1 dims
+                spec = list(psh.spec) + [None] * (len(v.shape) + 1 - len(psh.spec))
+                s = spec[:-1] if k == "vr" else spec[:-2] + spec[-1:]
+                out[k] = NamedSharding(mesh, guard_divisibility(P(*s), v.shape, mesh))
+            else:
+                out[k] = NamedSharding(mesh, P())
+        return out
+
+    def is_state_leaf(x):
+        return (isinstance(x, dict)
+                and all(isinstance(v, jax.ShapeDtypeStruct) for v in x.values()))
+
+    inner = jax.tree_util.tree_map(
+        leaf, opt_sds.inner, params_shardings, is_leaf=is_state_leaf)
+    from repro.optim.optimizers import OptState
+    return OptState(NamedSharding(mesh, P()), inner)
+
+
+def cache_shardings(mesh: Mesh, cfg: T.ModelConfig, state_sds) -> Any:
+    """DecodeState shardings: stacked caches (L, B, T, H?, D?)."""
+    data_axes = data_axis_names(mesh)
+    dspec = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    msize = mesh.shape["model"]
+    dsize = _axis_size(mesh, dspec)
+
+    def leaf(sds):
+        shape = sds.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dsize == 0:
+            spec[1] = dspec                       # batch
+        if len(shape) == 5:                       # (L, B, T, kvh, dh) KV cache
+            if shape[3] % msize == 0:
+                spec[3] = "model"                 # kv heads
+            elif shape[2] % msize == 0:
+                spec[2] = "model"                 # cache length (long ctx)
+        elif len(shape) == 4:                     # (L, B, T, latent) MLA
+            if shape[2] % msize == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(leaf, state_sds)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: T.ModelConfig, optimizer, aux_weight: float = 0.01,
+                    grad_compression_axis: Optional[str] = None):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        extra = {k: batch[k] for k in ("frames", "patches") if k in batch}
+
+        def loss_fn(p):
+            logits, aux = T.forward(p, batch["tokens"], cfg, extra)
+            loss = softmax_xent(logits, batch["labels"])
+            return loss + aux_weight * aux, (loss, aux)
+
+        grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        return new_params, new_opt, {"loss": loss, "aux": aux, "gnorm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: T.ModelConfig):
+    def prefill(params, batch):
+        extra = {k: batch[k] for k in ("frames", "patches") if k in batch}
+        logits, _ = T.forward(params, batch["tokens"], cfg, extra)
+        return logits[:, -1, :]
+    return prefill
+
+
+def make_serve_step(cfg: T.ModelConfig):
+    """One decode token: (params, batch, state) → (next_tokens, state)."""
+    def serve_step(params, batch, state: T.DecodeState):
+        extra = {k: batch[k] for k in ("enc_out", "patches") if k in batch}
+        logits, new_state = T.decode_step(params, batch["tokens"], state, cfg,
+                                          extra)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_state
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract state builders (dry-run: no allocation anywhere)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: T.ModelConfig):
+    """(params SDS tree, specs) — specs are static, captured during tracing."""
+    holder = {}
+
+    def grab(k):
+        p, s = T.init_params(k, cfg)
+        holder["specs"] = s          # side effect during trace: specs are
+        return p                     # plain PartitionSpec objects, no arrays
+
+    params_sds = jax.eval_shape(grab, jax.random.key(0))
+    return params_sds, holder["specs"]
+
+
+def abstract_state(cfg: T.ModelConfig, optimizer, shape_kind: str,
+                   batch: int, seq: int):
+    """ShapeDtypeStructs for params (+opt state / decode state)."""
+    params_sds, specs = abstract_params(cfg)
+    if shape_kind == "train":
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        return params_sds, specs, opt_sds
+    if shape_kind == "decode":
+        state_sds = jax.eval_shape(
+            lambda: T.init_decode_state(cfg, batch, seq))
+        return params_sds, specs, state_sds
+    return params_sds, specs, None

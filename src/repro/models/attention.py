@@ -1,0 +1,236 @@
+"""Attention variants: GQA (opt. QKV bias), cross-attention, and MLA.
+
+Decode uses a preallocated KV cache of ``cache_len`` with a scalar write
+index — the FastMPS environment-carry pattern (DESIGN.md §3): the cache is
+the LM's "left environment".  Head-type sharding: q/k/v/o projections are
+split over the "model" axis on the head dimension; caches are sharded over
+heads too, so decode TP matches the paper's χ-split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import DATA, MODEL, apply_rope, dense_init
+
+Array = jax.Array
+
+# Route full-sequence attention through the Pallas flash kernel
+# (kernels/flash_attention.py) — enabled on TPU backends by the launchers
+# (§Perf iteration attn-1).  Decode steps (S=1, dynamic-length mask) and
+# MLA keep the XLA path.
+USE_FLASH = False
+
+
+def set_flash(enabled: bool) -> None:
+    global USE_FLASH
+    USE_FLASH = enabled
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    causal: bool = True
+
+
+def attn_init(key, cfg: AttnConfig, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, kvh, dh, dm = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    params = {
+        "wq": dense_init(kq, dm, h * dh, dtype).reshape(dm, h, dh),
+        "wk": dense_init(kk, dm, kvh * dh, dtype).reshape(dm, kvh, dh),
+        "wv": dense_init(kv, dm, kvh * dh, dtype).reshape(dm, kvh, dh),
+        "wo": dense_init(ko, h * dh, dm, dtype).reshape(h, dh, dm),
+    }
+    specs = {"wq": P(None, MODEL, None), "wk": P(None, MODEL, None),
+             "wv": P(None, MODEL, None), "wo": P(MODEL, None, None)}
+    if cfg.qkv_bias:
+        params.update({
+            "bq": jnp.zeros((h, dh), dtype), "bk": jnp.zeros((kvh, dh), dtype),
+            "bv": jnp.zeros((kvh, dh), dtype)})
+        specs.update({"bq": P(MODEL, None), "bk": P(MODEL, None),
+                      "bv": P(MODEL, None)})
+    return params, specs
+
+
+class KVCache(NamedTuple):
+    k: Array        # (B, cache_len, kvH, Dh)
+    v: Array
+    length: Array   # () int32 — tokens already in the cache
+
+
+def init_kv_cache(batch: int, cache_len: int, cfg: AttnConfig, dtype) -> KVCache:
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array]) -> Array:
+    """q (B,S,H,Dh), k/v (B,T,KVH,Dh) — GQA by head-group broadcast."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(dh)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, dh)
+
+
+def attn_apply(params, x: Array, cfg: AttnConfig,
+               positions: Optional[Array] = None,
+               cache: Optional[KVCache] = None,
+               kv_input: Optional[Array] = None):
+    """Self/cross attention.
+
+    * train/prefill: ``cache is None`` → full causal (or full, if not causal).
+    * decode: ``cache`` given, x is (B, 1, D) → append & attend to prefix.
+    * cross: ``kv_input`` given (B, T, D) → K/V from it, no causal mask.
+    """
+    b, s, dm = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    src = x if kv_input is None else kv_input
+    k = jnp.einsum("btd,dhk->bthk", src, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if cfg.rope and kv_input is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_input is None:
+        # decode: write at cache.length, attend to [0, length]
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        t = cache.k.shape[1]
+        valid = jnp.arange(t)[None, None, None, None, :] <= cache.length  # causal up to len
+        out = _sdpa(q, k_all, v_all, valid)
+        new_cache = KVCache(k_all, v_all, cache.length + s)
+    else:
+        if USE_FLASH:
+            from repro.kernels.flash_attention import flash_attention
+            out = flash_attention(q, k, v,
+                                  causal=cfg.causal and kv_input is None)
+        else:
+            mask = None
+            if cfg.causal and kv_input is None:
+                mask = jnp.tril(jnp.ones((s, s), bool))[None, None, None, :, :]
+            out = _sdpa(q, k, v, mask)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return (y, new_cache) if cache is not None else (y, None)
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3).  The KV cache stores the
+# *compressed latent* (kv_lora_rank + rope dim) instead of per-head K/V —
+# the paper's χ-compression idea applied to the cache.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    head_dim: int = 128          # nope head dim
+    rope_head_dim: int = 64
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+
+
+def mla_init(key, cfg: MLAConfig, dtype):
+    ks = jax.random.split(key, 7)
+    dm, h = cfg.d_model, cfg.n_heads
+    dh, dr = cfg.head_dim, cfg.rope_head_dim
+    params = {
+        "wq_a": dense_init(ks[0], dm, cfg.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, h * (dh + dr), dtype
+                           ).reshape(cfg.q_lora_rank, h, dh + dr),
+        "wkv_a": dense_init(ks[2], dm, cfg.kv_lora_rank + dr, dtype),
+        "wk_b": dense_init(ks[3], cfg.kv_lora_rank, h * dh, dtype
+                           ).reshape(cfg.kv_lora_rank, h, dh),
+        "wv_b": dense_init(ks[4], cfg.kv_lora_rank, h * dh, dtype
+                           ).reshape(cfg.kv_lora_rank, h, dh),
+        "wo": dense_init(ks[5], h * dh, dm, dtype).reshape(h, dh, dm),
+    }
+    specs = {"wq_a": P(None, None), "wq_b": P(None, MODEL, None),
+             "wkv_a": P(None, None), "wk_b": P(None, MODEL, None),
+             "wv_b": P(None, MODEL, None), "wo": P(MODEL, None, None)}
+    return params, specs
+
+
+class MLACache(NamedTuple):
+    latent: Array     # (B, cache_len, kv_lora_rank + rope_dim)
+    length: Array
+
+
+def init_mla_cache(batch: int, cache_len: int, cfg: MLAConfig, dtype) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, cache_len, cfg.kv_lora_rank + cfg.rope_head_dim), dtype),
+        jnp.zeros((), jnp.int32))
+
+
+def mla_apply(params, x: Array, cfg: MLAConfig,
+              positions: Optional[Array] = None,
+              cache: Optional[MLACache] = None):
+    b, s, dm = x.shape
+    h, dh, dr, r = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q = jnp.einsum("bsr,rhk->bshk", x @ params["wq_a"], params["wq_b"])
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions)
+
+    latent = x @ params["wkv_a"]                     # (B, S, r + dr)
+    new_cache = None
+    if cache is not None:
+        lat_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.latent, latent.astype(cache.latent.dtype), cache.length, axis=1)
+        t = cache.latent.shape[1]
+        valid_len = cache.length
+        latent_ctx = lat_all
+        new_cache = MLACache(lat_all, cache.length + s)
+        ctx_pos = jnp.arange(t)[None, :]
+    else:
+        latent_ctx = latent
+        ctx_pos = positions
+        t = s
+
+    c_kv, k_rope_in = latent_ctx[..., :r], latent_ctx[..., r:]
+    k_rope = apply_rope(k_rope_in[:, :, None, :], ctx_pos)[:, :, 0, :]
+
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, params["wk_b"])
+    v = jnp.einsum("btr,rhk->bthk", c_kv, params["wv_b"])
+
+    logits = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)).astype(jnp.float32)
+    logits = logits / math.sqrt(dh + dr)
+    if cache is not None:
+        mask = jnp.arange(t)[None, None, None, :] <= cache.length
+    else:
+        mask = jnp.tril(jnp.ones((s, t), bool))[None, None, :, :]
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", w, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache

@@ -1,0 +1,178 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan training +
+constant-state decode.
+
+Training uses the SSD chunked algorithm (arXiv:2405.21060 minimal form):
+sequence split into chunks; intra-chunk terms are batched GEMMs (MXU food),
+inter-chunk recurrence is a ``lax.scan`` over chunk states — the same
+macro/micro-batch split FastMPS uses along the MPS chain (DESIGN.md §3).
+
+Decode carries ``state (B, H, P, N)`` — the LM analogue of the MPS left
+environment; ``long_500k`` works because this is O(1) in context length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import DATA, MODEL, dense_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 128           # N
+    d_head: int = 64             # P
+    n_heads: int = 0             # H; 0 → 2·d_model/d_head (expand=2)
+    n_groups: int = 1            # G (B/C groups, GQA-like)
+    chunk: int = 128
+
+    @property
+    def heads(self) -> int:
+        return self.n_heads or (2 * self.d_model // self.d_head)
+
+    @property
+    def d_inner(self) -> int:
+        return self.heads * self.d_head
+
+
+def mamba2_init(key, cfg: Mamba2Config, dtype):
+    ks = jax.random.split(key, 6)
+    dm, di, g, n = cfg.d_model, cfg.d_inner, cfg.n_groups, cfg.d_state
+    h = cfg.heads
+    params = {
+        # fused input projection: [x (di), z gate (di), B (g·n), C (g·n), dt (h)]
+        "w_in": dense_init(ks[0], dm, 2 * di + 2 * g * n + h, dtype),
+        "w_out": dense_init(ks[1], di, dm, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+    }
+    specs = {"w_in": P(None, MODEL), "w_out": P(MODEL, None),
+             "A_log": P(None), "D": P(None), "dt_bias": P(None),
+             "norm_g": P(MODEL)}
+    return params, specs
+
+
+class SSMState(NamedTuple):
+    state: Array    # (B, H, P, N)
+    conv: Array     # unused placeholder (conv frontend elided; kept for ckpt ABI)
+
+
+def init_ssm_state(batch: int, cfg: Mamba2Config, dtype) -> SSMState:
+    return SSMState(
+        jnp.zeros((batch, cfg.heads, cfg.d_head, cfg.d_state), jnp.float32),
+        jnp.zeros((batch, 1), dtype))
+
+
+def _split_proj(z: Array, cfg: Mamba2Config):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.heads
+    x, zg, b, c, dt = jnp.split(z, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return x, zg, b, c, dt
+
+
+def _ssd_chunked(x, dt, a, b, c, cfg: Mamba2Config):
+    """Minimal SSD. x (B,S,H,P); dt (B,S,H); a (H,)<0; b,c (B,S,G,N)."""
+    B, S, H, Pd = x.shape
+    G, N = b.shape[2], b.shape[3]
+    L = min(cfg.chunk, S)
+    while S % L:           # largest chunk ≤ cfg.chunk dividing S
+        L -= 1
+    nc = S // L
+    rep = H // G
+
+    # expand groups to heads
+    bh = jnp.repeat(b, rep, axis=2)          # (B,S,H,N)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    xc = x.reshape(B, nc, L, H, Pd)
+    dtc = dt.reshape(B, nc, L, H)
+    bc = bh.reshape(B, nc, L, H, N)
+    cc = ch.reshape(B, nc, L, H, N)
+
+    da = dtc * a[None, None, None, :]        # (B,nc,L,H)  log-decay increments
+    cum = jnp.cumsum(da, axis=2)             # within-chunk cumulative
+    seg_total = cum[:, :, -1]                # (B,nc,H)
+
+    # intra-chunk (the "duality" quadratic term, causally masked)
+    # decay(i←j) = exp(cum_i − cum_j) for i ≥ j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    # double-where: masked (acausal) entries have diff > 0 and exp(diff) can
+    # overflow; zeroing diff first keeps both value and gradient finite.
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+    scores = jnp.einsum("bclhn,bckhn->bclkh", cc, bc) * decay    # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bclkh,bckh,bckhp->bclhp", scores, dtc, xc)
+
+    # chunk input to state: sum_j exp(cum_last − cum_j)·dt_j·B_j ⊗ x_j
+    in_decay = jnp.exp(seg_total[:, :, None, :] - cum)           # (B,nc,L,H)
+    chunk_state = jnp.einsum("bclh,bclh,bclhn,bclhp->bchpn",
+                             in_decay, dtc, bc, xc)              # (B,nc,H,P,N)
+
+    # inter-chunk recurrence over nc
+    def scan_fn(carry, inp):
+        st_in = carry                                            # (B,H,P,N)
+        cs, seg = inp                                            # (B,H,P,N), (B,H)
+        st_out = st_in * jnp.exp(seg)[:, :, None, None] + cs
+        return st_out, st_in
+
+    init = jnp.zeros((B, H, Pd, N), x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (chunk_state.swapaxes(0, 1), seg_total.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                     # (B,nc,H,P,N)
+
+    # state-to-output within chunk: C_i · exp(cum_i) · state_prev
+    out_decay = jnp.exp(cum)                                     # (B,nc,L,H)
+    y_inter = jnp.einsum("bclhn,bclh,bchpn->bclhp", cc, out_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y, final_state
+
+
+def mamba2_apply(params, x: Array, cfg: Mamba2Config,
+                 state: Optional[SSMState] = None):
+    """x (B,S,D) → (B,S,D).  With ``state``: S must be 1 (decode step)."""
+    B, S, dm = x.shape
+    H, Pd, N, G = cfg.heads, cfg.d_head, cfg.d_state, cfg.n_groups
+
+    z = x @ params["w_in"]
+    xi, zg, b, c, dtr = _split_proj(z, cfg)
+    xi = xi.reshape(B, S, H, Pd)
+    b = b.reshape(B, S, G, N)
+    c = c.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(params["A_log"])                                       # (H,) < 0
+
+    if state is None:
+        y, _ = _ssd_chunked(xi.astype(jnp.float32), dt, a,
+                            b.astype(jnp.float32), c.astype(jnp.float32), cfg)
+        new_state = None
+    else:
+        assert S == 1
+        rep = H // G
+        bh = jnp.repeat(b[:, 0], rep, axis=1)        # (B,H,N)
+        ch = jnp.repeat(c[:, 0], rep, axis=1)
+        dt0 = dt[:, 0]                               # (B,H)
+        dec = jnp.exp(dt0 * a[None, :])              # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dt0, bh, xi[:, 0].astype(jnp.float32))
+        st = state.state * dec[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", ch, st)[:, None]              # (B,1,H,P)
+        new_state = SSMState(st, state.conv)
+
+    y = y + xi.astype(y.dtype) * params["D"][None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    # gated RMS norm (Mamba2's norm-before-out)
+    zg32 = jax.nn.silu(zg.astype(jnp.float32))
+    y32 = y.astype(jnp.float32) * zg32
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype) * params["norm_g"]
+    out = y @ params["w_out"]
+    return out, new_state

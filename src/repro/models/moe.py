@@ -1,0 +1,167 @@
+"""Mixture-of-Experts layer with per-group capacity dispatch (EP-native).
+
+Design (rewritten in §Perf iteration moe-1, see EXPERIMENTS.md):
+
+* capacity is **per batch row** (GShard-style groups), so every dispatch
+  scatter is *local* to the data shard that owns the row — no cross-shard
+  scatter, no giant global buffer;
+* the dispatch buffer is (B, E, C, D) with B sharded over the data axes and
+  E over "model" (expert parallelism).  The expert GEMMs are then fully
+  local: device (i, j) processes batch shard i × expert shard j;
+* the combine is a **scatter-add from buffer space to token space** (each
+  slot knows its owning token), never a gather from the expert-sharded
+  buffer.  GSPMD turns the sharded-updates scatter into local scatters plus
+  one all-reduce of the (B, S, D) output — ~300× less wire than the
+  all-reduce-of-buffers the gather formulation costs (77 TB → 0.24 TB per
+  device per step for deepseek-v3 train_4k; §Perf).
+
+kimi-k2 (384e, top-8) and deepseek-v3 (1 shared + 256 routed, top-8) both
+route through this layer; the shared expert is a plain MLP added outside.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (DATA, MODEL, dense_init, mlp_apply,
+                                 shard_hint)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                  # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0          # deepseek-style always-on shared experts
+    capacity_factor: float = 1.25
+    router_dtype: jnp.dtype = jnp.float32
+
+
+def moe_init(key, cfg: MoEConfig, dtype):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, dm, df = cfg.n_experts, cfg.d_model, cfg.d_ff
+    params = {
+        "router": dense_init(kr, dm, e, jnp.float32),
+        "gate": jax.random.normal(kg, (e, dm, df), dtype) * (dm ** -0.5),
+        "up": jax.random.normal(ku, (e, dm, df), dtype) * (dm ** -0.5),
+        "down": jax.random.normal(kd, (e, df, dm), dtype) * (df ** -0.5),
+    }
+    # expert parallelism: the expert axis lives on MODEL so the (B, E, C, D)
+    # dispatch buffer and the expert weights shard identically and the
+    # per-expert GEMMs are communication-free.
+    specs = {
+        "router": P(None, None),
+        "gate": P(MODEL, None, None),
+        "up": P(MODEL, None, None),
+        "down": P(MODEL, None, None),
+    }
+    if cfg.n_shared:
+        params["shared"] = {
+            "gate": dense_init(ks, dm, df * cfg.n_shared, dtype),
+            "up": dense_init(kg, dm, df * cfg.n_shared, dtype),
+            "down": dense_init(kd, df * cfg.n_shared, dm, dtype),
+        }
+        specs["shared"] = {"gate": P(None, MODEL), "up": P(None, MODEL),
+                           "down": P(MODEL, None)}
+    return params, specs
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = -(-int(cfg.capacity_factor * tokens_per_group * cfg.top_k)
+          // cfg.n_experts)
+    if c >= 8:
+        return -(-c // 8) * 8       # round up to 8 (MXU sublane alignment)
+    return max(1, c)                # decode: S=1 rows — don't overpad 8×
+
+
+def _dispatch_one(xt: Array, eids: Array, gate_w: Array, e: int, cap: int):
+    """One group (S, D): scatter tokens into an (E, C, D) buffer.
+
+    Returns (buf, tok_of_slot (E·C,), gate_of_slot (E·C,), keep_frac).
+    Slots beyond capacity are dropped (sink row).
+    """
+    s, dm = xt.shape
+    k = eids.shape[-1]
+    flat_e = eids.reshape(-1)                                     # (S·k,)
+    order = jnp.argsort(flat_e)                                   # stable
+    sorted_e = flat_e[order]
+    pos_in_sorted = jnp.arange(s * k) - jnp.searchsorted(sorted_e, sorted_e)
+    pos = jnp.zeros_like(flat_e).at[order].set(pos_in_sorted)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)           # drop → sink
+
+    tok_idx = jnp.repeat(jnp.arange(s), k)                        # (S·k,)
+    buf = jnp.zeros((e * cap + 1, dm), xt.dtype).at[slot].set(xt[tok_idx])
+
+    # slot-space inverse maps (for the scatter-based combine)
+    tok_of_slot = jnp.full((e * cap + 1,), s, jnp.int32).at[slot].set(
+        tok_idx.astype(jnp.int32))                                # sink → S
+    gate_of_slot = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, gate_w.reshape(-1), 0.0).astype(jnp.float32))
+    return (buf[:-1].reshape(e, cap, dm), tok_of_slot[:-1],
+            gate_of_slot[:-1], keep)
+
+
+def moe_apply(params, x: Array, cfg: MoEConfig):
+    """x (B, S, D) → (B, S, D), plus aux losses dict.
+
+    Capacity is per batch row: C = cf·S·top_k/E.
+    """
+    b, s, dm = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(s, cfg)
+
+    logits = (x.astype(cfg.router_dtype) @ params["router"])      # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, eids = jax.lax.top_k(probs, k)                        # (B, S, k)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # --- per-row dispatch (local to each data shard) ------------------------
+    buf, tok_of_slot, gate_of_slot, keep = jax.vmap(
+        lambda xt, ei, gw: _dispatch_one(xt, ei, gw, e, cap))(x, eids, gate_w)
+    # pin the (B→data, E→model) EP layout on the buffer and both GEMM
+    # intermediates — without these hints GSPMD drops the batch sharding in
+    # the backward pass and all-reduces replicated (E,F,B,C) cotangents
+    # (§Perf iteration moe-3)
+    buf = shard_hint(buf, "data", "model")
+    tok_of_slot = shard_hint(tok_of_slot, "data", "model")
+    gate_of_slot = shard_hint(gate_of_slot, "data", "model")
+
+    # --- expert GEMMs: fully local under (B→data, E→model) sharding ---------
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["gate"]))
+    h = h * shard_hint(jnp.einsum("becd,edf->becf", buf, params["up"]),
+                       "data", "model")
+    out_buf = shard_hint(
+        jnp.einsum("becf,efd->becd", h, params["down"]), "data", "model")
+
+    # --- combine: scatter-add slots → tokens (never gather the sharded buf).
+    # updates are E-sharded; GSPMD emits local scatters + one all-reduce of
+    # the (B, S, D) result.
+    weighted = shard_hint(
+        out_buf.reshape(b, e * cap, dm)
+        * gate_of_slot.reshape(b, e * cap)[..., None].astype(out_buf.dtype),
+        "data")
+
+    def _combine_one(w_slots, toks):
+        y_pad = jnp.zeros((s + 1, dm), w_slots.dtype).at[toks].add(w_slots)
+        return y_pad[:s]
+
+    y = jax.vmap(_combine_one)(weighted, tok_of_slot).astype(x.dtype)
+
+    if cfg.n_shared:
+        sp = params["shared"]
+        y = y + mlp_apply(sp, x.reshape(b * s, dm)).reshape(b, s, dm)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(jax.nn.one_hot(eids, e, dtype=jnp.float32), axis=(0, 1, 2))
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = {"lb_loss": e * jnp.sum(me * ce),
+           "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y, aux

@@ -1,0 +1,594 @@
+"""Config-driven model zoo assembly: one code path, ten architectures.
+
+Families
+--------
+dense   : [attn + swiglu] × L                      (qwen, deepseek-7b,
+          starcoder2, granite)
+moe     : [attn|MLA + MoE] × L                     (kimi-k2, deepseek-v3)
+ssm     : [mamba2] × L                             (mamba2-1.3b)
+hybrid  : [mamba2] × L with a *shared* attention   (zamba2-7b)
+          block applied every ``attn_every`` layers
+encdec  : whisper — encoder [attn+mlp] × Lₑ, decoder [attn+cross+mlp] × L
+vlm     : llama-3.2-vision — dense stack with cross-attention to patch
+          embeddings every ``cross_attn_every`` layers
+
+All repeated stacks are **scanned over stacked params** (O(1) compile in
+depth, remat per layer).  The decode path carries a cache pytree — KV
+(attention), latent (MLA) or SSM state — which is the LM analogue of the
+FastMPS left environment (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models.common import (DATA, MODEL, batch_sharded, embed_init,
+                                 mlp_apply, mlp_init, remat, rms_norm,
+                                 softmax_xent)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    mlp_style: str = "swiglu"
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    use_mla: bool = False
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_head: int = 64
+    attn_every: int = 6          # hybrid: shared attn cadence
+    # encdec / vlm
+    n_enc_layers: int = 0
+    enc_len: int = 1500          # whisper frame count (stub frontend)
+    cross_attn_every: int = 0    # vlm cadence
+    n_patches: int = 1600        # vlm patch count (stub frontend)
+    # numerics
+    dtype: Any = jnp.bfloat16
+    remat_policy: str = "dots"
+    remat_block: int = 0         # >0: sqrt-L block remat — scan over L/k
+                                 # blocks of k layers, checkpoint block
+                                 # inputs only (saved acts ~ (L/k + k)·x
+                                 # instead of L·x; §Perf iteration mem-1)
+    rope_theta: float = 10000.0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def attn_cfg(self, causal: bool = True, rope: bool = True) -> A.AttnConfig:
+        return A.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                            self.hd, self.qkv_bias, rope, self.rope_theta,
+                            causal)
+
+    def mla_cfg(self) -> A.MLAConfig:
+        return A.MLAConfig(self.d_model, self.n_heads, head_dim=self.hd,
+                           rope_head_dim=64, q_lora_rank=1536,
+                           kv_lora_rank=512)
+
+    def moe_cfg(self) -> MOE.MoEConfig:
+        return MOE.MoEConfig(self.d_model, self.d_ff, self.n_experts,
+                             self.top_k, self.n_shared_experts,
+                             self.capacity_factor)
+
+    def ssm_cfg(self) -> M2.Mamba2Config:
+        return M2.Mamba2Config(self.d_model, self.ssm_state, self.ssm_head)
+
+    @property
+    def has_attn(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    # -- parameter counts for roofline MODEL_FLOPS --------------------------
+    def param_count(self) -> tuple[int, int]:
+        """(total, active) parameter counts (embedding included once)."""
+        dm, dff, hd = self.d_model, self.d_ff, self.hd
+        attn = dm * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.use_mla:
+            attn = dm * 1536 + 1536 * self.n_heads * (hd + 64) \
+                + dm * (512 + 64) + 512 * self.n_heads * hd * 2 \
+                + self.n_heads * hd * dm
+        mlp = 3 * dm * dff if self.mlp_style == "swiglu" else 2 * dm * dff
+        per_layer_dense = attn + mlp
+        emb = self.vocab * dm * 2
+        if self.family == "dense":
+            total = self.n_layers * per_layer_dense + emb
+            return total, total
+        if self.family == "moe":
+            experts = self.n_experts * 3 * dm * dff
+            shared = self.n_shared_experts * 3 * dm * dff
+            router = dm * self.n_experts
+            per = attn + experts + shared + router
+            total = self.n_layers * per + emb
+            act = self.n_layers * (attn + (self.top_k + self.n_shared_experts)
+                                   * 3 * dm * dff + router) + emb
+            return total, act
+        if self.family in ("ssm", "hybrid"):
+            c = self.ssm_cfg()
+            per = dm * (2 * c.d_inner + 2 * c.n_groups * c.d_state + c.heads) \
+                + c.d_inner * dm
+            total = self.n_layers * per + emb
+            if self.family == "hybrid":
+                total += attn + mlp    # one shared block
+            return total, total
+        if self.family == "encdec":
+            total = (self.n_layers * (2 * attn + mlp)
+                     + self.n_enc_layers * (attn + mlp) + emb)
+            return total, total
+        if self.family == "vlm":
+            n_cross = self.n_layers // self.cross_attn_every
+            total = self.n_layers * per_layer_dense + n_cross * attn + emb
+            return total, total
+        raise ValueError(self.family)
+
+
+# ===========================================================================
+# Parameter init (runs under jax.eval_shape for the dry-run)
+# ===========================================================================
+
+def _stacked(fn, key, n, *args):
+    """Init n stacked copies of a layer; returns (params, specs_with_leading_None)."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k, *args)[0])(keys)
+    _, specs = fn(key, *args)
+    specs = jax.tree_util.tree_map(
+        lambda s: P(*((None,) + tuple(s))), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return params, specs
+
+
+def _layer_init_dense(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    ap, as_ = A.attn_init(k1, cfg.attn_cfg(), dtype)
+    mp, ms = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_style)
+    params = {"attn": ap, "mlp": mp,
+              "ln1": jnp.ones((cfg.d_model,), dtype),
+              "ln2": jnp.ones((cfg.d_model,), dtype)}
+    specs = {"attn": as_, "mlp": ms, "ln1": P(None), "ln2": P(None)}
+    return params, specs
+
+
+def _layer_init_moe(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    if cfg.use_mla:
+        ap, as_ = A.mla_init(k1, cfg.mla_cfg(), dtype)
+    else:
+        ap, as_ = A.attn_init(k1, cfg.attn_cfg(), dtype)
+    mp, ms = MOE.moe_init(k2, cfg.moe_cfg(), dtype)
+    params = {"attn": ap, "moe": mp,
+              "ln1": jnp.ones((cfg.d_model,), dtype),
+              "ln2": jnp.ones((cfg.d_model,), dtype)}
+    specs = {"attn": as_, "moe": ms, "ln1": P(None), "ln2": P(None)}
+    return params, specs
+
+
+def _layer_init_ssm(key, cfg: ModelConfig, dtype):
+    mp, ms = M2.mamba2_init(key, cfg.ssm_cfg(), dtype)
+    params = {"mamba": mp, "ln": jnp.ones((cfg.d_model,), dtype)}
+    specs = {"mamba": ms, "ln": P(None)}
+    return params, specs
+
+
+def _layer_init_encdec_dec(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    sp, ss = A.attn_init(k1, cfg.attn_cfg(causal=True, rope=False), dtype)
+    cp, cs = A.attn_init(k2, cfg.attn_cfg(causal=False, rope=False), dtype)
+    mp, ms = mlp_init(k3, cfg.d_model, cfg.d_ff, dtype, "gelu")
+    params = {"self": sp, "cross": cp, "mlp": mp,
+              "ln1": jnp.ones((cfg.d_model,), dtype),
+              "ln2": jnp.ones((cfg.d_model,), dtype),
+              "ln3": jnp.ones((cfg.d_model,), dtype)}
+    specs = {"self": ss, "cross": cs, "mlp": ms,
+             "ln1": P(None), "ln2": P(None), "ln3": P(None)}
+    return params, specs
+
+
+def _layer_init_enc(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    ap, as_ = A.attn_init(k1, cfg.attn_cfg(causal=False, rope=False), dtype)
+    mp, ms = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, "gelu")
+    params = {"attn": ap, "mlp": mp,
+              "ln1": jnp.ones((cfg.d_model,), dtype),
+              "ln2": jnp.ones((cfg.d_model,), dtype)}
+    specs = {"attn": as_, "mlp": ms, "ln1": P(None), "ln2": P(None)}
+    return params, specs
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns (params, specs).  Call under jax.eval_shape for dry-runs."""
+    dtype = cfg.dtype
+    ke, kl, ko, kx = jax.random.split(key, 4)
+    params: dict = {"embed": embed_init(ke, cfg.vocab, cfg.d_model, dtype),
+                    "ln_f": jnp.ones((cfg.d_model,), dtype),
+                    "unembed": embed_init(ko, cfg.vocab, cfg.d_model, dtype).T}
+    specs: dict = {"embed": P(MODEL, None), "ln_f": P(None),
+                   "unembed": P(None, MODEL)}
+
+    if cfg.family == "dense":
+        params["layers"], specs["layers"] = _stacked(
+            _layer_init_dense, kl, cfg.n_layers, cfg, dtype)
+    elif cfg.family == "moe":
+        params["layers"], specs["layers"] = _stacked(
+            _layer_init_moe, kl, cfg.n_layers, cfg, dtype)
+    elif cfg.family == "ssm":
+        params["layers"], specs["layers"] = _stacked(
+            _layer_init_ssm, kl, cfg.n_layers, cfg, dtype)
+    elif cfg.family == "hybrid":
+        params["layers"], specs["layers"] = _stacked(
+            _layer_init_ssm, kl, cfg.n_layers, cfg, dtype)
+        sp, ss = A.attn_init(kx, cfg.attn_cfg(), dtype)
+        mp, ms = mlp_init(jax.random.fold_in(kx, 1), cfg.d_model, cfg.d_ff,
+                          dtype, cfg.mlp_style)
+        params["shared_attn"] = {"attn": sp, "mlp": mp,
+                                 "ln1": jnp.ones((cfg.d_model,), dtype),
+                                 "ln2": jnp.ones((cfg.d_model,), dtype)}
+        specs["shared_attn"] = {"attn": ss, "mlp": ms,
+                                "ln1": P(None), "ln2": P(None)}
+    elif cfg.family == "encdec":
+        params["enc_layers"], specs["enc_layers"] = _stacked(
+            _layer_init_enc, kx, cfg.n_enc_layers, cfg, dtype)
+        params["layers"], specs["layers"] = _stacked(
+            _layer_init_encdec_dec, kl, cfg.n_layers, cfg, dtype)
+        params["enc_ln_f"] = jnp.ones((cfg.d_model,), dtype)
+        specs["enc_ln_f"] = P(None)
+        params["enc_pos"] = embed_init(
+            jax.random.fold_in(ke, 2), cfg.enc_len, cfg.d_model, dtype)
+        specs["enc_pos"] = P(None, None)
+        params["dec_pos"] = embed_init(
+            jax.random.fold_in(ke, 3), 32768, cfg.d_model, dtype)
+        specs["dec_pos"] = P(None, None)
+    elif cfg.family == "vlm":
+        params["layers"], specs["layers"] = _stacked(
+            _layer_init_dense, kl, cfg.n_layers, cfg, dtype)
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        params["cross_layers"], specs["cross_layers"] = _stacked(
+            lambda k, c, d: A.attn_init(k, c.attn_cfg(causal=False, rope=False), d),
+            kx, n_cross, cfg, dtype)
+        params["ln_cross"] = jnp.ones((n_cross, cfg.d_model), dtype)
+        specs["ln_cross"] = P(None, None)
+    else:
+        raise ValueError(cfg.family)
+    return params, specs
+
+
+# ===========================================================================
+# Forward passes
+# ===========================================================================
+
+def _scan_blocks(body, x, layers, cfg: ModelConfig):
+    """Scan over layers with optional sqrt-L block remat (remat_block = k).
+
+    k = 0 → the plain per-layer remat policy.  k > 0 → the stacked layer
+    params are reshaped to (L/k, k, …); the outer scan checkpoints only the
+    L/k block inputs and the inner k-layer scan recomputes inside each
+    block during the backward pass: peak saved activations drop from L·x
+    to (L/k + k)·x at the cost of one extra forward.
+    """
+    k = cfg.remat_block
+    if not k:
+        x, _ = jax.lax.scan(remat(body, cfg.remat_policy), x, layers)
+        return x
+    L = cfg.n_layers
+    assert L % k == 0, (L, k)
+    blocked = jax.tree_util.tree_map(
+        lambda a: a.reshape(L // k, k, *a.shape[1:]), layers)
+
+    def block_body(xc, blk):
+        # per-layer remat *inside* the block too: otherwise the in-block
+        # backward keeps every layer's attention S² intermediates live at
+        # once (measured: 177 GB/device on starcoder2 — §Perf mem-1)
+        xc, _ = jax.lax.scan(remat(body, cfg.remat_policy), xc, blk)
+        return xc, None
+
+    x, _ = jax.lax.scan(remat(block_body, "nothing"), x, blocked)
+    return x
+
+def _dense_block(lp, x, cfg: ModelConfig, positions, cache=None):
+    acfg = cfg.attn_cfg()
+    h, new_cache = A.attn_apply(lp["attn"], rms_norm(x, lp["ln1"]), acfg,
+                                positions, cache)
+    x = x + h
+    x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"]), cfg.mlp_style)
+    return x, new_cache
+
+
+def _moe_block(lp, x, cfg: ModelConfig, positions, cache=None):
+    if cfg.use_mla:
+        h, new_cache = A.mla_apply(lp["attn"], rms_norm(x, lp["ln1"]),
+                                   cfg.mla_cfg(), positions, cache)
+    else:
+        h, new_cache = A.attn_apply(lp["attn"], rms_norm(x, lp["ln1"]),
+                                    cfg.attn_cfg(), positions, cache)
+    x = x + h
+    y, aux = MOE.moe_apply(lp["moe"], rms_norm(x, lp["ln2"]), cfg.moe_cfg())
+    return x + y, new_cache, aux
+
+
+def forward(params, tokens: Array, cfg: ModelConfig,
+            extra: Optional[dict] = None) -> Array:
+    """Full-sequence forward (train / prefill).  Returns logits (B,S,V)."""
+    extra = extra or {}
+    B, S = tokens.shape
+    x = params["embed"][tokens]           # gather; embed sharded over vocab
+    positions = jnp.arange(S)[None, :]
+    aux_acc = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense",):
+        def body(x, lp):
+            x = batch_sharded(x)
+            x, _ = _dense_block(lp, x, cfg, positions)
+            return x, None
+        x = _scan_blocks(body, x, params["layers"], cfg)
+
+    elif cfg.family == "moe":
+        def body(carry, lp):
+            x, aux = carry
+            x = batch_sharded(x)
+            x, _, a = _moe_block(lp, x, cfg, positions)
+            return (x, aux + a["lb_loss"]), None
+        (x, aux_acc), _ = jax.lax.scan(
+            remat(body, cfg.remat_policy), (x, aux_acc), params["layers"])
+
+    elif cfg.family == "ssm":
+        scfg = cfg.ssm_cfg()
+        def body(x, lp):
+            x = batch_sharded(x)
+            h, _ = M2.mamba2_apply(lp["mamba"], rms_norm(x, lp["ln"]), scfg)
+            return x + h, None
+        x, _ = jax.lax.scan(remat(body, cfg.remat_policy), x, params["layers"])
+
+    elif cfg.family == "hybrid":
+        scfg = cfg.ssm_cfg()
+        shared = params["shared_attn"]
+        is_attn = (jnp.arange(cfg.n_layers) % cfg.attn_every) == (cfg.attn_every - 1)
+        def body(x, xs):
+            lp, use_attn = xs
+            x = batch_sharded(x)
+            h, _ = M2.mamba2_apply(lp["mamba"], rms_norm(x, lp["ln"]), scfg)
+            x = x + h
+            def with_attn(x):
+                y, _ = _dense_block(shared, x, cfg, positions)
+                return y
+            x = jax.lax.cond(use_attn, with_attn, lambda x: x, x)
+            return x, None
+        x, _ = jax.lax.scan(remat(body, cfg.remat_policy), x,
+                            (params["layers"], is_attn))
+
+    elif cfg.family == "encdec":
+        frames = extra["frames"]          # (B, T_enc, D) stub frontend output
+        e = frames + params["enc_pos"][None, :frames.shape[1]]
+        def ebody(e, lp):
+            e = batch_sharded(e)
+            acfg = cfg.attn_cfg(causal=False, rope=False)
+            h, _ = A.attn_apply(lp["attn"], rms_norm(e, lp["ln1"]), acfg)
+            e = e + h
+            e = e + mlp_apply(lp["mlp"], rms_norm(e, lp["ln2"]), "gelu")
+            return e, None
+        e, _ = jax.lax.scan(remat(ebody, cfg.remat_policy), e, params["enc_layers"])
+        enc_out = rms_norm(e, params["enc_ln_f"])
+
+        x = x + params["dec_pos"][None, :S]
+        def dbody(x, lp):
+            x = batch_sharded(x)
+            sa = cfg.attn_cfg(causal=True, rope=False)
+            ca = cfg.attn_cfg(causal=False, rope=False)
+            h, _ = A.attn_apply(lp["self"], rms_norm(x, lp["ln1"]), sa, positions)
+            x = x + h
+            h, _ = A.attn_apply(lp["cross"], rms_norm(x, lp["ln2"]), ca,
+                                positions, kv_input=enc_out)
+            x = x + h
+            x = x + mlp_apply(lp["mlp"], rms_norm(x, lp["ln3"]), "gelu")
+            return x, None
+        x, _ = jax.lax.scan(remat(dbody, cfg.remat_policy), x, params["layers"])
+
+    elif cfg.family == "vlm":
+        patches = extra["patches"]        # (B, n_patches, D) stub frontend
+        every = cfg.cross_attn_every
+        n_cross = cfg.n_layers // every
+        idx_of_layer = jnp.arange(cfg.n_layers) // every
+        is_cross = (jnp.arange(cfg.n_layers) % every) == (every - 1)
+        # cross params are stacked (n_cross, ...); select per layer via gather
+        def body(x, xs):
+            lp, use_cross, ci = xs
+            x = batch_sharded(x)
+            x, _ = _dense_block(lp, x, cfg, positions)
+            cp = jax.tree_util.tree_map(lambda a: a[jnp.minimum(ci, n_cross - 1)],
+                                        params["cross_layers"])
+            lnc = params["ln_cross"][jnp.minimum(ci, n_cross - 1)]
+            def with_cross(x):
+                acfg = cfg.attn_cfg(causal=False, rope=False)
+                h, _ = A.attn_apply(cp, rms_norm(x, lnc), acfg,
+                                    kv_input=patches)
+                return x + h
+            x = jax.lax.cond(use_cross, with_cross, lambda x: x, x)
+            return x, None
+        x, _ = jax.lax.scan(remat(body, cfg.remat_policy), x,
+                            (params["layers"], is_cross, idx_of_layer))
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["unembed"]
+    return logits, aux_acc
+
+
+# ===========================================================================
+# Decode (serve) path.  Caches are plain dicts of stacked arrays so the
+# pytree structure is identical before/after every step (stable jit cache).
+# ===========================================================================
+
+class DecodeState(NamedTuple):
+    caches: Any          # dict of stacked arrays (see init_decode_state)
+    position: Array      # () int32
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int) -> DecodeState:
+    dt = cfg.dtype
+    L = cfg.n_layers
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+
+    def kv(nl):
+        return {"k": jnp.zeros((nl, batch, cache_len, kvh, hd), dt),
+                "v": jnp.zeros((nl, batch, cache_len, kvh, hd), dt)}
+
+    if cfg.family in ("dense", "vlm", "encdec"):
+        caches = kv(L)
+    elif cfg.family == "moe":
+        if cfg.use_mla:
+            m = cfg.mla_cfg()
+            caches = {"latent": jnp.zeros(
+                (L, batch, cache_len, m.kv_lora_rank + m.rope_head_dim), dt)}
+        else:
+            caches = kv(L)
+    elif cfg.family == "ssm":
+        c = cfg.ssm_cfg()
+        caches = {"state": jnp.zeros(
+            (L, batch, c.heads, c.d_head, c.d_state), jnp.float32)}
+    elif cfg.family == "hybrid":
+        c = cfg.ssm_cfg()
+        n_attn = max(1, L // cfg.attn_every)
+        caches = {"state": jnp.zeros(
+                      (L, batch, c.heads, c.d_head, c.d_state), jnp.float32),
+                  **{k: v for k, v in kv(n_attn).items()}}
+    else:
+        raise ValueError(cfg.family)
+    return DecodeState(caches, jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, tokens: Array, state: DecodeState, cfg: ModelConfig,
+                extra: Optional[dict] = None):
+    """One decode step: tokens (B, 1) → logits (B, 1, V), new state."""
+    extra = extra or {}
+    B = tokens.shape[0]
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(state.position[None, None], (B, 1))
+    pos = state.position
+
+    if cfg.family == "encdec":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, axis=0)[None]
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        def body(x, xs):
+            lp, cache_l = xs
+            if cfg.family == "moe":
+                if cfg.use_mla:
+                    cache = A.MLACache(cache_l["latent"], pos)
+                else:
+                    cache = A.KVCache(cache_l["k"], cache_l["v"], pos)
+                x2, new_c, _ = _moe_block(lp, x, cfg, positions, cache)
+                new_l = ({"latent": new_c.latent} if cfg.use_mla
+                         else {"k": new_c.k, "v": new_c.v})
+            elif cfg.family == "encdec":
+                cache = A.KVCache(cache_l["k"], cache_l["v"], pos)
+                sa = cfg.attn_cfg(causal=True, rope=False)
+                h, new_c = A.attn_apply(lp["self"], rms_norm(x, lp["ln1"]), sa,
+                                        positions, cache)
+                x2 = x + h
+                ca = cfg.attn_cfg(causal=False, rope=False)
+                h, _ = A.attn_apply(lp["cross"], rms_norm(x2, lp["ln2"]), ca,
+                                    positions, kv_input=extra["enc_out"])
+                x2 = x2 + h
+                x2 = x2 + mlp_apply(lp["mlp"], rms_norm(x2, lp["ln3"]), "gelu")
+                new_l = {"k": new_c.k, "v": new_c.v}
+            else:
+                cache = A.KVCache(cache_l["k"], cache_l["v"], pos)
+                x2, new_c = _dense_block(lp, x, cfg, positions, cache)
+                new_l = {"k": new_c.k, "v": new_c.v}
+            return x2, new_l
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], state.caches))
+
+        if cfg.family == "vlm":
+            patches = extra["patches"]
+            acfg = cfg.attn_cfg(causal=False, rope=False)
+            def cbody(x, xs):
+                cp, lnc = xs
+                h, _ = A.attn_apply(cp, rms_norm(x, lnc), acfg, kv_input=patches)
+                return x + h, None
+            x, _ = jax.lax.scan(cbody, x,
+                                (params["cross_layers"], params["ln_cross"]))
+
+    elif cfg.family == "ssm":
+        scfg = cfg.ssm_cfg()
+        def body(x, xs):
+            lp, st_l = xs
+            st = M2.SSMState(st_l["state"], jnp.zeros((B, 1), x.dtype))
+            h, new_st = M2.mamba2_apply(lp["mamba"], rms_norm(x, lp["ln"]),
+                                        scfg, st)
+            return x + h, {"state": new_st.state}
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], state.caches))
+
+    elif cfg.family == "hybrid":
+        scfg = cfg.ssm_cfg()
+        shared = params["shared_attn"]
+        L = cfg.n_layers
+        n_attn = max(1, L // cfg.attn_every)
+        is_attn = (jnp.arange(L) % cfg.attn_every) == (cfg.attn_every - 1)
+        attn_idx = jnp.clip(jnp.cumsum(is_attn.astype(jnp.int32)) - 1, 0, n_attn - 1)
+        ssm_xs = {"state": state.caches["state"]}
+
+        def body(carry, xs):
+            x, kbuf, vbuf = carry
+            lp, st_l, use_attn, ci = xs
+            st = M2.SSMState(st_l["state"], jnp.zeros((B, 1), x.dtype))
+            h, new_st = M2.mamba2_apply(lp["mamba"], rms_norm(x, lp["ln"]),
+                                        scfg, st)
+            x = x + h
+            cache = A.KVCache(kbuf[ci], vbuf[ci], pos)
+            def with_attn(op):
+                x, kbuf, vbuf = op
+                y, new_c = _dense_block(shared, x, cfg, positions, cache)
+                return y, kbuf.at[ci].set(new_c.k), vbuf.at[ci].set(new_c.v)
+            x, kbuf, vbuf = jax.lax.cond(
+                use_attn, with_attn, lambda op: op, (x, kbuf, vbuf))
+            return (x, kbuf, vbuf), {"state": new_st.state}
+
+        (x, kbuf, vbuf), new_ssm = jax.lax.scan(
+            body, (x, state.caches["k"], state.caches["v"]),
+            (params["layers"], ssm_xs, is_attn, attn_idx))
+        new_caches = {"state": new_ssm["state"], "k": kbuf, "v": vbuf}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["unembed"]
+    return logits, DecodeState(new_caches, state.position + 1)
+
+
+def encode(params, frames: Array, cfg: ModelConfig) -> Array:
+    """Whisper encoder forward (stub frontend: frames are embeddings)."""
+    e = frames + params["enc_pos"][None, :frames.shape[1]]
+    def ebody(e, lp):
+        acfg = cfg.attn_cfg(causal=False, rope=False)
+        h, _ = A.attn_apply(lp["attn"], rms_norm(e, lp["ln1"]), acfg)
+        e = e + h
+        e = e + mlp_apply(lp["mlp"], rms_norm(e, lp["ln2"]), "gelu")
+        return e, None
+    e, _ = jax.lax.scan(remat(ebody, cfg.remat_policy), e, params["enc_layers"])
+    return rms_norm(e, params["enc_ln_f"])

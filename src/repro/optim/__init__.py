@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adamw, adafactor, OptState,
+                                    optimizer_for)
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import int8_compress, int8_decompress

@@ -1,0 +1,2 @@
+from repro.runtime.elastic import WorkQueue, partition_batches
+from repro.runtime.stragglers import StragglerMitigator

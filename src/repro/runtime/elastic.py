@@ -1,0 +1,92 @@
+"""Elastic scaling: macro batches as an idempotent work queue.
+
+The paper's data-parallel scheme makes every macro batch independent —
+batch b is fully determined by (seed, b).  That property makes elasticity
+trivial and *exact*: when the worker set changes (node loss, scale-up), the
+pending batch ids are simply re-partitioned; completed work is never
+recomputed, and results are independent of which worker ran what.
+
+This is pure-Python control plane; the data plane (the jitted chain scan)
+is untouched — the same split production serving systems use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+
+def partition_batches(batch_ids: Iterable[int], workers: list[str]) -> dict[str, list[int]]:
+    """Deterministic round-robin partition of pending batches over workers."""
+    out: dict[str, list[int]] = {w: [] for w in workers}
+    for i, b in enumerate(sorted(batch_ids)):
+        out[workers[i % len(workers)]].append(b)
+    return out
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    batch_id: int
+    owner: Optional[str] = None
+    started_at: Optional[float] = None
+    done: bool = False
+
+
+class WorkQueue:
+    """Idempotent macro-batch queue with failure/elasticity semantics.
+
+    * ``claim(worker)`` hands out the lowest unclaimed batch.
+    * ``fail(worker)`` / ``remove_worker`` requeue everything the worker
+      held (restart-exact: batch = f(seed, id)).
+    * ``add_worker`` just makes the new worker eligible to claim.
+    * ``reclaim_stale(timeout)`` is the straggler hook (see stragglers.py).
+    """
+
+    def __init__(self, n_batches: int, seed: int = 0):
+        self.seed = seed
+        self.records = {b: BatchRecord(b) for b in range(n_batches)}
+        self.workers: set[str] = set()
+
+    # -- membership ----------------------------------------------------------
+    def add_worker(self, w: str) -> None:
+        self.workers.add(w)
+
+    def remove_worker(self, w: str) -> None:
+        self.workers.discard(w)
+        for r in self.records.values():
+            if r.owner == w and not r.done:
+                r.owner, r.started_at = None, None
+
+    # -- work ----------------------------------------------------------------
+    def claim(self, w: str, now: Optional[float] = None) -> Optional[int]:
+        if w not in self.workers:
+            self.add_worker(w)
+        for b in sorted(self.records):
+            r = self.records[b]
+            if r.owner is None and not r.done:
+                r.owner, r.started_at = w, (now if now is not None else time.monotonic())
+                return b
+        return None
+
+    def complete(self, b: int) -> None:
+        self.records[b].done = True
+
+    def fail(self, w: str) -> None:
+        self.remove_worker(w)
+
+    def reclaim_stale(self, timeout: float, now: Optional[float] = None) -> list[int]:
+        now = now if now is not None else time.monotonic()
+        out = []
+        for r in self.records.values():
+            if r.owner is not None and not r.done and now - r.started_at > timeout:
+                r.owner, r.started_at = None, None
+                out.append(r.batch_id)
+        return out
+
+    @property
+    def pending(self) -> list[int]:
+        return [b for b, r in self.records.items() if not r.done]
+
+    @property
+    def finished(self) -> bool:
+        return all(r.done for r in self.records.values())

@@ -1,0 +1,45 @@
+"""Straggler mitigation: deadline-based work stealing over the WorkQueue.
+
+The [19] pipeline's Eq. 1 pays ``N·(max−mean)`` for stragglers — FastMPS's
+data parallelism removes the structural coupling, and this module removes
+the *statistical* tail: a batch that exceeds ``deadline = k × EWMA(batch
+time)`` is reissued to an idle worker; first completion wins (idempotent
+batches make duplicates harmless).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+from repro.runtime.elastic import WorkQueue
+
+
+@dataclasses.dataclass
+class StragglerMitigator:
+    queue: WorkQueue
+    k: float = 3.0                 # deadline multiplier
+    ewma_alpha: float = 0.2
+    _ewma: Optional[float] = None
+    duplicates: int = 0            # instrumentation
+
+    def observe_completion(self, duration: float) -> None:
+        self._ewma = (duration if self._ewma is None
+                      else self.ewma_alpha * duration + (1 - self.ewma_alpha) * self._ewma)
+
+    @property
+    def deadline(self) -> Optional[float]:
+        return None if self._ewma is None else self.k * self._ewma
+
+    def maybe_steal(self, idle_worker: str, now: Optional[float] = None) -> Optional[int]:
+        """Give an idle worker a stale batch to duplicate, if any is late."""
+        if self.deadline is None:
+            return None
+        stale = self.queue.reclaim_stale(self.deadline, now)
+        if not stale:
+            return None
+        b = stale[0]
+        r = self.queue.records[b]
+        r.owner, r.started_at = idle_worker, (now if now is not None else time.monotonic())
+        self.duplicates += 1
+        return b

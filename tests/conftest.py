@@ -1,0 +1,17 @@
+"""Shared test config.
+
+x64 is enabled because the MPS oracles compare in float64 (the paper's
+reference precision).  Device count is NOT forced here — smoke tests and
+benches must see the real single CPU device; multi-device behaviour is
+tested via subprocesses (tests/test_parallel.py) and the dry-run sets its
+own XLA_FLAGS.
+"""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

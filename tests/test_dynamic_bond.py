@@ -1,0 +1,81 @@
+"""Dynamic bond dimensions (paper §3.4.2, Table 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dynamic_bond as DB
+from repro.core import mps as M
+from repro.core import sampler as S
+
+
+def test_area_law_profile_shape():
+    prof = DB.area_law_profile(100, chi_max=64, n_photon=1.0)
+    assert prof.shape == (100,)
+    assert prof.min() >= 1 and prof.max() <= 64
+    # grows from the edges, plateaus at the centre
+    assert prof[0] < prof[50] and prof[-1] < prof[50]
+    assert prof[50] == 64
+
+
+def test_bucketize_covers_profile():
+    prof = DB.area_law_profile(64, chi_max=50)
+    buck = DB.bucketize(prof, [4, 16, 50])
+    assert np.all(buck >= prof)
+    assert set(np.unique(buck)) <= {4, 16, 50}
+
+
+def test_stages_contiguous():
+    buck = np.array([4, 4, 16, 16, 16, 4])
+    stages = DB.stages_from_profile(buck)
+    assert [(s.start, s.stop, s.chi) for s in stages] == [
+        (0, 2, 4), (2, 5, 16), (5, 6, 4)]
+
+
+def test_table1_metrics():
+    prof = np.full(100, 50)
+    m = DB.table1_metrics(prof, chi_fixed=50)
+    assert m["equiv_chi"] == 50 and m["step_ratio"] == 1.0 and m["comp_ratio"] == 1.0
+
+    prof2 = DB.area_law_profile(100, chi_max=200, n_photon=0.5)
+    m2 = DB.table1_metrics(prof2, chi_fixed=200)
+    assert m2["comp_ratio"] < 1.0           # dynamic χ saves compute
+    assert 0.0 <= m2["step_ratio"] <= 1.0
+    assert m2["equiv_chi"] <= 200
+
+
+def test_single_stage_equals_uniform_sampler():
+    """bucketed == χ everywhere ⇒ staged sampling is exactly the plain chain."""
+    mps = M.random_linear_mps(jax.random.key(0), 6, 8, 3)
+    buck = np.full(6, 8)
+    a = DB.sample_staged(mps, buck, 32, jax.random.key(1))
+    b = S.sample(mps, 32, jax.random.key(1))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multi_stage_runs_and_is_valid():
+    mps = M.gbs_like_mps(jax.random.key(2), 12, 16, 3)
+    prof = DB.area_law_profile(12, chi_max=16, n_photon=1.0)
+    buck = DB.bucketize(prof, [4, 8, 16])
+    out = DB.sample_staged(mps, buck, 64, jax.random.key(3))
+    assert out.shape == (64, 12)
+    assert int(out.min()) >= 0 and int(out.max()) < 3
+
+
+def test_staged_distribution_close_on_low_rank_state():
+    """On a state whose true bond rank ≤ the bucket, truncation is lossless:
+    build a χ=8 MPS that actually has rank 4 on the edge bonds."""
+    key = jax.random.key(4)
+    base = M.random_linear_mps(key, 6, 4, 2)         # true rank 4
+    # embed into χ=8 with zero padding
+    g = jnp.zeros((6, 8, 8, 2), dtype=base.gammas.dtype)
+    g = g.at[:, :4, :4, :].set(base.gammas)
+    lam = jnp.zeros((6, 8), dtype=base.lambdas.dtype).at[:, :4].set(base.lambdas)
+    big = M.MPS(g, lam, "linear")
+
+    buck = np.array([4, 4, 8, 8, 4, 4])
+    staged = DB.sample_staged(big, buck, 30_000, jax.random.key(5))
+    probs = M.enumerate_probabilities(base)
+    idx = np.ravel_multi_index(np.asarray(staged).T, (2,) * 6)
+    emp = np.bincount(idx, minlength=2 ** 6) / 30_000
+    tv = 0.5 * np.abs(emp - probs).sum()
+    assert tv < 4.0 * np.sqrt(2 ** 6 / 30_000), tv

@@ -1,0 +1,161 @@
+"""Pallas kernels vs. pure-jnp oracles — shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.contract_measure import contract_measure as cm_kernel
+from repro.kernels.displacement_expm import displacement_expm as de_kernel
+
+
+@pytest.mark.parametrize("n,chi,d", [
+    (8, 16, 2), (16, 32, 3), (32, 64, 4), (64, 128, 3), (128, 256, 3),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_contract_measure_shapes(n, chi, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    env = jax.random.uniform(k1, (n, chi), dtype=dtype)
+    gamma = jax.random.uniform(k2, (chi, chi, d), dtype=dtype)
+    lam = jax.random.uniform(k3, (chi,), dtype=dtype)
+    t_ref, p_ref = ref.contract_measure_ref(env, gamma, lam)
+    t_k, p_k = cm_kernel(env, gamma, lam, bn=min(n, 32), br=min(chi, 64),
+                         bl=min(chi, 64), interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-9
+    np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_ref), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_ref), rtol=tol,
+                               atol=tol)
+
+
+def test_contract_measure_bf16_inputs():
+    """The paper's TF32 tier → bf16 inputs, fp32 accumulate."""
+    k1, k2, k3 = jax.random.split(jax.random.key(1), 3)
+    env = jax.random.uniform(k1, (16, 32), dtype=jnp.float32).astype(jnp.bfloat16)
+    gamma = jax.random.uniform(k2, (32, 32, 3), dtype=jnp.float32).astype(jnp.bfloat16)
+    lam = jax.random.uniform(k3, (32,), dtype=jnp.float32).astype(jnp.bfloat16)
+    t_k, p_k = cm_kernel(env, gamma, lam, bn=16, br=32, bl=32, interpret=True)
+    assert t_k.dtype == jnp.float32           # upcast accumulate
+    t_ref, _ = ref.contract_measure_ref(env.astype(jnp.float32),
+                                        gamma.astype(jnp.float32),
+                                        lam.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_contract_measure_multi_tile_reduction():
+    """Force a >1 l-tile grid so the VMEM accumulator path is exercised."""
+    env = jax.random.uniform(jax.random.key(2), (8, 64), dtype=jnp.float32)
+    gamma = jax.random.uniform(jax.random.key(3), (64, 64, 2), dtype=jnp.float32)
+    lam = jax.random.uniform(jax.random.key(4), (64,), dtype=jnp.float32)
+    t_ref, p_ref = ref.contract_measure_ref(env, gamma, lam)
+    t_k, p_k = cm_kernel(env, gamma, lam, bn=8, br=16, bl=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_ref), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("b,d", [(128, 3), (128, 4), (256, 8), (128, 16)])
+def test_displacement_kernel_vs_ref(b, d):
+    kr, ki = jax.random.split(jax.random.key(5))
+    mre = 0.4 * jax.random.normal(kr, (b,), dtype=jnp.float32)
+    mim = 0.4 * jax.random.normal(ki, (b,), dtype=jnp.float32)
+    ore, oim = de_kernel(mre, mim, d, bb=128, interpret=True)
+    rre, rim = ref.displacement_zassenhaus_ref(mre, mim, d)
+    tol = 3e-5 * d            # fp32 kernel vs f64 oracle; coeffs grow with d
+    np.testing.assert_allclose(np.asarray(ore), np.asarray(rre), atol=tol)
+    np.testing.assert_allclose(np.asarray(oim), np.asarray(rim), atol=tol)
+
+
+def test_displacement_kernel_mu_zero():
+    """μ=0 → identity matrix (guards the log(r)=log(0) branch)."""
+    mre = jnp.zeros((128,), jnp.float32)
+    mim = jnp.zeros((128,), jnp.float32)
+    ore, oim = de_kernel(mre, mim, 5, bb=128, interpret=True)
+    eye = np.eye(5, dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(ore[0]), eye, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(oim[0]), 0.0, atol=1e-6)
+
+
+def test_ops_wrappers_route_interpret():
+    env = jax.random.uniform(jax.random.key(6), (32, 64), dtype=jnp.float32)
+    gamma = jax.random.uniform(jax.random.key(7), (64, 64, 3), dtype=jnp.float32)
+    lam = jax.random.uniform(jax.random.key(8), (64,), dtype=jnp.float32)
+    t1, p1 = ops.contract_measure(env, gamma, lam, use_kernel=True)
+    t2, p2 = ops.contract_measure(env, gamma, lam, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5)
+
+    mu = (0.3 * jax.random.normal(jax.random.key(9), (128,))
+          + 0.3j * jax.random.normal(jax.random.key(10), (128,)))
+    d1 = ops.displacement_matrices(mu, 6, use_kernel=True)
+    d2 = ops.displacement_matrices(mu, 6, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-5)
+
+
+def test_collapse_rescale():
+    temp = jax.random.uniform(jax.random.key(11), (16, 8, 3), dtype=jnp.float64)
+    samples = jax.random.randint(jax.random.key(12), (16,), 0, 3)
+    env = ops.collapse_rescale(temp, samples)
+    assert env.shape == (16, 8)
+    np.testing.assert_allclose(np.asarray(jnp.max(jnp.abs(env), axis=1)), 1.0)
+    # collapse picked the right slice
+    picked = np.take_along_axis(np.asarray(temp),
+                                np.asarray(samples)[:, None, None], axis=2)[:, :, 0]
+    m = np.abs(picked).max(axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(env), picked / m)
+
+
+@pytest.mark.parametrize("b,s,h,kvh,dh,causal", [
+    (2, 64, 4, 2, 32, True),
+    (1, 128, 4, 4, 16, True),
+    (2, 64, 8, 2, 32, False),
+    (1, 64, 6, 1, 64, True),          # MQA
+])
+def test_flash_attention_vs_ref(b, s, h, kvh, dh, causal):
+    from repro.kernels.flash_attention import flash_attention
+    q = jax.random.normal(jax.random.key(0), (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (b, s, kvh, dh), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (b, s, kvh, dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, bq=32, bk=32,
+                          interpret=True)
+    r = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=3e-6)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+    q = jax.random.normal(jax.random.key(0), (1, 64, 4, 32), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (1, 64, 2, 32), jnp.float32)
+    out = flash_attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                          v.astype(jnp.bfloat16), bq=32, bk=32,
+                          interpret=True)
+    r = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out.astype(jnp.float32)),
+                               np.asarray(r), atol=3e-2)
+
+
+@pytest.mark.parametrize("n,L,R,d", [(32, 64, 64, 3), (64, 96, 128, 4),
+                                     (16, 32, 32, 2)])
+def test_collapse_select_vs_ref(n, L, R, d):
+    from repro.kernels.collapse_select import collapse_select
+    env = jax.random.uniform(jax.random.key(0), (n, L), dtype=jnp.float32)
+    gamma = jax.random.uniform(jax.random.key(1), (L, R, d), dtype=jnp.float32)
+    samples = jax.random.randint(jax.random.key(2), (n,), 0, d)
+    out = collapse_select(env, gamma, samples, bn=16, br=32, bl=32,
+                          interpret=True)
+    r = ref.collapse_select_ref(env, gamma, samples)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_measure_first_equals_contract_measure():
+    """The tp-3 associativity identity: env@(Γ·Λ) == measure(env·Γ)."""
+    env = jax.random.uniform(jax.random.key(3), (32, 64), dtype=jnp.float64)
+    gamma = jax.random.uniform(jax.random.key(4), (64, 64, 3), dtype=jnp.float64)
+    lam = jax.random.uniform(jax.random.key(5), (64,), dtype=jnp.float64)
+    p1 = ref.measure_first_probs_ref(env, gamma, lam)
+    _, p2 = ref.contract_measure_ref(env, gamma, lam)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-12)

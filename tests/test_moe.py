@@ -1,0 +1,93 @@
+"""MoE layer unit tests: routing math, capacity semantics, EP invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as MOE
+from repro.models.common import mlp_apply
+
+
+def _cfg(**kw):
+    base = dict(d_model=16, d_ff=32, n_experts=4, top_k=2,
+                capacity_factor=8.0)
+    base.update(kw)
+    return MOE.MoEConfig(**base)
+
+
+def test_single_expert_equals_dense_mlp():
+    """E = top_k = 1 with ample capacity: MoE must equal the expert MLP."""
+    cfg = _cfg(n_experts=1, top_k=1)
+    params, _ = MOE.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 16), jnp.float32)
+    y, aux = MOE.moe_apply(params, x, cfg)
+
+    w = {"gate": params["gate"][0], "up": params["up"][0],
+         "down": params["down"][0]}
+    ref = mlp_apply(w, x.reshape(16, 16)).reshape(2, 8, 16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+    assert float(aux["drop_frac"]) == 0.0
+
+
+def test_no_drops_with_ample_capacity():
+    cfg = _cfg(capacity_factor=8.0)
+    params, _ = MOE.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(2), (3, 16, 16), jnp.float32)
+    _, aux = MOE.moe_apply(params, x, cfg)
+    assert float(aux["drop_frac"]) == 0.0
+
+
+def test_capacity_drops_counted():
+    """cf small enough that overflow must occur: drop_frac > 0 and the
+    output stays finite (dropped tokens just lose that expert's term)."""
+    cfg = _cfg(capacity_factor=0.05)
+    params, _ = MOE.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(3), (2, 64, 16), jnp.float32)
+    y, aux = MOE.moe_apply(params, x, cfg)
+    assert float(aux["drop_frac"]) > 0.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_capacity_rounding():
+    dsv3 = MOE.MoEConfig(d_model=1, d_ff=1, n_experts=256, top_k=8,
+                         capacity_factor=1.25)
+    assert MOE._capacity(1, dsv3) == 1            # decode: never 8× padded
+    assert MOE._capacity(4096, dsv3) % 8 == 0     # train: MXU-aligned
+
+
+def test_gate_weights_normalized_and_applied():
+    """Scaling one expert's down-projection scales only its routed share."""
+    cfg = _cfg(n_experts=2, top_k=2)              # every token uses both
+    params, _ = MOE.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(4), (1, 4, 16), jnp.float32)
+    y1, _ = MOE.moe_apply(params, x, cfg)
+    params2 = dict(params)
+    params2["down"] = params["down"].at[0].multiply(2.0)
+    y2, _ = MOE.moe_apply(params2, x, cfg)
+    assert not np.allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_shared_expert_added():
+    cfg = _cfg(n_shared=1)
+    params, _ = MOE.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(5), (1, 4, 16), jnp.float32)
+    y, _ = MOE.moe_apply(params, x, cfg)
+    sp = params["shared"]
+    shared_out = mlp_apply(sp, x.reshape(4, 16)).reshape(1, 4, 16)
+    # zero all routed experts → only the shared path remains
+    params0 = dict(params)
+    for k in ("gate", "up", "down"):
+        params0[k] = jnp.zeros_like(params[k])
+    y0, _ = MOE.moe_apply(params0, x, cfg)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(shared_out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lb_loss_range():
+    cfg = _cfg()
+    params, _ = MOE.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(6), (2, 32, 16), jnp.float32)
+    _, aux = MOE.moe_apply(params, x, cfg)
+    # Switch-style lb loss is ≥ top_k·(uniform lower bound) and finite
+    assert 0.0 < float(aux["lb_loss"]) < 4 * cfg.n_experts

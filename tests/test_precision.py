@@ -1,0 +1,119 @@
+"""Adaptive mixed precision (paper §3.3, Figs. 5/6).
+
+The central claim: a *global* auto-scale cannot contain the inter-sample
+dynamic-range expansion, so long chains underflow in low precision; the
+*per-sample* scale keeps every sample's range bounded and low-precision
+sampling stays healthy to thousands of sites.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mps as M
+from repro.core import precision
+from repro.core import sampler as S
+
+
+def test_rescale_modes():
+    env = jnp.array([[1e-8, 1e-6], [1e2, 1e4]])
+    out, lg = precision.rescale(env, "per_sample")
+    assert np.allclose(np.asarray(jnp.max(jnp.abs(out), axis=1)), 1.0)
+    assert np.allclose(np.asarray(lg), [-6.0, 4.0])
+
+    out_g, lg_g = precision.rescale(env, "global")
+    assert float(jnp.max(jnp.abs(out_g))) == 1.0
+    # global scaling leaves the small sample tiny — the Fig. 5 failure mode
+    assert float(jnp.max(jnp.abs(out_g[0]))) < 1e-9
+
+    out_n, lg_n = precision.rescale(env, "none")
+    assert jnp.all(out_n == env) and jnp.all(lg_n == 0)
+
+
+def test_rescale_zero_row_safe():
+    env = jnp.zeros((3, 4))
+    out, lg = precision.rescale(env, "per_sample")
+    assert bool(jnp.all(jnp.isfinite(out))) and bool(jnp.all(lg == 0))
+
+
+def test_measurement_invariant_under_per_sample_scale():
+    """Alg. 1 linearity: scaling a sample's env rescales its probs by the
+    same factor, which normalisation cancels — the paper's key insight."""
+    key = jax.random.key(0)
+    temp = jax.random.uniform(key, (8, 6, 3), dtype=jnp.float64)
+    lam = jax.random.uniform(jax.random.key(1), (6,), dtype=jnp.float64)
+    probs = jnp.einsum("nrs,r->ns", temp, lam)
+    norm = probs / probs.sum(axis=1, keepdims=True)
+
+    scale = 10.0 ** jax.random.uniform(jax.random.key(2), (8, 1, 1),
+                                       minval=-30, maxval=30)
+    probs_s = jnp.einsum("nrs,r->ns", temp * scale, lam)
+    norm_s = probs_s / probs_s.sum(axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(norm), np.asarray(norm_s), rtol=1e-9)
+
+
+def _long_decaying_chain(m=60, chi=4, d=3):
+    """Chain whose env magnitude decays fast with high per-sample variance
+    (Eq. 5 with random per-site k) — the Fig. 5/6 regime, scaled to f32."""
+    mps = M.random_linear_mps(jax.random.key(3), m, chi, d, decay=1.2,
+                              dtype=jnp.float64)
+    return mps.astype(jnp.float32)
+
+
+def test_underflow_without_scaling_fig6():
+    """No scaling → env hits exact 0 mid-chain (float32), draws degenerate."""
+    mps = _long_decaying_chain()
+    state = S.init_state(mps, 64, jax.random.key(0),
+                         S.SamplerConfig(scaling="none"))
+    res = S.sample_chain(mps, state, S.SamplerConfig(scaling="none"))
+    max_env = np.asarray(res.site_stats[:, 0])
+    assert max_env[-1] == 0.0, "expected Fig. 6 underflow without scaling"
+
+
+def test_per_sample_scaling_survives_fig6():
+    mps = _long_decaying_chain()
+    cfg = S.SamplerConfig(scaling="per_sample")
+    state = S.init_state(mps, 64, jax.random.key(0), cfg)
+    res = S.sample_chain(mps, state, cfg)
+    max_env = np.asarray(res.site_stats[:, 0])
+    assert max_env[-1] > 1e-3, "per-sample scaling must keep env alive"
+    # the accumulated log-scale diagnostic recovers absolute magnitudes
+    assert bool(jnp.all(jnp.isfinite(res.state.log_scale)))
+    assert float(jnp.max(res.state.log_scale)) < 0.0   # decaying chain
+
+
+def test_per_sample_beats_global_range():
+    """After per-sample rescale every sample is pinned to max 1; global
+    scaling leaves an inter-sample spread that *grows with the chain length*
+    (Fig. 5 a→d) — the range-expansion a single scalar cannot contain."""
+    def final_range(mode, m):
+        mps = _long_decaying_chain(m=m)
+        cfg = S.SamplerConfig(scaling=mode)
+        state = S.init_state(mps, 32, jax.random.key(1), cfg)
+        res = S.sample_chain(mps, state, cfg)
+        stats = precision.sample_range_stats(res.state.env)
+        return np.asarray(stats["sample_max"])
+
+    ps = final_range("per_sample", 120)
+    assert ps.min() == pytest.approx(1.0)      # every sample pinned to 1
+
+    gl_short = final_range("global", 30)
+    gl_long = final_range("global", 120)
+    assert gl_long.min() < 0.05                 # ≥ 20× inter-sample spread
+    assert gl_long.min() < gl_short.min()       # ...and it widens with sites
+
+
+def test_policy_table():
+    for name in ("fp64", "fp32", "mxu_bf16", "store_bf16"):
+        st, inp, acc = precision.policy_dtypes(name)
+        assert jnp.dtype(acc).itemsize >= jnp.dtype(inp).itemsize or name == "fp64"
+    with pytest.raises(ValueError):
+        precision.policy_dtypes("tf32")        # not a TPU tier
+
+
+def test_policy_gemm_accumulates_fp32():
+    a = jnp.ones((4, 8), jnp.float32)
+    b = jnp.ones((8, 4), jnp.float32)
+    out = precision.gemm(a, b, "mxu_bf16")
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), 8.0)

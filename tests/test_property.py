@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dynamic_bond as DB
+from repro.core import precision
+from repro.core.sampler import draw_from_probs
+from repro.optim import compression as C
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@hypothesis.given(
+    probs=hnp.arrays(np.float64, hnp.array_shapes(min_dims=2, max_dims=2,
+                                                  min_side=1, max_side=16),
+                     elements=st.floats(0, 1e6, allow_nan=False)),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_draw_in_range(probs, seed):
+    out = draw_from_probs(jnp.asarray(probs), jax.random.key(seed))
+    d = probs.shape[1]
+    assert out.shape == (probs.shape[0],)
+    assert np.all((np.asarray(out) >= 0) & (np.asarray(out) < d))
+
+
+@hypothesis.given(
+    scale_exp=st.lists(st.floats(-30, 30), min_size=1, max_size=8),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_draw_invariant_under_row_scaling(scale_exp, seed):
+    """Alg.1 normalisation ⇒ the draw depends only on the *relative* probs
+    per row — the foundation of per-sample scaling (§3.3)."""
+    n = len(scale_exp)
+    probs = np.asarray(jax.random.uniform(jax.random.key(1), (n, 4),
+                                          dtype=jnp.float64)) + 1e-3
+    scaled = probs * (10.0 ** np.asarray(scale_exp))[:, None]
+    a = draw_from_probs(jnp.asarray(probs), jax.random.key(seed))
+    b = draw_from_probs(jnp.asarray(scaled), jax.random.key(seed))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@hypothesis.given(
+    env=hnp.arrays(np.float64,
+                   hnp.array_shapes(min_dims=2, max_dims=2, min_side=1,
+                                    max_side=32),
+                   elements=st.one_of(
+                       st.just(0.0),
+                       st.floats(1e-100, 1e100),
+                       st.floats(-1e100, -1e-100))),
+    mode=st.sampled_from(["none", "global", "per_sample"]),
+)
+def test_rescale_invariants(env, mode):
+    out, lg = precision.rescale(jnp.asarray(env), mode)
+    assert out.shape == env.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    if mode == "per_sample":
+        m = np.max(np.abs(np.asarray(out)), axis=1)
+        nz = np.max(np.abs(env), axis=1) > 0
+        np.testing.assert_allclose(m[nz], 1.0, rtol=1e-12)
+    # rescale must be exactly invertible through the log factor
+    if mode != "none":
+        back = np.asarray(out) * (10.0 ** np.asarray(lg))[:, None]
+        ok = np.isfinite(back)
+        np.testing.assert_allclose(back[ok], env[ok], rtol=1e-9, atol=1e-300)
+
+
+@hypothesis.given(
+    x=hnp.arrays(np.float32,
+                 st.integers(1, 2000),
+                 elements=st.floats(-1e4, 1e4, allow_nan=False, width=32)),
+)
+def test_int8_compression_bound(x):
+    q, scale = C.int8_compress(jnp.asarray(x))
+    y = np.asarray(C.int8_decompress(q, scale, x.shape, jnp.float32))
+    pad = (-x.size) % C.BLOCK
+    bound = np.repeat(np.asarray(scale) / 2, C.BLOCK)[: x.size] + 1e-6
+    assert np.all(np.abs(y - x) <= bound)
+
+
+@hypothesis.given(
+    n=st.integers(3, 200),
+    chi_max=st.integers(2, 512),
+    photons=st.floats(0.05, 4.0),
+)
+def test_area_law_profile_properties(n, chi_max, photons):
+    prof = DB.area_law_profile(n, chi_max, photons)
+    assert prof.min() >= 1 and prof.max() <= chi_max
+    mid = (n - 1) // 2          # bond i splits i+1 | n-1-i sites
+    assert prof[0] <= prof[mid] and prof[-1] <= prof[mid]   # edge ≤ centre
+    m = DB.table1_metrics(prof, chi_max)
+    assert 0 < m["comp_ratio"] <= 1.0
+    assert m["equiv_chi"] <= chi_max
+
+
+@hypothesis.given(
+    buckets=st.lists(st.integers(1, 100), min_size=1, max_size=5, unique=True),
+    data=st.data(),
+)
+def test_bucketize_dominates(buckets, data):
+    n = data.draw(st.integers(1, 50))
+    prof = np.asarray(data.draw(st.lists(
+        st.integers(1, max(buckets)), min_size=n, max_size=n)))
+    buck = DB.bucketize(prof, buckets)
+    assert np.all(buck >= prof)
+    assert set(np.unique(buck)) <= set(buckets)

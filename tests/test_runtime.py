@@ -1,0 +1,81 @@
+"""Elasticity + straggler mitigation (control plane)."""
+from repro.runtime.elastic import WorkQueue, partition_batches
+from repro.runtime.stragglers import StragglerMitigator
+
+
+def test_partition_deterministic_round_robin():
+    p = partition_batches(range(7), ["a", "b", "c"])
+    assert p == {"a": [0, 3, 6], "b": [1, 4], "c": [2, 5]}
+
+
+def test_queue_claim_complete():
+    q = WorkQueue(4)
+    assert q.claim("w0", now=0.0) == 0
+    assert q.claim("w1", now=0.0) == 1
+    q.complete(0)
+    assert q.claim("w0", now=1.0) == 2
+    assert sorted(q.pending) == [1, 2, 3]
+    assert not q.finished
+
+
+def test_worker_failure_requeues():
+    q = WorkQueue(3)
+    q.claim("w0", now=0.0)
+    q.claim("w1", now=0.0)
+    q.fail("w0")                       # node loss
+    # batch 0 is claimable again, by anyone
+    assert q.claim("w2", now=1.0) == 0
+
+
+def test_elastic_scale_up_and_down():
+    q = WorkQueue(6)
+    b0 = q.claim("w0", now=0.0)
+    q.complete(b0)
+    q.add_worker("w1")                 # scale up mid-run
+    assert q.claim("w1", now=1.0) is not None
+    q.remove_worker("w1")              # scale down: w1's batch requeued
+    claims = []
+    while (b := q.claim("w0", now=2.0)) is not None:
+        claims.append(b)
+        q.complete(b)
+    assert q.finished
+
+
+def test_idempotent_batches_after_restart():
+    """Completed batches are never re-handed-out; pending ones are."""
+    q = WorkQueue(5)
+    for _ in range(2):
+        b = q.claim("w0", now=0.0)
+        q.complete(b)
+    done = [b for b, r in q.records.items() if r.done]
+    q.fail("w0")
+    rest = []
+    while (b := q.claim("w1", now=1.0)) is not None:
+        rest.append(b)
+        q.complete(b)
+    assert sorted(done + rest) == [0, 1, 2, 3, 4]
+    assert len(done + rest) == 5       # nothing recomputed
+
+
+def test_straggler_steal():
+    q = WorkQueue(3)
+    sm = StragglerMitigator(q, k=2.0)
+    b = q.claim("slow", now=0.0)
+    sm.observe_completion(1.0)         # EWMA = 1.0 → deadline = 2.0
+    assert sm.deadline == 2.0
+    # not late yet
+    assert sm.maybe_steal("idle", now=1.5) is None
+    # now late → duplicate issued to the idle worker
+    stolen = sm.maybe_steal("idle", now=3.5)
+    assert stolen == b
+    assert sm.duplicates == 1
+    # first completion wins; queue converges
+    q.complete(stolen)
+    assert b not in q.pending
+
+
+def test_straggler_no_deadline_before_observations():
+    q = WorkQueue(1)
+    sm = StragglerMitigator(q)
+    q.claim("w", now=0.0)
+    assert sm.maybe_steal("idle", now=100.0) is None

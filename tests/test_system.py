@@ -1,0 +1,120 @@
+"""End-to-end behaviour tests: the GBS pipeline and a mini LM training run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import displacement as D
+from repro.core import dynamic_bond as DB
+from repro.core import mps as M
+from repro.core import sampler as S
+from repro.data.tokens import synthetic_token_stream
+from repro.launch import steps
+from repro.models import transformer as T
+from repro.optim import optimizers, schedule
+
+
+def test_gbs_pipeline_end_to_end(tmp_path):
+    """MPS build → dynamic-χ stages → displaced sampling → correlations.
+
+    Mirrors the paper's validation flow (§4.1) at laptop scale.
+    """
+    m_sites, chi, d = 16, 16, 3
+    mps = M.gbs_like_mps(jax.random.key(0), m_sites, chi, d)
+
+    # dynamic bond profile (Table 1 accounting)
+    prof = DB.area_law_profile(m_sites, chi, n_photon=1.0)
+    buck = DB.bucketize(prof, [4, 8, 16])
+    metrics = DB.table1_metrics(prof, chi)
+    assert metrics["comp_ratio"] < 1.0
+
+    out = DB.sample_staged(mps, buck, 20_000, jax.random.key(1))
+    assert out.shape == (20_000, m_sites)
+
+    # internal consistency of site marginals: two independent halves agree
+    half1 = np.asarray(out[:10_000])
+    half2 = np.asarray(out[10_000:])
+    m1 = half1.mean(axis=0)
+    m2 = half2.mean(axis=0)
+    slope = np.polyfit(m1, m2, 1)[0]
+    assert 0.9 < slope < 1.1
+
+    # displaced measurement: apply D(μ) to an unmeasured env
+    env = jax.random.uniform(jax.random.key(2), (64, chi, d), dtype=jnp.float64)
+    mu = 0.3 * (jax.random.normal(jax.random.key(3), (64,))
+                + 1j * jax.random.normal(jax.random.key(4), (64,)))
+    disp = D.displace_env(env, mu.astype(jnp.complex128), d)
+    assert disp.shape == env.shape
+    assert bool(jnp.all(jnp.isfinite(jnp.abs(disp))))
+
+
+def test_mini_lm_training_loss_decreases():
+    """Train a tiny dense LM for 30 steps on a fixed synthetic batch —
+    loss must drop (the end-to-end driver contract of launch/train.py)."""
+    cfg = configs.get_smoke_config("granite-3-2b")
+    params, _ = T.init_params(jax.random.key(0), cfg)
+    opt = optimizers.adamw(schedule.cosine_schedule(3e-3, warmup=5, total=30))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(steps.make_train_step(cfg, opt))
+
+    bat = synthetic_token_stream(seed=0, vocab=cfg.vocab, batch=4, seq=16)
+    batch = bat(0)
+    losses = []
+    for _ in range(30):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < 0.7 * losses[0], losses[::10]
+
+
+def test_serve_batched_requests():
+    """Batched greedy decode over a KV cache — the serving driver contract."""
+    cfg = configs.get_smoke_config("deepseek-7b")
+    params, _ = T.init_params(jax.random.key(0), cfg)
+    serve = jax.jit(steps.make_serve_step(cfg))
+    B, steps_n = 4, 8
+    state = T.init_decode_state(cfg, B, 32)
+    tok = jax.random.randint(jax.random.key(1), (B, 1), 0, cfg.vocab)
+    outs = []
+    for _ in range(steps_n):
+        tok, state = serve(params, {"tokens": tok}, state)
+        outs.append(tok)
+    seq = jnp.concatenate(outs, axis=1)
+    assert seq.shape == (B, steps_n)
+    assert int(state.position) == steps_n
+
+
+def test_multilevel_sampler_on_one_device_mesh():
+    """The multi-level API degrades gracefully to a 1×1 mesh (the 'users
+    with limited computing resources' case the paper §2.2 point (1) makes)."""
+    from repro.core import parallel as PP
+    mps = M.random_linear_mps(jax.random.key(0), 5, 4, 3)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    key = jax.random.key(1)
+    out = PP.multilevel_sample(mesh, mps, 16, key,
+                               PP.ParallelConfig("tp_single"))
+    # DP group g draws with split(key, p1)[g]; p1 = 1 here
+    ref = S.sample(mps, 16, jax.random.split(key, 1)[0])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_first_and_second_order_correlations_fig9():
+    """Paper Fig. 9 a/c: 1st- and 2nd-order correlations of sampled outcomes
+    match the exact enumeration (slope ≈ 1) at exact-oracle scale."""
+    mps = M.gbs_like_mps(jax.random.key(10), 6, 6, 3)
+    joint = M.enumerate_probabilities(mps)
+    outcomes = np.stack(np.meshgrid(*([np.arange(3)] * 6), indexing="ij"),
+                        axis=-1).reshape(-1, 6).astype(np.float64)
+    # exact moments
+    exact_n = joint @ outcomes                             # ⟨n_i⟩
+    exact_nn = np.einsum("k,ki,kj->ij", joint, outcomes, outcomes)
+
+    samples = np.asarray(S.sample(mps, 60_000, jax.random.key(11)),
+                         dtype=np.float64)
+    emp_n = samples.mean(axis=0)
+    emp_nn = samples.T @ samples / samples.shape[0]
+
+    slope1 = np.polyfit(exact_n, emp_n, 1)[0]
+    iu = np.triu_indices(6, k=1)
+    slope2 = np.polyfit(exact_nn[iu], emp_nn[iu], 1)[0]
+    assert 0.97 < slope1 < 1.03, slope1                    # paper: 0.97
+    assert 0.94 < slope2 < 1.06, slope2                    # paper: 0.96
