@@ -18,15 +18,26 @@ from repro.core.sampler import SamplerState
 
 
 def save_sampler_state(root: str, site: int, state: SamplerState,
-                       samples_so_far: np.ndarray):
+                       samples_so_far: np.ndarray, keep: int = 3):
+    """Atomic per-site checkpoint; prunes to the ``keep`` newest sites so a
+    checkpoint-per-segment streaming walk doesn't accumulate the whole
+    chain's history (keep-last-3, matching checkpoint/store.py)."""
     os.makedirs(root, exist_ok=True)
-    tmp = os.path.join(root, f"site_{site:06d}.tmp.npz")
+    # the temp name must NOT match the site_*.npz pattern: a kill between
+    # savez and replace would otherwise leave a truncated file that the
+    # loader's sorted()[-1] (and the prune filter) would pick up
+    tmp = os.path.join(root, f".tmp_site_{site:06d}.npz")
     final = os.path.join(root, f"site_{site:06d}.npz")
     np.savez(tmp, env=np.asarray(state.env),
              key=np.asarray(jax.random.key_data(state.key)),
              log_scale=np.asarray(state.log_scale),
              samples=np.asarray(samples_so_far), site=site)
     os.replace(tmp, final)
+    if keep:
+        files = sorted(f for f in os.listdir(root)
+                       if f.startswith("site_") and f.endswith(".npz"))
+        for f in files[:-keep]:
+            os.remove(os.path.join(root, f))
     return final
 
 

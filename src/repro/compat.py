@@ -1,0 +1,27 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern ``jax.shard_map`` API (keyword ``check_vma``);
+on jax 0.4.x the function lives in ``jax.experimental.shard_map`` and the
+replication-check keyword is ``check_rep``.  Everything routes through
+:func:`shard_map` here so call sites stay version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped axis, usable inside shard_map bodies (the
+    result sizes slices, so it must be a Python int, not a traced psum(1))."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.core.axis_frame(axis_name)   # 0.4.x: returns the frame size

@@ -35,13 +35,14 @@ the same seed — asserted in tests.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.core.mps import MPS
 from repro.core import precision
 from repro.core.sampler import SamplerConfig, draw_from_probs
@@ -98,7 +99,7 @@ def dp_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
         out = S.sample(local, n_samples // n_shards, keys_local[0], config)
         return out
 
-    f = jax.shard_map(
+    f = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(data_axes), P(), P()),
         out_specs=P(data_axes), check_vma=False,
@@ -134,7 +135,7 @@ def _tp_single_site_step(env, gamma_l, lam, key, config, axis,
         # born: must sum split-K partials before squaring.
         temp = jax.lax.psum_scatter(temp_partial, axis,
                                     scatter_dimension=1, tiled=True)  # (N, χ/p₂, d)
-        p2 = jax.lax.axis_size(axis)
+        p2 = axis_size(axis)
         idx = jax.lax.axis_index(axis)
         lam_shard = jax.lax.dynamic_slice_in_dim(
             lam, idx * (lam.shape[0] // p2), lam.shape[0] // p2)
@@ -227,7 +228,7 @@ def _tp_double_site_pair(env, gamma_odd_l, lam_odd, gamma_even_r, lam_even,
 
     # --- even site: Γ split on the right bond; local GEMM, no collective ----
     temp_loc = _contract(env_full, gamma_even_r, config)   # (N, χ/p₂, d) exact slice
-    p2 = jax.lax.axis_size(axis)
+    p2 = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     lam_shard = jax.lax.dynamic_slice_in_dim(
         lam_even, idx * (lam_even.shape[0] // p2), lam_even.shape[0] // p2)
@@ -332,7 +333,7 @@ def multilevel_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
                 body, env, (gammas_l, lambdas, jnp.arange(M, dtype=jnp.int32)))
             return samples.T                     # (N_local, M)
 
-        f = jax.shard_map(
+        f = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(d_axes), P(None, m_axis, None, None), P()),
             out_specs=P(d_axes), check_vma=False,
@@ -369,7 +370,7 @@ def multilevel_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
                 (godd_l, lamo, geven_r, lame, jnp.arange(M // 2, dtype=jnp.int32)))
             return samples.reshape(M, n_local).T
 
-        f = jax.shard_map(
+        f = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(d_axes), P(None, m_axis, None, None), P(),
                       P(None, None, m_axis, None), P()),
@@ -378,6 +379,183 @@ def multilevel_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
         return f(dp_keys, g_odd, lam_odd, g_even, lam_even)
 
     raise ValueError(f"unknown scheme {pconfig.scheme!r}")
+
+
+# ---------------------------------------------------------------------------
+# Segment runner (streaming engine data plane, paper §3.1 + §3.3.2)
+#
+# ``multilevel_sample`` above assumes the whole stacked Γ is a device
+# operand.  The streaming engine instead walks the chain in fixed-size
+# segments; this entry point runs ONE contiguous segment under any DP×TP
+# placement, carrying the full (N, χ) left environment between calls.  All
+# PRNG draws use fold_in(base_key, global_site), so a segmented walk is
+# bit-identical to the corresponding single-shot schedule:
+#   dp        ≡ dp_sample / multilevel_sample("dp")
+#   tp_single ≡ multilevel_sample("tp_single")
+#   tp_double ≡ multilevel_sample("tp_double")
+# ``start_site`` is a traced operand and the jitted shard_map callable is
+# cached per (mesh, pconfig, config), so every equally-shaped segment
+# reuses one compilation regardless of its chain offset.
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _segment_callable(mesh: Mesh, pconfig: ParallelConfig,
+                      config: SamplerConfig):
+    """Build the cached shard_map program for one segment of the chain.
+
+    Key data (not typed key arrays) crosses the shard_map boundary — typed
+    PRNG keys do not survive shard_map partitioning on jax 0.4.x (same
+    workaround as ``baseline19_sample``).
+    """
+    from repro.core import sampler as S
+
+    d_axes, m_axis = pconfig.data_axes, pconfig.model_axis
+
+    if pconfig.scheme == "dp":
+
+        def shard_fn(keys_local, env_l, gammas, lambdas, start_r):
+            base = jax.random.wrap_key_data(keys_local[0].astype(jnp.uint32))
+            L = gammas.shape[0]
+
+            def body(carry, xs):
+                g, lam, i = xs
+                st, (smp, _) = S.site_step(
+                    S.SamplerState(carry[0], base, carry[1]),
+                    (g, lam, i), config)
+                return (st.env, st.log_scale), smp
+
+            zero_ls = jnp.zeros((env_l.shape[0],),
+                                dtype=precision.real_dtype_of(env_l.dtype))
+            sites = start_r + jnp.arange(L, dtype=jnp.int32)
+            (env_out, _), samples = jax.lax.scan(
+                body, (env_l, zero_ls), (gammas, lambdas, sites))
+            return samples, env_out               # (L, N_local), (N_local, χ)
+
+        return jax.jit(shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(d_axes), P(d_axes), P(), P(), P()),
+            out_specs=(P(None, d_axes), P(d_axes)), check_vma=False,
+        ))
+
+    if pconfig.scheme == "tp_single":
+        measure_first = (pconfig.measure_first
+                         and config.semantics == "linear")
+
+        def shard_fn(keys_local, env_l, gammas_l, lambdas, start_r):
+            base = jax.random.wrap_key_data(keys_local[0].astype(jnp.uint32))
+            L = gammas_l.shape[0]
+            sites = start_r + jnp.arange(L, dtype=jnp.int32)
+
+            if measure_first:
+                # per-site measure-first operator W — identical per-site
+                # arithmetic to multilevel_sample, so segmenting preserves
+                # bit-identity for the tp-3 path too
+                w_l = jnp.einsum("mlrs,mr->mls",
+                                 gammas_l.astype(jnp.float32),
+                                 lambdas.astype(jnp.float32))
+
+                def body(env_c, xs):
+                    g, w, i = xs
+                    k = jax.random.fold_in(base, i)
+                    env_c, smp = _tp_single_site_step_measure_first(
+                        env_c, g, w, k, config, m_axis,
+                        wire_dtype=pconfig.wire_dtype)
+                    return env_c, smp
+
+                env_out, samples = jax.lax.scan(
+                    body, env_l, (gammas_l, w_l, sites))
+                return samples, env_out
+
+            def body(env_c, xs):
+                g, lam, i = xs
+                k = jax.random.fold_in(base, i)
+                env_c, smp = _tp_single_site_step(
+                    env_c, g, lam, k, config, m_axis,
+                    wire_dtype=pconfig.wire_dtype)
+                return env_c, smp
+
+            env_out, samples = jax.lax.scan(
+                body, env_l, (gammas_l, lambdas, sites))
+            return samples, env_out
+
+        return jax.jit(shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(d_axes), P(d_axes, m_axis),
+                      P(None, m_axis, None, None), P(), P()),
+            out_specs=(P(None, d_axes), P(d_axes, m_axis)), check_vma=False,
+        ))
+
+    if pconfig.scheme == "tp_double":
+
+        def shard_fn(keys_local, env_l, godd_l, lamo, geven_r, lame, start_r):
+            base = jax.random.wrap_key_data(keys_local[0].astype(jnp.uint32))
+            n_pairs = godd_l.shape[0]
+
+            def body(env_c, xs):
+                go, lo, ge, le, j = xs
+                kp = (jax.random.fold_in(base, start_r + 2 * j),
+                      jax.random.fold_in(base, start_r + 2 * j + 1))
+                env_c, (so, se) = _tp_double_site_pair(
+                    env_c, go, lo, ge, le, kp, config, m_axis,
+                    wire_dtype=pconfig.wire_dtype)
+                return env_c, jnp.stack([so, se])
+
+            env_out, samples = jax.lax.scan(
+                body, env_l,
+                (godd_l, lamo, geven_r, lame,
+                 jnp.arange(n_pairs, dtype=jnp.int32)))
+            return samples.reshape(2 * n_pairs, env_l.shape[0]), env_out
+
+        return jax.jit(shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(d_axes), P(d_axes, m_axis),
+                      P(None, m_axis, None, None), P(),
+                      P(None, None, m_axis, None), P(), P()),
+            out_specs=(P(None, d_axes), P(d_axes, m_axis)), check_vma=False,
+        ))
+
+    raise ValueError(f"segment runner has no scheme {pconfig.scheme!r}")
+
+
+def sample_segment(mesh: Mesh, mps: MPS, env: Array, key: Array,
+                   start_site: Array | int,
+                   pconfig: ParallelConfig = ParallelConfig(),
+                   config: SamplerConfig = SamplerConfig()
+                   ) -> tuple[Array, Array]:
+    """Run sites [start, start+L) of the chain from a full environment.
+
+    mps holds only the segment's L site tensors; returns
+    (samples (L, N) int32 site-major, env' (N, χ)).
+    """
+    d_axes, m_axis = pconfig.data_axes, pconfig.model_axis
+    p1 = 1
+    for ax in d_axes:
+        p1 *= mesh.shape[ax]
+    n_samples, chi = env.shape
+    assert n_samples % p1 == 0, (n_samples, p1)
+    if pconfig.scheme != "dp":
+        p2 = mesh.shape[m_axis]
+        assert chi % p2 == 0, (chi, p2)
+    start = jnp.asarray(start_site, dtype=jnp.int32)
+    dp_keys = jax.random.key_data(jax.random.split(key, p1))  # (p1, key_size)
+    f = _segment_callable(mesh, pconfig, config)
+
+    if pconfig.scheme in ("dp", "tp_single"):
+        return f(dp_keys, env, mps.gammas, mps.lambdas, start)
+    if pconfig.scheme == "tp_double":
+        assert mps.n_sites % 2 == 0, \
+            "double-site segments need an even site count"
+        return f(dp_keys, env, mps.gammas[0::2], mps.lambdas[0::2],
+                 mps.gammas[1::2], mps.lambdas[1::2], start)
+    raise ValueError(f"segment runner has no scheme {pconfig.scheme!r}")
+
+
+def segment_env_init(n_samples: int, chi: int, gamma_dtype) -> Array:
+    """Boundary environment for site 0: one-hot row 0, full (unsharded) view.
+    TP shards slice it — shard 0 holds the hot column, others zeros —
+    matching ``multilevel_sample``'s per-shard initialisation exactly."""
+    env = jnp.zeros((n_samples, chi), dtype=_env_dtype(gamma_dtype))
+    return env.at[:, 0].set(1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -453,7 +631,7 @@ def baseline19_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
         rows = jnp.arange(n1) + i
         return emitted[rows][None]          # (1, n1, N1)
 
-    f = jax.shard_map(
+    f = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(pipeline_axis), P(pipeline_axis), P(None, pipeline_axis)),
         out_specs=P(pipeline_axis), check_vma=False,

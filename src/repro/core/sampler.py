@@ -130,20 +130,23 @@ def site_step(state: SamplerState, site: tuple[Array, Array, Array],
     return SamplerState(new_env, key, log_scale + dlog), (samples, stats)
 
 
-@partial(jax.jit, static_argnames=("config", "start_site"))
+@partial(jax.jit, static_argnames=("config",))
 def sample_chain(mps: MPS, state: SamplerState,
                  config: SamplerConfig = SamplerConfig(),
-                 start_site: int = 0) -> SampleResult:
+                 start_site: Array | int = 0) -> SampleResult:
     """Run the full chain with a scan over stacked sites.
 
     ``start_site`` offsets the fold_in site indices so a resumed chain draws
-    the exact randoms the uninterrupted chain would have drawn.
+    the exact randoms the uninterrupted chain would have drawn.  It is a
+    *traced* argument: the streaming engine calls this once per fixed-size
+    segment with varying offsets and reuses a single compilation.
     """
     def body(carry, site):
         carry, (s, st) = site_step(carry, site, config)
         return carry, (s, st)
 
-    sites = jnp.arange(start_site, start_site + mps.n_sites, dtype=jnp.int32)
+    sites = (jnp.asarray(start_site, dtype=jnp.int32)
+             + jnp.arange(mps.n_sites, dtype=jnp.int32))
     state, (samples, stats) = jax.lax.scan(
         body, state, (mps.gammas, mps.lambdas, sites))
     return SampleResult(samples, state, stats)

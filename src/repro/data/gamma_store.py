@@ -7,16 +7,30 @@ paper's FP16-storage trick, halving I/O and broadcast bytes) and a one-slot
 prefetch thread; ``get(i)`` returns site i (upcast to the compute dtype) and
 immediately schedules site i+1.
 
-This is the host-side path for MPS chains too big for device memory; the
-all-in-memory path simply stacks Γ and ``lax.scan``s over it.
+Two consumers build on the per-site path:
+
+* the all-in-memory sampler simply stacks Γ and ``lax.scan``s over it;
+* the streaming engine (``repro.engine``) walks the chain in fixed-size
+  *segments* — :meth:`prefetch_segment` schedules a whole segment on the
+  worker thread, :meth:`get_segment` blocks until it is read and returns the
+  stacked host arrays, and :meth:`get_segment_on_device` additionally hands
+  the buffers to the accelerator (``jax.device_put``) so the transfer of
+  segment k+1 overlaps the contraction of segment k.
+
+``get(i)`` never re-reads a site whose prefetch is already in flight: it
+blocks on the worker's result queue instead (the old fall-back issued a
+duplicate synchronous read and leaked the prefetched copy into
+``_prefetched`` forever — asserted against in tests/test_gamma_store.py).
 """
 from __future__ import annotations
 
 import os
 import queue
 import threading
+import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,19 +43,27 @@ class GammaStore:
         self.compute_dtype = compute_dtype
         os.makedirs(root, exist_ok=True)
         self._prefetched: dict[int, np.ndarray] = {}
+        self._inflight: set[int] = set()
+        self._lock = threading.Lock()
         self._queue: "queue.Queue[Optional[int]]" = queue.Queue()
         self._results: "queue.Queue[tuple[int, np.ndarray]]" = queue.Queue()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
         self.io_bytes = 0          # instrumentation for the benches
+        self.io_seconds = 0.0      # worker+sync read wall time
+        self._n_sites = sum(1 for f in os.listdir(root)
+                            if f.startswith("site_") and f.endswith(".npz"))
 
     # -- write path ---------------------------------------------------------
     def put(self, i: int, gamma: np.ndarray, lam: np.ndarray) -> None:
+        fresh = not os.path.exists(self._path(i))
         g16 = np.asarray(jnp.asarray(gamma).astype(self.storage_dtype))
         np.savez(self._path(i), gamma=g16.view(np.uint16)
                  if g16.dtype.itemsize == 2 else g16,
                  gshape=np.array(gamma.shape), lam=np.asarray(lam),
                  two_byte=np.array(g16.dtype.itemsize == 2))
+        if fresh:
+            self._n_sites += 1
 
     def write_mps(self, mps) -> None:
         for i in range(mps.n_sites):
@@ -51,16 +73,34 @@ class GammaStore:
     def _path(self, i: int) -> str:
         return os.path.join(self.root, f"site_{i:06d}.npz")
 
+    @property
+    def n_sites(self) -> int:
+        """Cached count (kept current by put()) — a listdir per call would be
+        O(M) filenames on every segment walk of an M-site chain."""
+        return self._n_sites
+
+    def meta(self, i: int = 0) -> tuple[int, ...]:
+        """Γ shape of site i from the npz header — no tensor payload read."""
+        with np.load(self._path(i)) as z:
+            return tuple(int(x) for x in z["gshape"])
+
     def _read(self, i: int):
+        t0 = time.perf_counter()
         with np.load(self._path(i)) as z:
             raw, lam = z["gamma"], z["lam"]
-            self.io_bytes += raw.nbytes + lam.nbytes
+            nbytes = raw.nbytes + lam.nbytes
             if bool(z["two_byte"]):
                 g = jnp.asarray(raw.view(np.uint16)).view(self.storage_dtype)
                 g = g.reshape(tuple(z["gshape"]))
             else:
                 g = jnp.asarray(raw)
-        return np.asarray(g.astype(self.compute_dtype)), lam
+        out = np.asarray(g.astype(self.compute_dtype)), lam
+        # the worker thread and a caller's synchronous fall-back read can
+        # race here — unsynchronized += would lose counts
+        with self._lock:
+            self.io_bytes += nbytes
+            self.io_seconds += time.perf_counter() - t0
+        return out
 
     def _worker(self):
         while True:
@@ -73,28 +113,86 @@ class GammaStore:
                 self._results.put((i, e))
 
     def prefetch(self, i: int) -> None:
+        with self._lock:
+            if i in self._inflight or i in self._prefetched:
+                return
+            self._inflight.add(i)
         self._queue.put(i)
+
+    def prefetch_segment(self, start: int, length: int) -> None:
+        """Schedule sites [start, start+length) on the worker thread."""
+        for i in range(start, min(start + length, self.n_sites)):
+            self.prefetch(i)
+
+    def _drain(self, block: bool) -> bool:
+        """Move one worker result into ``_prefetched``; True if one arrived."""
+        try:
+            j, payload = self._results.get(block=block,
+                                           timeout=60.0 if block else None)
+        except queue.Empty:
+            if block:
+                raise TimeoutError("prefetch worker stalled >60s")
+            return False
+        with self._lock:
+            self._inflight.discard(j)
+            self._prefetched[j] = payload
+        return True
 
     def get(self, i: int, prefetch_next: bool = True):
         """Blocking read of site i (served from the prefetch buffer when the
-        background thread already has it); schedules i+1."""
-        hit = self._prefetched.pop(i, None)
-        while hit is None:
-            try:
-                j, payload = self._results.get_nowait()
-            except queue.Empty:
+        background thread already has it); schedules i+1.
+
+        If a prefetch for i is *in flight*, block on the worker's result
+        instead of issuing a duplicate synchronous read — each site is read
+        from disk exactly once along a sequential walk.
+        """
+        while True:
+            with self._lock:
+                hit = self._prefetched.pop(i, None)
+                wait = i in self._inflight
+            if hit is not None:
                 break
-            if j == i:
-                hit = payload
-            else:
-                self._prefetched[j] = payload
-        if hit is None:
-            hit = self._read(i)
+            if wait:
+                self._drain(block=True)
+                continue
+            if not self._drain(block=False):
+                hit = self._read(i)
+                break
         if isinstance(hit, Exception):
             raise hit
         if prefetch_next and os.path.exists(self._path(i + 1)):
             self.prefetch(i + 1)
         return hit
 
+    def get_segment(self, start: int, length: int,
+                    prefetch_next_segment: bool = True):
+        """Blocking stacked read of sites [start, start+length):
+        returns (gammas (L, χ, χ, d), lambdas (L, χ)) host arrays.
+
+        Schedules the *next* segment on the worker before collecting this one
+        so a segment-striding consumer always has the next buffer in flight.
+        """
+        stop = min(start + length, self.n_sites)
+        self.prefetch_segment(start, stop - start)
+        if prefetch_next_segment:
+            self.prefetch_segment(stop, length)
+        gs, ls = [], []
+        for i in range(start, stop):
+            g, lam = self.get(i, prefetch_next=False)
+            gs.append(g)
+            ls.append(lam)
+        return np.stack(gs), np.stack(ls)
+
+    def get_segment_on_device(self, start: int, length: int,
+                              prefetch_next_segment: bool = True,
+                              device=None):
+        """Segment read + device hand-off: the returned jax arrays are already
+        on (or being transferred to) the accelerator.  ``device_put`` is
+        asynchronous, so callers can overlap this transfer with compute on the
+        previous segment simply by calling this from a background thread."""
+        g, lam = self.get_segment(start, length, prefetch_next_segment)
+        return jax.device_put(g, device), jax.device_put(lam, device)
+
     def close(self):
         self._queue.put(None)
+        self._thread.join()

@@ -1,0 +1,12 @@
+"""Streaming multi-level sampling engine (paper §3.1 + §3.3.2 composed).
+
+The first subsystem where every layer of the paper's design runs together:
+segment-streamed chains (GammaStore double-buffered I/O), the jitted scan
+data plane (one compilation per segment shape), DP×TP placement, mid-chain
+checkpointing, and the perfmodel-driven planner.
+"""
+from repro.engine.planner import explain_plan, plan_stream
+from repro.engine.streaming import StreamPlan, StreamingEngine, stream_sample
+
+__all__ = ["StreamPlan", "StreamingEngine", "stream_sample",
+           "plan_stream", "explain_plan"]

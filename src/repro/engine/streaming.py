@@ -1,0 +1,311 @@
+"""Segment-streamed MPS sampling with compute/I-O overlap (paper §3.1, §3.3.2).
+
+The in-memory sampler requires the entire stacked Γ as a device operand —
+at 8,176 sites and χ=10⁴ that is impossible.  This engine splits the chain
+into fixed-size site *segments* and, while the jitted scan contracts
+segment k, a background thread reads segment k+1 from :class:`GammaStore`
+(bf16 on disk → fp32 upcast) and starts its host→device transfer
+(``device_put`` is asynchronous), so Γ I/O is hidden behind compute exactly
+as in the paper's data-parallel revival.  At most **two** segments are ever
+device-resident (current + next); consumed buffers are explicitly deleted.
+
+Every level of the framework composes behind :meth:`StreamingEngine.sample`:
+
+* ``inmem`` scheme — the single-process ``core/sampler`` scan; bit-identical
+  to ``sampler.sample`` for the same seed (``micro_batch=None``) or to
+  ``sampler.sample_batched`` (``micro_batch=N₂``).
+* ``dp`` / ``tp_single`` / ``tp_double`` — the ``core/parallel`` segment
+  runner; bit-identical to the corresponding ``multilevel_sample`` schedule.
+* per-segment checkpointing through ``checkpoint/sampler_state`` — a killed
+  run resumes mid-chain and emits bit-identical samples (paper §4.1).
+* macro batches (paper N₁) as idempotent :class:`WorkQueue` work items —
+  :meth:`StreamingEngine.run_queue`.
+
+All segments run through ONE jit compilation: ``start_site`` is a traced
+operand, and the chain tail is padded to the segment length with *identity
+sites* (Γ = I on outcome 0, Λ = 1) whose draws are discarded — an identity
+site leaves the environment, its rescale factors, and every real site's
+PRNG stream untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.sampler_state import (load_sampler_state,
+                                            save_sampler_state)
+from repro.core import parallel as PP
+from repro.core import sampler as S
+from repro.core.mps import MPS
+from repro.core.precision import real_dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """How to walk the chain.  Produced by ``engine.planner.plan_stream``."""
+    segment_len: int                    # sites per device-resident segment
+    scheme: str = "inmem"               # "inmem" | "dp" | "tp_single" | "tp_double"
+    micro_batch: Optional[int] = None   # N₂ (inmem only); None = one batch
+    checkpoint_every: int = 0           # segments between checkpoints; 0 = off
+
+
+def identity_sites(n: int, chi: int, d: int, dtype) -> tuple[np.ndarray,
+                                                             np.ndarray]:
+    """n pad sites that are exact no-ops for the chain walk: Γ[l,r,s] =
+    δ_lr·δ_s0 keeps the environment fixed and puts all probability mass on
+    outcome 0; Λ = 1 keeps born-semantics collapse factors at unity."""
+    g = np.zeros((n, chi, chi, d), dtype=dtype)
+    g[:, :, :, 0] = np.eye(chi)
+    lam = np.ones((n, chi), dtype=np.zeros(1, dtype).real.dtype)
+    return g, lam
+
+
+@partial(jax.jit, static_argnames=("config", "n_micro"))
+def _micro_segment(mps: MPS, env, log_scale, base_key, start_site,
+                   config: S.SamplerConfig, n_micro: int):
+    """One segment under §3.1 micro-batching: chunk c carries key
+    split(base, n_micro)[c] for the whole chain, matching
+    ``sampler.sample_batched`` draw-for-draw."""
+    n, chi = env.shape
+    n2 = n // n_micro
+    keys = jax.random.split(base_key, n_micro)
+
+    def one(xs):
+        k, e, ls = xs
+        res = S.sample_chain(mps, S.SamplerState(e, k, ls), config,
+                             start_site=start_site)
+        return res.samples, res.state.env, res.state.log_scale
+
+    samples, env2, ls2 = jax.lax.map(
+        one, (keys, env.reshape(n_micro, n2, chi),
+              log_scale.reshape(n_micro, n2)))
+    samples = jnp.transpose(samples, (1, 0, 2)).reshape(-1, n)  # (L, N)
+    return samples, env2.reshape(n, chi), ls2.reshape(n)
+
+
+class StreamingEngine:
+    """Drives a chain stored in a :class:`GammaStore` through any DP×TP
+    placement, never holding more than two Γ segments on device."""
+
+    def __init__(self, store, *, semantics: str = "linear",
+                 config: S.SamplerConfig = S.SamplerConfig(),
+                 plan: StreamPlan = StreamPlan(segment_len=64),
+                 mesh=None, pconfig: Optional[PP.ParallelConfig] = None,
+                 checkpoint_dir: Optional[str] = None):
+        self.store = store
+        self.n_sites = store.n_sites
+        if self.n_sites == 0:
+            raise ValueError(f"empty GammaStore at {store.root}")
+        shape = store.meta(0)             # header-only: no Γ payload read
+        self.chi, self.d = shape[0], shape[2]
+        self.gamma_dtype = np.dtype(store.compute_dtype)
+        self.semantics = semantics
+        self.config = config
+        self.plan = plan
+        if plan.scheme != "inmem":
+            if mesh is None:
+                raise ValueError(f"scheme {plan.scheme!r} needs a mesh")
+            if plan.micro_batch is not None:
+                raise ValueError("micro_batch composes with the inmem scheme "
+                                 "only (DP/TP shard the batch instead)")
+        self.mesh = mesh
+        self.pconfig = pconfig or PP.ParallelConfig(scheme=plan.scheme)
+        self.checkpoint_dir = checkpoint_dir
+        if checkpoint_dir:
+            os.makedirs(checkpoint_dir, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._live_lock = threading.Lock()
+        self._live = 0
+        self.stats = {"segments": 0, "io_wait_s": 0.0, "compute_s": 0.0,
+                      "max_live_segments": 0, "store_io_s": 0.0,
+                      "io_bytes": 0, "io_hidden_frac": 0.0}
+
+    # -- segment fetch (runs on the pool thread) ----------------------------
+    def _fetch(self, start: int) -> tuple[jax.Array, jax.Array, int]:
+        L = self.plan.segment_len
+        g, lam = self.store.get_segment(start, L, prefetch_next_segment=True)
+        real = g.shape[0]
+        if real < L:                      # tail: pad with identity sites
+            gp, lp = identity_sites(L - real, self.chi, self.d, g.dtype)
+            g = np.concatenate([g, gp], axis=0)
+            lam = np.concatenate([lam, lp.astype(lam.dtype)], axis=0)
+        gd, ld = jax.device_put(g), jax.device_put(lam)    # async transfer
+        with self._live_lock:
+            self._live += 1
+            self.stats["max_live_segments"] = max(
+                self.stats["max_live_segments"], self._live)
+        return gd, ld, real
+
+    def _release(self, gd: jax.Array, ld: jax.Array) -> None:
+        gd.delete()
+        ld.delete()
+        with self._live_lock:
+            self._live -= 1
+
+    # -- one segment of the data plane --------------------------------------
+    def _run_segment(self, seg: MPS, env, log_scale, key, start: int):
+        if self.plan.scheme == "inmem":
+            if self.plan.micro_batch is not None:
+                n_micro = env.shape[0] // self.plan.micro_batch
+                return _micro_segment(seg, env, log_scale, key, start,
+                                      self.config, n_micro)
+            res = S.sample_chain(seg, S.SamplerState(env, key, log_scale),
+                                 self.config, start_site=start)
+            return res.samples, res.state.env, res.state.log_scale
+        samples, env = PP.sample_segment(self.mesh, seg, env, key, start,
+                                         self.pconfig, self.config)
+        return samples, env, log_scale
+
+    def _load_sample_blocks(self, up_to_site: int) -> list[np.ndarray]:
+        """Read back the per-segment sample blocks covering [0, up_to_site)."""
+        blocks, cursor = [], 0
+        names = sorted(f for f in os.listdir(self.checkpoint_dir)
+                       if f.startswith("samples_") and f.endswith(".npy"))
+        for fn in names:
+            offset = int(fn[len("samples_"):-len(".npy")])
+            if offset >= up_to_site:
+                break
+            assert offset == cursor, (offset, cursor)   # contiguous prefix
+            blk = np.load(os.path.join(self.checkpoint_dir, fn))
+            blocks.append(blk)
+            cursor += blk.shape[0]
+        assert cursor == up_to_site, (cursor, up_to_site)
+        return blocks
+
+    # -- driver --------------------------------------------------------------
+    def sample(self, n_samples: int, key: jax.Array, *, resume: bool = False,
+               stop_after_segments: Optional[int] = None) -> np.ndarray:
+        """Walk the whole chain; returns (N, M) int32 outcomes.
+
+        ``resume=True`` continues from the newest checkpoint in
+        ``checkpoint_dir`` (bit-identical to the uninterrupted run);
+        ``stop_after_segments`` simulates a mid-run kill for tests — the
+        engine checkpoints the boundary state and returns the partial
+        (N, sites_done) block.
+        """
+        L = self.plan.segment_len
+        M_sites = self.n_sites
+        if self.plan.micro_batch is not None:
+            assert n_samples % self.plan.micro_batch == 0, \
+                (n_samples, self.plan.micro_batch)
+
+        start = 0
+        done: list[np.ndarray] = []       # site-major (L_i, N) blocks
+        persisted = 0                     # blocks already written to disk
+        env = PP.segment_env_init(n_samples, self.chi, self.gamma_dtype)
+        log_scale = jnp.zeros((n_samples,),
+                              dtype=real_dtype_of(env.dtype))
+        if resume:
+            if not self.checkpoint_dir:
+                raise ValueError("resume=True needs a checkpoint_dir")
+            site, state, _ = load_sampler_state(self.checkpoint_dir)
+            # the engine only checkpoints segment boundaries (or chain end)
+            assert site % L == 0 or site == M_sites, (site, L)
+            # a mismatched key would silently produce a chimera batch
+            # (prefix from the checkpoint's seed, suffix from the caller's)
+            assert jnp.array_equal(jax.random.key_data(key),
+                                   jax.random.key_data(state.key)), \
+                "resume key does not match the checkpointed run"
+            start, env, key, log_scale = (site, state.env, state.key,
+                                          state.log_scale)
+            done = self._load_sample_blocks(site)
+            persisted = len(done)
+
+        if start >= M_sites:              # resumed from a finished run
+            return np.concatenate(done, axis=0).T.astype(np.int32)
+
+        fut: Future = self._pool.submit(self._fetch, start)
+        seg_idx = 0
+        while start < M_sites:
+            t0 = time.perf_counter()
+            gd, ld, real = fut.result()
+            self.stats["io_wait_s"] += time.perf_counter() - t0
+            nxt = start + real
+            if nxt < M_sites:             # double buffer: fetch k+1 now
+                fut = self._pool.submit(self._fetch, nxt)
+
+            t0 = time.perf_counter()
+            seg = MPS(gd, ld, self.semantics)
+            samples, env, log_scale = self._run_segment(
+                seg, env, log_scale, key, start)
+            samples = np.asarray(samples[:real])      # drop identity pads
+            jax.block_until_ready((env, log_scale))
+            self.stats["compute_s"] += time.perf_counter() - t0
+            self._release(gd, ld)
+            done.append(samples)
+            self.stats["segments"] += 1
+            start = nxt
+            seg_idx += 1
+
+            stopping = (stop_after_segments is not None
+                        and seg_idx >= stop_after_segments
+                        and start < M_sites)
+            ckpt_due = (self.plan.checkpoint_every
+                        and seg_idx % self.plan.checkpoint_every == 0)
+            if self.checkpoint_dir and (ckpt_due or stopping):
+                # samples live in per-segment block files written exactly
+                # once each — re-serializing the cumulative history every
+                # segment would make total checkpoint I/O quadratic in M
+                site_cursor = start - sum(b.shape[0] for b in done[persisted:])
+                for blk in done[persisted:]:
+                    np.save(os.path.join(self.checkpoint_dir,
+                                         f"samples_{site_cursor:06d}.npy"),
+                            blk)
+                    site_cursor += blk.shape[0]
+                persisted = len(done)
+                save_sampler_state(
+                    self.checkpoint_dir, start,
+                    S.SamplerState(env, key, log_scale),
+                    np.zeros((0, n_samples), dtype=np.int32))
+            if stopping:
+                if nxt < M_sites:     # drain the prefetch we no longer need,
+                    gd, ld, _ = fut.result()   # or its buffers leak and the
+                    self._release(gd, ld)      # ≤2-live-segments bound breaks
+                break
+
+        self.stats["store_io_s"] = self.store.io_seconds
+        self.stats["io_bytes"] = self.store.io_bytes
+        if self.store.io_seconds > 0:
+            hidden = max(0.0, self.store.io_seconds - self.stats["io_wait_s"])
+            self.stats["io_hidden_frac"] = hidden / self.store.io_seconds
+        return np.concatenate(done, axis=0).T.astype(np.int32)
+
+    def run_queue(self, queue, per_batch: int, base_key: jax.Array,
+                  worker: str = "engine") -> dict[int, np.ndarray]:
+        """Macro batches (paper N₁) as engine work items: batch b is fully
+        determined by fold_in(base_key, b), so the queue's elasticity /
+        restart guarantees (runtime/elastic.py) hold verbatim — completed
+        batches are never recomputed and results are owner-independent."""
+        out: dict[int, np.ndarray] = {}
+        while (b := queue.claim(worker)) is not None:
+            out[b] = self.sample(per_batch, jax.random.fold_in(base_key, b))
+            queue.complete(b)
+        return out
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+        self.store.close()
+
+
+def stream_sample(store, n_samples: int, key: jax.Array, *,
+                  semantics: str = "linear",
+                  config: S.SamplerConfig = S.SamplerConfig(),
+                  plan: Optional[StreamPlan] = None,
+                  mesh=None, pconfig=None) -> np.ndarray:
+    """One-shot convenience wrapper: stream the whole chain once."""
+    plan = plan or StreamPlan(segment_len=min(64, store.n_sites))
+    eng = StreamingEngine(store, semantics=semantics, config=config,
+                          plan=plan, mesh=mesh, pconfig=pconfig)
+    try:
+        return eng.sample(n_samples, key)
+    finally:
+        eng._pool.shutdown(wait=True)

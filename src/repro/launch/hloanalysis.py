@@ -208,20 +208,29 @@ def _dot_flops(instr: Instr, comp: Computation,
     n_res = 1
     for s in rshape:
         n_res *= s
-    # contracting dims from the lhs operand
+    # contracting dims from the lhs operand.  Newer XLA prints operands with
+    # their types inline — "dot(f32[64,128]{1,0} %Arg_0, ...)" — so prefer the
+    # inline shape; fall back to a by-name lookup for the old untyped form.
     mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
-    tail = instr.line.split(f"{instr.opcode}(")[-1]
-    ops = re.match(r"\s*%?([\w\.\-]+)", tail)
+    tail = instr.line.split(f"{instr.opcode}(")[-1].lstrip()
     contract = 1
-    if mdims and ops:
-        lhs = comp.find(ops.group(1))
-        lhs_type = lhs.type_str if lhs else param_types.get(ops.group(1), "")
-        shapes = _parse_shapes(lhs_type)
-        if shapes:
-            _, lshape = shapes[0]
-            for d in (int(x) for x in mdims.group(1).split(",") if x):
-                if d < len(lshape):
-                    contract *= lshape[d]
+    lshape: Optional[tuple[int, ...]] = None
+    tm = _SHAPE_RE.match(tail)
+    if tm and tm.group(1) in DTYPE_BYTES:
+        lshape = (tuple(int(x) for x in tm.group(2).split(","))
+                  if tm.group(2) else ())
+    else:
+        ops = re.match(r"\s*%?([\w\.\-]+)", tail)
+        if ops:
+            lhs = comp.find(ops.group(1))
+            lhs_type = lhs.type_str if lhs else param_types.get(ops.group(1), "")
+            shapes = _parse_shapes(lhs_type)
+            if shapes:
+                lshape = shapes[0][1]
+    if mdims and lshape is not None:
+        for d in (int(x) for x in mdims.group(1).split(",") if x):
+            if d < len(lshape):
+                contract *= lshape[d]
     flops = 2.0 * n_res * contract
     if dt in ("c64", "c128"):
         flops *= 4.0

@@ -8,12 +8,17 @@ samples (paper §4.1).
 Usage:
   PYTHONPATH=src python -m repro.launch.sample --sites 64 --chi 64 \
       --samples 4096 --macro-batches 4 --scheme dp --out /tmp/gbs
+
+Streaming mode (chains too big for device memory, paper §3.1/§3.3.2):
+  PYTHONPATH=src python -m repro.launch.sample --sites 512 --chi 64 \
+      --samples 4096 --stream --store /tmp/gbs_gamma --segment-len 64
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import shutil
 import time
 
 import jax
@@ -24,6 +29,9 @@ from repro.core import dynamic_bond as DB
 from repro.core import mps as M
 from repro.core import parallel as PP
 from repro.core import sampler as S
+from repro.core.perfmodel import TPU_V5E, Workload
+from repro.data.gamma_store import GammaStore
+from repro.engine import StreamPlan, StreamingEngine, explain_plan, plan_stream
 from repro.launch.mesh import make_host_mesh
 from repro.runtime.elastic import WorkQueue
 
@@ -43,6 +51,12 @@ def main() -> None:
     ap.add_argument("--precision", default="fp64",
                     choices=["fp64", "fp32", "mxu_bf16"])
     ap.add_argument("--out", default="/tmp/fastmps_out")
+    ap.add_argument("--stream", action="store_true",
+                    help="segment-streamed engine (Γ from --store, §3.1)")
+    ap.add_argument("--store", default=None,
+                    help="GammaStore dir; built from the synthetic MPS if empty")
+    ap.add_argument("--segment-len", type=int, default=0,
+                    help="sites per streamed segment (0 = perfmodel planner)")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
@@ -51,8 +65,16 @@ def main() -> None:
 
     dtype = jnp.float64 if args.precision == "fp64" else jnp.float32
     compute = jnp.bfloat16 if args.precision == "mxu_bf16" else None
-    mps = M.gbs_like_mps(jax.random.key(args.seed), args.sites, args.chi,
-                         args.d, dtype=jnp.float64).astype(dtype)
+
+    def build_mps():
+        return M.gbs_like_mps(jax.random.key(args.seed), args.sites,
+                              args.chi, args.d,
+                              dtype=jnp.float64).astype(dtype)
+
+    # streaming mode reads Γ from the store — only materialize the full
+    # in-memory chain when a path actually consumes it (that is the point
+    # of streaming: the chain may not fit in host memory at all)
+    mps = None if args.stream else build_mps()
     scfg = S.SamplerConfig(compute_dtype=compute)
     pcfg = PP.ParallelConfig(scheme=args.scheme)
 
@@ -73,11 +95,55 @@ def main() -> None:
                                           args.chi}))
         print("table1:", DB.table1_metrics(prof, args.chi))
 
+    engine = None
+    if args.stream:
+        assert not args.dynamic_bond, "--stream composes with uniform χ only"
+        assert args.scheme != "baseline19", "--stream has no [19] pipeline"
+        root = args.store or os.path.join(args.out, "gamma_store")
+        compute = {"fp64": jnp.float64, "fp32": jnp.float32,
+                   "mxu_bf16": jnp.float32}[args.precision]
+        store = GammaStore(root, compute_dtype=compute)
+        if store.n_sites == 0:
+            print(f"writing Γ store ({args.sites} sites) to {root}")
+            store.write_mps(build_mps())
+        if args.segment_len:
+            plan = StreamPlan(segment_len=args.segment_len,
+                              scheme=args.scheme, checkpoint_every=1)
+        else:
+            import dataclasses as _dc
+            w = Workload(n_samples=args.samples, n_sites=args.sites,
+                         chi=args.chi, d=args.d, macro_batch=per_batch,
+                         micro_batch=per_batch)
+            plan = plan_stream(w, TPU_V5E, p1=len(jax.devices())
+                               // args.model_parallel, p2=args.model_parallel,
+                               checkpoint_every=1)
+            if plan.scheme != args.scheme:
+                # the planner sizes segments; the requested schedule wins
+                print(f"planner suggested scheme {plan.scheme!r}; "
+                      f"honouring --scheme {args.scheme!r}")
+                # argparse schemes are all parallel → N₂ is inmem-only
+                plan = _dc.replace(plan, scheme=args.scheme, micro_batch=None)
+            print("plan:", explain_plan(plan, w, TPU_V5E))
+        engine = StreamingEngine(
+            store, config=scfg, plan=plan,
+            mesh=mesh if plan.scheme != "inmem" else None,
+            pconfig=PP.ParallelConfig(plan.scheme)
+            if plan.scheme != "inmem" else None)
+
     base = jax.random.key(args.seed + 1)
     t0 = time.perf_counter()
     while (b := queue.claim("driver")) is not None:
         kb = jax.random.fold_in(base, b)
-        if args.dynamic_bond:
+        if engine is not None:
+            # one checkpoint dir per macro batch: a mid-batch kill resumes
+            # from the last segment boundary instead of restarting the chain
+            ck = os.path.join(args.out, "chain_ckpt", f"batch_{b:05d}")
+            engine.checkpoint_dir = ck
+            os.makedirs(ck, exist_ok=True)
+            partial = any(f.startswith("site_") for f in os.listdir(ck))
+            out = engine.sample(per_batch, kb, resume=partial)
+            shutil.rmtree(ck, ignore_errors=True)   # batch_*.npy is durable
+        elif args.dynamic_bond:
             out = DB.sample_staged(mps, buck, per_batch, kb, scfg)
         else:
             out = PP.multilevel_sample(mesh, mps, per_batch, kb, pcfg, scfg)
@@ -85,6 +151,10 @@ def main() -> None:
                 np.asarray(out).astype(np.int8))
         queue.complete(b)
         print(f"macro batch {b} done ({per_batch} samples)", flush=True)
+    if engine is not None:
+        print("streaming stats:", {k: (round(v, 4) if isinstance(v, float)
+                                       else v) for k, v in engine.stats.items()})
+        engine.close()
 
     # merge + stats
     allb = [np.load(os.path.join(args.out, f"batch_{b:05d}.npy"))

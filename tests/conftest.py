@@ -5,13 +5,40 @@ reference precision).  Device count is NOT forced here — smoke tests and
 benches must see the real single CPU device; multi-device behaviour is
 tested via subprocesses (tests/test_parallel.py) and the dry-run sets its
 own XLA_FLAGS.
+
+Session-scoped MPS fixtures: building a random MPS is cheap, but sharing
+one set of *shapes* across tests keeps the jit cache warm — prefer these
+over per-test ``random_*_mps`` calls when the test doesn't need a bespoke
+shape.  The fast tier-1 path skips the heavyweight system/model tests:
+
+    PYTHONPATH=src python -m pytest -x -q -m "not slow"
 """
 import jax
 import pytest
 
 jax.config.update("jax_enable_x64", True)
 
+from repro.core import mps as M  # noqa: E402
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.key(0)
+
+
+@pytest.fixture(scope="session")
+def linear_mps_small():
+    """(M, χ, d) = (6, 4, 3) linear-semantics chain — the default oracle."""
+    return M.random_linear_mps(jax.random.key(0), 6, 4, 3)
+
+
+@pytest.fixture(scope="session")
+def linear_mps_10x6():
+    """(10, 6, 3) chain, big enough for multi-segment streaming walks."""
+    return M.random_linear_mps(jax.random.key(0), 10, 6, 3)
+
+
+@pytest.fixture(scope="session")
+def born_mps_6x4():
+    """(6, 4, 2) complex Born-semantics chain."""
+    return M.random_born_mps(jax.random.key(2), 6, 4, 2)

@@ -55,9 +55,9 @@ def test_load_missing_raises(tmp_path):
         store.load_checkpoint(str(tmp_path / "nope"), {"x": jnp.zeros(1)})
 
 
-def test_sampler_resume_exact(tmp_path):
+def test_sampler_resume_exact(tmp_path, linear_mps_10x6):
     """Paper §4.1: same seeds ⇒ same samples across a crash/restart."""
-    mps = M.random_linear_mps(jax.random.key(0), 10, 4, 3)
+    mps = linear_mps_10x6
     cfg = S.SamplerConfig()
     state0 = S.init_state(mps, 32, jax.random.key(9), cfg)
     full = S.sample_chain(mps, state0, cfg)

@@ -1,5 +1,6 @@
 """Dynamic bond dimensions (paper §3.4.2, Table 1)."""
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,6 +53,7 @@ def test_single_stage_equals_uniform_sampler():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_multi_stage_runs_and_is_valid():
     mps = M.gbs_like_mps(jax.random.key(2), 12, 16, 3)
     prof = DB.area_law_profile(12, chi_max=16, n_photon=1.0)
@@ -61,6 +63,7 @@ def test_multi_stage_runs_and_is_valid():
     assert int(out.min()) >= 0 and int(out.max()) < 3
 
 
+@pytest.mark.slow
 def test_staged_distribution_close_on_low_rank_state():
     """On a state whose true bond rank ≤ the bucket, truncation is lossless:
     build a χ=8 MPS that actually has rank 4 on the edge bonds."""

@@ -1,0 +1,182 @@
+"""Streaming engine: segment-streamed chains ≡ the in-memory paths.
+
+The engine's contract (paper §3.1 + §4.1): for the same seed and Γ, a
+segment-streamed walk is bit-identical to the all-in-memory scan, holds at
+most two Γ segments on device, and survives a mid-chain kill exactly.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import mps as M
+from repro.core import sampler as S
+from repro.core.perfmodel import Hardware, Workload, choose_tp_scheme
+from repro.data.gamma_store import GammaStore
+from repro.engine import (StreamPlan, StreamingEngine, explain_plan,
+                          plan_stream, stream_sample)
+from repro.engine.streaming import identity_sites
+from repro.runtime.elastic import WorkQueue
+
+
+@pytest.fixture(scope="module")
+def chain(tmp_path_factory, linear_mps_10x6):
+    """A 10-site chain written once to disk (fp64: no storage rounding, so
+    the in-memory MPS is the exact reference)."""
+    root = str(tmp_path_factory.mktemp("gamma"))
+    store = GammaStore(root, storage_dtype=jnp.float64,
+                       compute_dtype=jnp.float64)
+    store.write_mps(linear_mps_10x6)
+    store.close()
+    return root, linear_mps_10x6
+
+
+def _store(root):
+    return GammaStore(root, storage_dtype=jnp.float64,
+                      compute_dtype=jnp.float64)
+
+
+@pytest.mark.parametrize("segment_len", [4, 5, 16])
+def test_stream_bitexact_vs_inmemory(chain, segment_len):
+    """Remainder segments (4: 4+4+2), exact division (5), and a single
+    padded over-long segment (16 > M) all reproduce sample() exactly."""
+    root, mps = chain
+    key = jax.random.key(3)
+    ref = np.asarray(S.sample(mps, 24, key))
+    eng = StreamingEngine(_store(root),
+                          plan=StreamPlan(segment_len=segment_len))
+    out = eng.sample(24, key)
+    assert np.array_equal(out, ref)
+    assert eng.stats["max_live_segments"] <= 2
+    eng.close()
+
+
+def test_stream_reads_each_site_once_per_walk(chain):
+    root, mps = chain
+    store = _store(root)
+    eng = StreamingEngine(store, plan=StreamPlan(segment_len=4))
+    eng.sample(8, jax.random.key(0))
+    per_site = mps.gammas[0].size * 8 + mps.lambdas[0].size * 8
+    # the constructor's metadata probe is header-only — exactly one payload
+    # read per site for the whole walk
+    assert store.io_bytes == mps.n_sites * per_site
+    eng.close()
+
+
+def test_micro_batched_stream_matches_sample_batched(chain):
+    root, mps = chain
+    key = jax.random.key(9)
+    ref = np.asarray(S.sample_batched(mps, 24, key, micro_batch=8))
+    eng = StreamingEngine(_store(root),
+                          plan=StreamPlan(segment_len=4, micro_batch=8))
+    out = eng.sample(24, key)
+    assert np.array_equal(out, ref)
+    eng.close()
+
+
+def test_kill_and_resume_bitexact(chain, tmp_path):
+    root, mps = chain
+    key = jax.random.key(11)
+    ref = np.asarray(S.sample(mps, 16, key))
+    plan = StreamPlan(segment_len=4, checkpoint_every=1)
+
+    crashed = StreamingEngine(_store(root), plan=plan,
+                              checkpoint_dir=str(tmp_path))
+    part = crashed.sample(16, key, stop_after_segments=2)
+    assert part.shape == (16, 8)                 # 2 of 3 segments done
+    assert np.array_equal(part, ref[:, :8])
+    crashed.close()
+
+    resumed = StreamingEngine(_store(root), plan=plan,
+                              checkpoint_dir=str(tmp_path))
+    out = resumed.sample(16, key, resume=True)
+    assert np.array_equal(out, ref)
+    assert resumed.stats["segments"] == 1        # only the remaining work
+    # checkpoint-per-segment must not accumulate the chain's history
+    ckpts = [f for f in tmp_path.iterdir() if f.suffix == ".npz"]
+    assert len(ckpts) <= 3
+    resumed.close()
+
+
+def test_workqueue_macro_batches_idempotent(chain):
+    """Macro batches as engine work items: batch = f(seed, id) exactly as
+    runtime/elastic.py requires, so results are owner/order-independent."""
+    root, mps = chain
+    base = jax.random.key(21)
+    eng = StreamingEngine(_store(root), plan=StreamPlan(segment_len=5))
+    q = WorkQueue(3)
+    outs = eng.run_queue(q, 8, base)
+    assert q.finished
+    for b in range(3):
+        ref = np.asarray(S.sample(mps, 8, jax.random.fold_in(base, b)))
+        assert np.array_equal(outs[b], ref)
+    eng.close()
+
+
+def test_born_semantics_stream(tmp_path, born_mps_6x4):
+    mps = born_mps_6x4
+    store = GammaStore(str(tmp_path), storage_dtype=jnp.complex128,
+                       compute_dtype=jnp.complex128)
+    store.write_mps(mps)
+    key = jax.random.key(2)
+    cfg = S.SamplerConfig(semantics="born")
+    ref = np.asarray(S.sample(mps, 16, key, cfg))
+    out = stream_sample(store, 16, key, semantics="born", config=cfg,
+                        plan=StreamPlan(segment_len=4))
+    assert np.array_equal(out, ref)
+    store.close()
+
+
+def test_identity_pad_sites_are_noops():
+    g, lam = identity_sites(2, 4, 3, np.float64)
+    assert g.shape == (2, 4, 4, 3) and lam.shape == (2, 4)
+    env = np.array([[0.2, 0.5, 0.1, 0.0]])
+    temp = np.einsum("nl,lrs->nrs", env, g[0])
+    np.testing.assert_array_equal(temp[:, :, 0], env)   # outcome 0 = identity
+    np.testing.assert_array_equal(temp[:, :, 1:], 0.0)  # others impossible
+
+
+# ---------------------------------------------------------------------------
+# Planner (perfmodel-driven)
+# ---------------------------------------------------------------------------
+
+def _wl(**kw):
+    base = dict(n_samples=80_000, n_sites=512, chi=128, d=3,
+                macro_batch=20_000, micro_batch=5_000)
+    base.update(kw)
+    return Workload(**base)
+
+
+def test_planner_segment_shrinks_with_budget():
+    hw = Hardware()
+    w = _wl()
+    big = plan_stream(w, hw, device_budget=16e9)
+    small = plan_stream(w, hw, device_budget=1e9)
+    assert big.segment_len >= small.segment_len
+    assert small.segment_len >= 2
+    assert big.segment_len % 2 == 0 and small.segment_len % 2 == 0
+    assert big.segment_len <= w.n_sites
+
+
+def test_planner_raises_when_env_does_not_fit():
+    with pytest.raises(ValueError):
+        plan_stream(_wl(), Hardware(), device_budget=1e6)
+
+
+def test_planner_scheme_selection():
+    hw = Hardware()
+    w = _wl()
+    assert plan_stream(w, hw).scheme == "inmem"
+    assert plan_stream(w, hw, p1=4).scheme == "dp"
+    tp = plan_stream(w, hw, p2=4)
+    assert tp.scheme == "tp_" + choose_tp_scheme(w, hw, 4)
+    assert tp.micro_batch is None                 # N₂ is inmem-only
+
+
+def test_planner_micro_batch_passthrough():
+    plan = plan_stream(_wl(), Hardware(), device_budget=16e9)
+    assert plan.micro_batch == 5_000
+    info = explain_plan(plan, _wl(), Hardware())
+    assert info["io_overlapped"] == (info["t_compute_per_site_s"]
+                                     >= info["t_io_per_site_s"])
+    assert info["min_macro_batch_for_overlap"] > 0

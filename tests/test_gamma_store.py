@@ -46,6 +46,41 @@ def test_prefetch_chain(tmp_path):
     store.close()
 
 
+def test_prefetch_reads_each_site_exactly_once(tmp_path):
+    """Regression: an in-flight prefetch must be awaited, not re-read — a
+    sequential walk costs exactly one disk read per site."""
+    store = GammaStore(str(tmp_path), storage_dtype=jnp.float32)
+    mps = M.random_linear_mps(jax.random.key(4), 8, 4, 2, dtype=jnp.float32)
+    store.write_mps(mps)
+    per_site = int(mps.gammas[0].size * 4 + mps.lambdas[0].size * 4)
+    for i in range(8):
+        store.get(i)
+    assert store.io_bytes == 8 * per_site, (store.io_bytes, per_site)
+    # nothing leaked into the buffer besides the final scheduled site
+    assert set(store._prefetched) <= {8}
+    store.close()
+    assert not store._thread.is_alive()
+
+
+def test_segment_reads_and_device_handoff(tmp_path):
+    store = GammaStore(str(tmp_path), storage_dtype=jnp.bfloat16,
+                       compute_dtype=jnp.float32)
+    mps = M.random_linear_mps(jax.random.key(5), 10, 4, 3, dtype=jnp.float32)
+    store.write_mps(mps)
+    assert store.n_sites == 10
+    g, lam = store.get_segment(0, 4)
+    assert g.shape == (4, 4, 4, 3) and lam.shape == (4, 4)
+    gd, ld = store.get_segment_on_device(4, 4)
+    assert gd.shape == (4, 4, 4, 3) and ld.shape == (4, 4)
+    # tail segment is clipped to the chain end
+    g2, _ = store.get_segment(8, 4)
+    assert g2.shape[0] == 2
+    # every site read exactly once across the three segment calls:
+    # bf16 gamma (4·4·3·2 B) + f32 lambda (4·4 B) per site
+    assert store.io_bytes == 10 * (4 * 4 * 3 * 2 + 4 * 4)
+    store.close()
+
+
 def test_token_stream_restart_exact():
     bat = synthetic_token_stream(seed=3, vocab=100, batch=4, seq=16)
     a = bat(10)

@@ -113,6 +113,7 @@ def test_collapse_rescale():
     (2, 64, 8, 2, 32, False),
     (1, 64, 6, 1, 64, True),          # MQA
 ])
+@pytest.mark.slow
 def test_flash_attention_vs_ref(b, s, h, kvh, dh, causal):
     from repro.kernels.flash_attention import flash_attention
     q = jax.random.normal(jax.random.key(0), (b, s, h, dh), jnp.float32)
@@ -124,6 +125,7 @@ def test_flash_attention_vs_ref(b, s, h, kvh, dh, causal):
     np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=3e-6)
 
 
+@pytest.mark.slow
 def test_flash_attention_bf16():
     from repro.kernels.flash_attention import flash_attention
     q = jax.random.normal(jax.random.key(0), (1, 64, 4, 32), jnp.float32)

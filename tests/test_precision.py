@@ -60,6 +60,7 @@ def _long_decaying_chain(m=60, chi=4, d=3):
     return mps.astype(jnp.float32)
 
 
+@pytest.mark.slow
 def test_underflow_without_scaling_fig6():
     """No scaling → env hits exact 0 mid-chain (float32), draws degenerate."""
     mps = _long_decaying_chain()
@@ -82,6 +83,7 @@ def test_per_sample_scaling_survives_fig6():
     assert float(jnp.max(res.state.log_scale)) < 0.0   # decaying chain
 
 
+@pytest.mark.slow
 def test_per_sample_beats_global_range():
     """After per-sample rescale every sample is pinned to max 1; global
     scaling leaves an inter-sample spread that *grows with the chain length*

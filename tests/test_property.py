@@ -1,5 +1,7 @@
 """Property-based tests (hypothesis) for the system's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

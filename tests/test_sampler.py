@@ -35,8 +35,8 @@ def test_sampler_matches_enumeration(semantics, chi, m, d):
     assert tv < 4.0 * np.sqrt(d ** m / n), tv
 
 
-def test_sampler_deterministic_per_seed():
-    mps = M.random_linear_mps(jax.random.key(0), 6, 4, 3)
+def test_sampler_deterministic_per_seed(linear_mps_small):
+    mps = linear_mps_small
     a = S.sample(mps, 100, jax.random.key(5))
     b = S.sample(mps, 100, jax.random.key(5))
     c = S.sample(mps, 100, jax.random.key(6))
@@ -81,9 +81,9 @@ def test_mixed_precision_path_close_to_fp64():
     assert agree > 0.95, agree
 
 
-def test_resume_mid_chain_exact():
+def test_resume_mid_chain_exact(linear_mps_10x6):
     """Paper §4.1 seed-consistency: mid-chain restart reproduces the full run."""
-    mps = M.random_linear_mps(jax.random.key(0), 8, 4, 3)
+    mps = linear_mps_10x6
     cfg = S.SamplerConfig()
     state0 = S.init_state(mps, 32, jax.random.key(1), cfg)
     full = S.sample_chain(mps, state0, cfg)
@@ -95,9 +95,9 @@ def test_resume_mid_chain_exact():
     assert jnp.all(stitched == full.samples)
 
 
-def test_site_stats_shape():
-    mps = M.random_linear_mps(jax.random.key(0), 5, 4, 2)
+def test_site_stats_shape(linear_mps_small):
+    mps = linear_mps_small
     state = S.init_state(mps, 16, jax.random.key(1))
     res = S.sample_chain(mps, state)
-    assert res.site_stats.shape == (5, 3)
+    assert res.site_stats.shape == (6, 3)
     assert bool(jnp.all(jnp.isfinite(res.site_stats)))

@@ -1,5 +1,8 @@
 """Continuous-batching serving driver (launch/serve.py)."""
 import jax
+import pytest
+
+pytestmark = pytest.mark.slow
 import numpy as np
 
 from repro import configs

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.core import displacement as D
@@ -14,6 +15,7 @@ from repro.models import transformer as T
 from repro.optim import optimizers, schedule
 
 
+@pytest.mark.slow
 def test_gbs_pipeline_end_to_end(tmp_path):
     """MPS build → dynamic-χ stages → displaced sampling → correlations.
 
@@ -48,6 +50,7 @@ def test_gbs_pipeline_end_to_end(tmp_path):
     assert bool(jnp.all(jnp.isfinite(jnp.abs(disp))))
 
 
+@pytest.mark.slow
 def test_mini_lm_training_loss_decreases():
     """Train a tiny dense LM for 30 steps on a fixed synthetic batch —
     loss must drop (the end-to-end driver contract of launch/train.py)."""
@@ -66,6 +69,7 @@ def test_mini_lm_training_loss_decreases():
     assert losses[-1] < 0.7 * losses[0], losses[::10]
 
 
+@pytest.mark.slow
 def test_serve_batched_requests():
     """Batched greedy decode over a KV cache — the serving driver contract."""
     cfg = configs.get_smoke_config("deepseek-7b")
@@ -97,6 +101,7 @@ def test_multilevel_sampler_on_one_device_mesh():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
+@pytest.mark.slow
 def test_first_and_second_order_correlations_fig9():
     """Paper Fig. 9 a/c: 1st- and 2nd-order correlations of sampled outcomes
     match the exact enumeration (slope ≈ 1) at exact-oracle scale."""
