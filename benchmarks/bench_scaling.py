@@ -28,9 +28,11 @@ _CHILD = textwrap.dedent("""
     n = 256 * p                     # weak scaling: 256 samples per shard
 
     def run(g, lam, seed):
-        return PP.multilevel_sample(mesh, M.MPS(g, lam, "linear"), n,
-                                    jax.random.key(seed),
-                                    PP.ParallelConfig("dp"))
+        # internal data plane: this bench lowers the scheme program for HLO
+        # analysis, not the repro.api session orchestration
+        return PP._multilevel_sample(mesh, M.MPS(g, lam, "linear"), n,
+                                     jax.random.key(seed),
+                                     PP.ParallelConfig("dp"))
     c = jax.jit(run).lower(mps.gammas, mps.lambdas, 0).compile()
     cost = H.analyze(c.as_text())
     print(json.dumps({"wire": cost.collective_wire_bytes,

@@ -2,9 +2,10 @@
 
 The paper's §3.1 claim is that with a large enough macro batch, Γ I/O is
 fully hidden behind contraction.  This bench builds a chain whose stacked Γ
-*exceeds* a configurable device-memory budget, streams it with the engine
-(double-buffered GammaStore prefetch), and reports how much of the raw disk
-time was hidden behind compute:
+*exceeds* a configurable device-memory budget, streams it through a
+:class:`repro.api.SamplingSession` (streamed backend, double-buffered
+GammaStore prefetch), and reports how much of the raw disk time was hidden
+behind compute:
 
   io_hidden_frac = (store_io_s − io_wait_s) / store_io_s
 
@@ -17,7 +18,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import os
 import shutil
 import tempfile
 
@@ -26,11 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 import common
+from repro import api
 from repro.core import mps as M
-from repro.core import sampler as S
-from repro.core.perfmodel import TPU_V5E, Workload
 from repro.data.gamma_store import GammaStore
-from repro.engine import StreamPlan, StreamingEngine, explain_plan, plan_stream
 
 
 def main() -> None:
@@ -50,7 +48,7 @@ def main() -> None:
 
     # budget chosen so the stacked Γ does NOT fit: it covers the resident
     # environment + micro intermediate (Eq. 3) plus a quarter of the chain —
-    # the in-memory path would need all of stacked_bytes, the engine holds
+    # the in-memory path would need all of stacked_bytes, the session holds
     # only two segment buffers.
     stacked_bytes = sites * chi * chi * d * 8            # fp64 compute
     resident = (n * chi + n * chi * d) * 8
@@ -63,47 +61,47 @@ def main() -> None:
                            compute_dtype=jnp.float64)
         store.write_mps(mps)
 
-        w = Workload(n_samples=n, n_sites=sites, chi=chi, d=d,
-                     macro_batch=n, micro_batch=n)
-        if args.segment_len:
-            plan = StreamPlan(segment_len=args.segment_len)
-        else:
-            plan = plan_stream(w, TPU_V5E, compute_bytes=8,
-                               device_budget=budget)
-        info = explain_plan(plan, w, TPU_V5E, compute_bytes=8)
-        print(f"# chain {sites}x{chi} d={d}: stacked Γ {stacked_bytes/1e6:.1f} MB, "
-              f"budget {budget/1e6:.1f} MB → segment_len {plan.segment_len} "
-              f"({info['device_resident_bytes']/1e6:.1f} MB resident)")
-        assert 2 * plan.segment_len * chi * chi * d * 8 <= stacked_bytes, \
-            "bench must exercise a chain larger than its device buffers"
-
-        common.header()
-        eng = StreamingEngine(store, plan=plan)
+        config = api.SamplerConfig(
+            segment_len=args.segment_len or api.AUTO,
+            device_budget=budget)
         key = jax.random.key(1)
-        t = common.time_fn(eng.sample, n, key, warmup=1,
-                           iters=2 if args.smoke else 3)
-        st = eng.stats
-        common.emit("stream_total", t,
-                    f"io_hidden_frac={st['io_hidden_frac']:.3f}")
-        common.emit("stream_compute", st["compute_s"] / st["segments"],
-                    "per_segment")
-        common.emit("stream_io_wait", st["io_wait_s"] / st["segments"],
-                    "per_segment")
-        common.emit("stream_raw_disk", st["store_io_s"],
-                    f"bytes={st['io_bytes']}")
-        assert st["max_live_segments"] <= 2, st["max_live_segments"]
+        with api.SamplingSession(store, config) as session:
+            plan = session.plan(n)
+            info = session.explain(n)
+            print(f"# chain {sites}x{chi} d={d}: stacked Γ "
+                  f"{stacked_bytes/1e6:.1f} MB, budget {budget/1e6:.1f} MB "
+                  f"→ segment_len {plan.segment_len} "
+                  f"({info['device_resident_bytes']/1e6:.1f} MB resident)")
+            assert 2 * plan.segment_len * chi * chi * d * 8 <= stacked_bytes, \
+                "bench must exercise a chain larger than its device buffers"
 
-        # reference: the in-memory scan at bench scale (it still fits here —
-        # at paper scale it cannot; the ratio is the honest comparison)
-        t_mem = common.time_fn(
-            lambda: np.asarray(S.sample(mps, n, key)), warmup=1,
-            iters=2 if args.smoke else 3)
+            common.header()
+            t = common.time_fn(session.sample, n, key, warmup=1,
+                               iters=2 if args.smoke else 3)
+            st = session.stats
+            common.emit("stream_total", t,
+                        f"io_hidden_frac={st['io_hidden_frac']:.3f}")
+            common.emit("stream_compute", st["compute_s"] / st["segments"],
+                        "per_segment")
+            common.emit("stream_io_wait", st["io_wait_s"] / st["segments"],
+                        "per_segment")
+            common.emit("stream_raw_disk", st["store_io_s"],
+                        f"bytes={st['io_bytes']}")
+            assert st["max_live_segments"] <= 2, st["max_live_segments"]
+
+        # reference: the in-memory backend at bench scale (it still fits
+        # here — at paper scale it cannot; the ratio is the honest
+        # comparison)
+        with api.SamplingSession(mps) as session:
+            t_mem = common.time_fn(
+                lambda: session.sample(n, key), warmup=1,
+                iters=2 if args.smoke else 3)
         common.emit("inmem_total", t_mem,
                     f"stream_overhead={t / t_mem - 1.0:+.2%}")
-        print(f"# overlap: {st['io_hidden_frac']:.1%} of {st['store_io_s']*1e3:.1f} ms "
-              f"disk time hidden behind compute "
-              f"(visible wait {st['io_wait_s']*1e3:.1f} ms)")
-        eng.close()
+        print(f"# overlap: {st['io_hidden_frac']:.1%} of "
+              f"{st['store_io_s']*1e3:.1f} ms disk time hidden behind "
+              f"compute (visible wait {st['io_wait_s']*1e3:.1f} ms)")
+        store.close()
     finally:
         shutil.rmtree(root, ignore_errors=True)
 

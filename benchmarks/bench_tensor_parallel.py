@@ -31,9 +31,11 @@ _CHILD = textwrap.dedent("""
                               dtype=jnp.float32)
 
     def run(g, lam, seed):
-        return PP.multilevel_sample(mesh, M.MPS(g, lam, "linear"), N,
-                                    jax.random.key(seed),
-                                    PP.ParallelConfig(scheme))
+        # internal data plane: this bench lowers the scheme program for HLO
+        # analysis, not the repro.api session orchestration
+        return PP._multilevel_sample(mesh, M.MPS(g, lam, "linear"), N,
+                                     jax.random.key(seed),
+                                     PP.ParallelConfig(scheme))
     c = jax.jit(run).lower(mps.gammas, mps.lambdas, 0).compile()
     cost = H.analyze(c.as_text())
     print(json.dumps({

@@ -37,11 +37,13 @@ _CHILD = textwrap.dedent("""
             ts.append(time.perf_counter() - t0)
         return sorted(ts)[1], out
 
-    t_dp, s_dp = timed(lambda m: PP.multilevel_sample(
+    # the internal data-plane entry points: this bench times the jitted
+    # scheme programs themselves, not the repro.api session orchestration
+    t_dp, s_dp = timed(lambda m: PP._multilevel_sample(
         mesh, m, N, jax.random.key(9), PP.ParallelConfig("dp")))
     # n_macro = 8 so [19]'s macro-batch partition matches DP's 8 shards —
     # then both schemes emit bit-identical samples
-    t_19, s_19 = timed(lambda m: PP.baseline19_sample(
+    t_19, s_19 = timed(lambda m: PP._baseline19_sample(
         mesh, m, N, jax.random.key(9), n_macro=8))
     print(json.dumps({"t_dp": t_dp, "t_19": t_19,
                       "same": bool(jnp.all(s_dp == s_19))}))

@@ -1,6 +1,12 @@
-"""Quickstart: build an MPS, sample from it, validate against enumeration.
+"""Quickstart: build an MPS, sample through the unified API, validate.
 
     PYTHONPATH=src python examples/quickstart.py
+
+``repro.api.SamplingSession`` is the one front door: the same
+``session.sample(n, key)`` call serves every backend (in-memory /
+streamed), placement (seq / DP / TP), and χ-mode — this example uses the
+simplest cell (in-memory, sequential) and validates it against exact
+enumeration.
 """
 import jax
 
@@ -9,17 +15,20 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import api  # noqa: E402
 from repro.core import displacement as D  # noqa: E402
 from repro.core import mps as M  # noqa: E402
-from repro.core import sampler as S  # noqa: E402
 
 
 def main() -> None:
     # 1. a random 6-site, χ=8, d=3 MPS with the paper's "linear" semantics
     mps = M.random_linear_mps(jax.random.key(0), n_sites=6, chi=8, d=3)
 
-    # 2. draw 50k samples with the chain sampler (Fig. 1 + Alg. 1)
-    samples = S.sample(mps, 50_000, jax.random.key(1))
+    # 2. draw 50k samples through the session (Fig. 1 + Alg. 1); plan()
+    # shows how the config resolved (backend, scheme, batching)
+    with api.SamplingSession(mps) as session:
+        print("plan:", session.plan(50_000))
+        samples = session.sample(50_000, jax.random.key(1))
     print(f"samples: {samples.shape}  (N, M) outcomes in [0, d)")
 
     # 3. validate: empirical joint vs exact enumeration
@@ -34,11 +43,14 @@ def main() -> None:
     # draw the same outcomes as full fp32 for the vast majority of samples
     # — and critically, the *distribution* is preserved (per-sample scaling
     # keeps every row's dynamic range inside bf16's exponent budget).
+    # Precision is one config field; nothing else changes.
     mps32 = mps.astype(jnp.float32)
-    base32 = S.sample(mps32, 50_000, jax.random.key(1))
-    mx = S.sample(mps32, 50_000, jax.random.key(1),
-                  S.SamplerConfig(compute_dtype=jnp.bfloat16))
-    agree = float(jnp.mean(jnp.all(mx == base32, axis=1).astype(jnp.float32)))
+    with api.SamplingSession(mps32) as session:
+        base32 = session.sample(50_000, jax.random.key(1))
+    with api.SamplingSession(
+            mps32, api.SamplerConfig(compute_dtype=jnp.bfloat16)) as session:
+        mx = session.sample(50_000, jax.random.key(1))
+    agree = float(np.mean(np.all(mx == base32, axis=1)))
     print(f"bf16-MXU draws identical to fp32 draws: {agree:.1%} of samples")
     idx_mx = np.ravel_multi_index(np.asarray(mx).T, (3,) * 6)
     emp_mx = np.bincount(idx_mx, minlength=3 ** 6) / mx.shape[0]

@@ -1,0 +1,24 @@
+"""Unified sampling API — one front door for every FastMPS mode.
+
+One :class:`SamplingSession` call covers the whole design matrix
+{in-memory, streamed} × {seq, dp, tp_single, tp_double} × {fixed χ,
+dynamic χ} × {whole-batch, micro-batched}, with fault-tolerant macro
+batches and bit-exact mid-chain resume.  Backends are registry entries
+(:func:`register_backend`) — a new execution strategy never forks the
+driver, examples, or tests.
+
+The legacy entry points (``core.parallel.multilevel_sample``/``dp_sample``/
+``baseline19_sample`` and ``engine.stream_sample``) are deprecation-shimmed
+and will be removed one release after this facade; they emit
+``DeprecationWarning`` pointing here.
+"""
+from repro.api.backends import (Backend, SampleRequest, available_backends,
+                                get_backend, register_backend)
+from repro.api.config import (AUTO, SamplerConfig, SessionPlan, resolve_plan)
+from repro.api.session import SamplingSession
+
+__all__ = [
+    "AUTO", "Backend", "SampleRequest", "SamplerConfig", "SamplingSession",
+    "SessionPlan", "available_backends", "get_backend", "register_backend",
+    "resolve_plan",
+]

@@ -1,0 +1,172 @@
+"""Backend registry for :class:`repro.api.SamplingSession`.
+
+A *backend* executes one fully-resolved :class:`SessionPlan` against a
+chain source.  Two ship with the repo:
+
+* ``inmem``    — the whole stacked Γ is a device operand; routes to the
+  ``core/sampler`` scan (scheme ``seq``), the ``core/parallel`` multi-level
+  sampler (``dp``/``tp_*``/``baseline19``), ``dynamic_bond.sample_staged``
+  (seq + χ-profile), or a χ-stage loop over the segment runner
+  (dp/tp + χ-profile).
+* ``streamed`` — the ``engine.StreamingEngine`` walks the chain in
+  device-budgeted segments from a :class:`GammaStore` with double-buffered
+  prefetch, composing every one of the above levels plus per-segment
+  checkpointing and mid-chain resume.
+
+Adding a scheme or a new execution strategy is a registry entry::
+
+    @register_backend("my_backend")
+    class MyBackend(Backend):
+        name = "my_backend"
+        def sample(self, req: SampleRequest) -> np.ndarray: ...
+
+— sessions pick it up via ``SamplerConfig(backend="my_backend")``; nothing
+in the session/driver layer changes.
+
+Every backend honours the seed-consistency contract (paper §4.1): for one
+seed, every (backend × scheme) cell emits **bit-identical** samples —
+asserted in ``tests/test_api.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.api.config import SessionPlan
+
+_REGISTRY: dict[str, "Backend"] = {}
+
+
+def register_backend(name: str) -> Callable[[type], type]:
+    """Class decorator: instantiate and register a backend under ``name``."""
+    def deco(cls: type) -> type:
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def get_backend(name: str) -> "Backend":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"no backend {name!r} registered; "
+                         f"have {sorted(_REGISTRY)}") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+@dataclasses.dataclass
+class SampleRequest:
+    """Everything a backend needs for one ``sample()`` execution.
+
+    ``mps`` / ``store`` are zero-arg callables so a backend only pays the
+    materialization it actually uses (a streamed session never loads the
+    full chain; an in-memory session never writes a store).
+    """
+    plan: SessionPlan
+    n_samples: int
+    key: jax.Array
+    mesh: object
+    mps: Callable[[], object]
+    store: Callable[[], object]
+    resume: bool = False
+    checkpoint_dir: Optional[str] = None
+    stop_after_segments: Optional[int] = None
+    stats: dict = dataclasses.field(default_factory=dict)
+
+
+class Backend:
+    """One execution strategy for a resolved :class:`SessionPlan`."""
+    name = "abstract"
+
+    def sample(self, req: SampleRequest) -> np.ndarray:
+        raise NotImplementedError
+
+
+@register_backend("inmem")
+class InMemBackend(Backend):
+    """Whole-chain-on-device execution (paper §3.1–§3.2 in-memory paths)."""
+    name = "inmem"
+
+    def sample(self, req: SampleRequest) -> np.ndarray:
+        from repro.core import dynamic_bond as DB
+        from repro.core import parallel as PP
+        from repro.core import sampler as S
+        from repro.core.mps import MPS
+
+        plan, n, key = req.plan, req.n_samples, req.key
+        if req.resume:
+            raise ValueError("mid-chain resume needs the streamed backend "
+                             "(it owns the per-segment checkpoints)")
+        mps = req.mps()
+        cfg = plan.sampler_config
+
+        if plan.scheme == "seq":
+            if plan.stages is not None:
+                out = DB.sample_staged(mps, np.asarray(plan.chi_profile),
+                                       n, key, cfg)
+            elif plan.micro_batch is not None:
+                out = S.sample_batched(mps, n, key, plan.micro_batch, cfg)
+            else:
+                out = S.sample(mps, n, key, cfg)
+            return np.asarray(out)
+
+        if plan.scheme == "baseline19":
+            return np.asarray(PP._baseline19_sample(req.mesh, mps, n, key,
+                                                    cfg))
+
+        if plan.stages is None:
+            return np.asarray(PP._multilevel_sample(req.mesh, mps, n, key,
+                                                    plan.pconfig, cfg))
+
+        # dynamic χ under DP/TP: one segment-runner call per χ-stage, the
+        # environment sliced/padded at stage boundaries exactly as
+        # ``dynamic_bond.sample_staged`` does (shared ``fit_env``)
+        env = PP.segment_env_init(n, plan.stages[0][2], mps.gammas.dtype)
+        log_scale = None
+        blocks = []
+        for s0, s1, chi_s in plan.stages:
+            seg = MPS(mps.gammas[s0:s1, :chi_s, :chi_s, :],
+                      mps.lambdas[s0:s1, :chi_s], mps.semantics)
+            env = DB.fit_env(env, chi_s)
+            samples, env, log_scale = PP.sample_segment(
+                req.mesh, seg, env, key, s0, plan.pconfig, cfg,
+                log_scale=log_scale)
+            blocks.append(np.asarray(samples))
+        return np.concatenate(blocks, axis=0).T.astype(np.int32)
+
+
+@register_backend("streamed")
+class StreamedBackend(Backend):
+    """Segment-streamed execution through :class:`engine.StreamingEngine`."""
+    name = "streamed"
+
+    def sample(self, req: SampleRequest) -> np.ndarray:
+        from repro.engine.streaming import StreamingEngine, StreamPlan
+
+        plan = req.plan
+        store = req.store()
+        engine_scheme = "inmem" if plan.scheme == "seq" else plan.scheme
+        eng = StreamingEngine(
+            store, semantics=plan.semantics, config=plan.sampler_config,
+            plan=StreamPlan(segment_len=plan.segment_len,
+                            scheme=engine_scheme,
+                            micro_batch=plan.micro_batch,
+                            checkpoint_every=plan.checkpoint_every),
+            mesh=req.mesh if engine_scheme != "inmem" else None,
+            pconfig=plan.pconfig,
+            checkpoint_dir=req.checkpoint_dir,
+            chi_profile=plan.chi_profile)
+        try:
+            out = eng.sample(req.n_samples, req.key, resume=req.resume,
+                             stop_after_segments=req.stop_after_segments)
+            req.stats.update(eng.stats)
+            return out
+        finally:
+            # the store may be session-owned and serve further calls
+            eng.close(close_store=False)

@@ -70,6 +70,22 @@ def stages_from_profile(bucketed: np.ndarray) -> list[Stage]:
     return stages
 
 
+def fit_env(env: Array, chi: int) -> Array:
+    """Adapt a (N, χ_prev) environment to a stage with bond dimension χ.
+
+    χ shrink slices, χ growth zero-pads — valid because truncated bond
+    components carry (approximately) zero weight in an area-law state.  Every
+    consumer of a staged walk (``sample_staged``, the streaming engine, the
+    DP/TP stage loop in ``repro.api``) must use THIS function so stage
+    transitions stay bit-identical across backends and schemes.
+    """
+    if env.shape[1] > chi:
+        return env[:, :chi]
+    if env.shape[1] < chi:
+        return jnp.pad(env, ((0, 0), (0, chi - env.shape[1])))
+    return env
+
+
 def table1_metrics(profile: np.ndarray, chi_fixed: int) -> dict[str, float]:
     """The paper's Table 1 columns for a χ profile vs. a fixed-χ run."""
     prof = np.minimum(profile, chi_fixed).astype(np.float64)
@@ -109,13 +125,8 @@ def sample_staged(mps: MPS, bucketed: np.ndarray, n_samples: int, key: Array,
     outs = []
     site_offset = 0
     for sm in stage_mps:
-        chi = sm.chi
-        env = state.env
-        if env.shape[1] > chi:
-            env = env[:, :chi]
-        elif env.shape[1] < chi:
-            env = jnp.pad(env, ((0, 0), (0, chi - env.shape[1])))
-        state = sampler_mod.SamplerState(env, state.key, state.log_scale)
+        state = sampler_mod.SamplerState(fit_env(state.env, sm.chi),
+                                         state.key, state.log_scale)
         res = sampler_mod.sample_chain(sm, state, config, start_site=site_offset)
         state = res.state
         site_offset += sm.n_sites

@@ -31,6 +31,11 @@ Mesh layout (shared with the LM stack, see launch/mesh.py):
 All schemes draw identical randoms within a TP group (the key is replicated
 over "model"), so DP and both TP schedules produce bit-identical samples for
 the same seed — asserted in tests.
+
+This module is the *data plane*.  The supported application front door is
+:class:`repro.api.SamplingSession` — the public samplers here
+(``multilevel_sample`` / ``dp_sample`` / ``baseline19_sample``) remain as
+deprecation-shimmed legacy entry points for one release.
 """
 from __future__ import annotations
 
@@ -78,6 +83,49 @@ def _measure(temp: Array, lam: Array, semantics: str) -> Array:
     return jnp.sum(jnp.abs(scaled) ** 2, axis=1)
 
 
+def _tp_rescale(env: Array, mode: str, axis: Optional[str] = None
+                ) -> tuple[Array, Array]:
+    """Adaptive rescale of a (possibly bond-sharded) environment.
+
+    Mirrors ``precision.rescale`` with the max taken across the TP group
+    (``pmax`` over ``axis``) when the environment is sharded, so every shard
+    divides by the same factor.  Returns (env', per-sample log10 factor) —
+    the same diagnostic the in-memory path accumulates in
+    ``SamplerState.log_scale``.
+    """
+    rdt = precision.real_dtype_of(env.dtype)
+    n = env.shape[0]
+    if mode == "none":
+        return env, jnp.zeros((n,), dtype=rdt)
+    a = jnp.abs(env)
+    if mode == "per_sample":
+        m = jnp.max(a, axis=1, keepdims=True)
+        if axis is not None:
+            m = jax.lax.pmax(m, axis)
+        factor = jnp.where(m > 0, m, 1.0).astype(rdt)
+        return env / factor, jnp.log10(factor[:, 0])
+    if mode == "global":
+        m = jnp.max(a)
+        if axis is not None:
+            m = jax.lax.pmax(m, axis)
+        factor = jnp.where(m > 0, m, 1.0).astype(rdt)
+        return env / factor, jnp.broadcast_to(jnp.log10(factor), (n,))
+    raise ValueError(f"unknown scaling mode: {mode}")
+
+
+_LEGACY_NOTE = ("; it will be removed one release after the facade "
+                "(see examples/README.md)")
+
+
+def _warn_legacy(name: str) -> None:
+    import warnings
+    warnings.warn(
+        f"repro.core.parallel.{name} is a legacy entry point — construct a "
+        f"repro.api.SamplingSession instead (one session.sample() call "
+        f"routes to the same data plane){_LEGACY_NOTE}",
+        DeprecationWarning, stacklevel=3)
+
+
 # ---------------------------------------------------------------------------
 # Data parallel (shard samples over ("pod","data"); replicate Γ)
 # ---------------------------------------------------------------------------
@@ -85,7 +133,11 @@ def _measure(temp: Array, lam: Array, semantics: str) -> Array:
 def dp_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
               config: SamplerConfig = SamplerConfig(),
               data_axes: tuple[str, ...] = ("data",)) -> Array:
-    """Pure data-parallel sampling: each data shard runs the full chain."""
+    """Pure data-parallel sampling: each data shard runs the full chain.
+
+    Deprecated front door — use :class:`repro.api.SamplingSession`.
+    """
+    _warn_legacy("dp_sample")
     from repro.core import sampler as S
 
     n_shards = 1
@@ -115,7 +167,7 @@ def _tp_single_site_step(env, gamma_l, lam, key, config, axis,
                          wire_dtype=None):
     """One site with env (N, χ/p₂) and Γ sharded on the left bond.
 
-    Returns the new sharded env and the drawn samples.
+    Returns (new sharded env, per-sample log10 rescale factor, samples).
     """
     semantics = config.semantics
     dtype = env.dtype
@@ -144,13 +196,8 @@ def _tp_single_site_step(env, gamma_l, lam, key, config, axis,
         env_new = jnp.take_along_axis(
             temp, samples[:, None, None], axis=2)[:, :, 0] * lam_shard[None, :]
     # per-sample rescale: the max must be consistent across the TP group
-    if config.scaling == "per_sample":
-        m = jax.lax.pmax(jnp.max(jnp.abs(env_new), axis=1, keepdims=True), axis)
-        env_new = env_new / jnp.where(m > 0, m, 1.0)
-    elif config.scaling == "global":
-        m = jax.lax.pmax(jnp.max(jnp.abs(env_new)), axis)
-        env_new = env_new / jnp.where(m > 0, m, 1.0)
-    return env_new, samples
+    env_new, dlog = _tp_rescale(env_new, config.scaling, axis)
+    return env_new, dlog, samples
 
 
 def _collapse_select_xla(env, gamma_l, samples, config):
@@ -190,13 +237,8 @@ def _tp_single_site_step_measure_first(env, gamma_l, w_l, key, config, axis,
         collapsed = collapsed.astype(wire_dtype)
     env_new = jax.lax.psum_scatter(
         collapsed, axis, scatter_dimension=1, tiled=True).astype(dtype)
-    if config.scaling == "per_sample":
-        m = jax.lax.pmax(jnp.max(jnp.abs(env_new), axis=1, keepdims=True), axis)
-        env_new = env_new / jnp.where(m > 0, m, 1.0)
-    elif config.scaling == "global":
-        m = jax.lax.pmax(jnp.max(jnp.abs(env_new)), axis)
-        env_new = env_new / jnp.where(m > 0, m, 1.0)
-    return env_new, samples
+    env_new, dlog = _tp_rescale(env_new, config.scaling, axis)
+    return env_new, dlog, samples
 
 
 # ---------------------------------------------------------------------------
@@ -219,12 +261,8 @@ def _tp_double_site_pair(env, gamma_odd_l, lam_odd, gamma_even_r, lam_even,
     env_full = jnp.take_along_axis(temp, samples_odd[:, None, None], axis=2)[:, :, 0]
     if semantics == "born":
         env_full = env_full * lam_odd[None, :]
-    if config.scaling == "per_sample":
-        m = jnp.max(jnp.abs(env_full), axis=1, keepdims=True)
-        env_full = env_full / jnp.where(m > 0, m, 1.0)
-    elif config.scaling == "global":
-        m = jnp.max(jnp.abs(env_full))
-        env_full = env_full / jnp.where(m > 0, m, 1.0)
+    # full (replicated) environment: every shard computes the same max
+    env_full, dlog_odd = _tp_rescale(env_full, config.scaling)
 
     # --- even site: Γ split on the right bond; local GEMM, no collective ----
     temp_loc = _contract(env_full, gamma_even_r, config)   # (N, χ/p₂, d) exact slice
@@ -237,13 +275,8 @@ def _tp_double_site_pair(env, gamma_odd_l, lam_odd, gamma_even_r, lam_even,
     env_new = jnp.take_along_axis(temp_loc, samples_even[:, None, None], axis=2)[:, :, 0]
     if semantics == "born":
         env_new = env_new * lam_shard[None, :]
-    if config.scaling == "per_sample":
-        m = jax.lax.pmax(jnp.max(jnp.abs(env_new), axis=1, keepdims=True), axis)
-        env_new = env_new / jnp.where(m > 0, m, 1.0)
-    elif config.scaling == "global":
-        m = jax.lax.pmax(jnp.max(jnp.abs(env_new)), axis)
-        env_new = env_new / jnp.where(m > 0, m, 1.0)
-    return env_new, (samples_odd, samples_even)
+    env_new, dlog_even = _tp_rescale(env_new, config.scaling, axis)
+    return env_new, dlog_odd + dlog_even, (samples_odd, samples_even)
 
 
 # ---------------------------------------------------------------------------
@@ -267,135 +300,56 @@ class ParallelConfig:
     # operand VMEM-resident on TPU; the XLA fallback loops over the d
     # outcomes with a per-sample row mask).  Linear semantics only.
     measure_first: bool = False
+    # §3.1 micro batching N₂ *per data shard*: the chain walk runs over
+    # n_local/N₂ chunks with chunk keys split(shard_key, n_micro) — the
+    # exact ``sampler.sample_batched`` schedule — so the (N₂, χ, d)
+    # unmeasured intermediate is bounded under every DP/TP placement.
+    micro_batch: Optional[int] = None
+
+
+def _multilevel_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
+                       pconfig: ParallelConfig = ParallelConfig(),
+                       config: SamplerConfig = SamplerConfig()) -> Array:
+    """DP over samples × TP over χ.  Returns (N, M) outcomes.
+
+    The data plane is the segment runner below, run over the whole chain as
+    one segment — an in-memory call and a streamed walk therefore share one
+    code path (and one jit cache entry per shape).
+    """
+    if pconfig.scheme == "baseline19":
+        return _baseline19_sample(mesh, mps, n_samples, key, config,
+                                  pipeline_axis=pconfig.data_axes[-1])
+    if pconfig.scheme not in ("dp", "tp_single", "tp_double"):
+        raise ValueError(f"unknown scheme {pconfig.scheme!r}")
+    env = segment_env_init(n_samples, mps.chi, mps.gammas.dtype)
+    samples, _, _ = sample_segment(mesh, mps, env, key, 0, pconfig, config)
+    return samples.T
 
 
 def multilevel_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
                       pconfig: ParallelConfig = ParallelConfig(),
                       config: SamplerConfig = SamplerConfig()) -> Array:
-    """DP over samples × TP over χ.  Returns (N, M) outcomes."""
-    if pconfig.scheme == "dp":
-        return dp_sample(mesh, mps, n_samples, key, config, pconfig.data_axes)
-    if pconfig.scheme == "baseline19":
-        return baseline19_sample(mesh, mps, n_samples, key, config,
-                                 pipeline_axis=pconfig.data_axes[-1])
-
-    d_axes, m_axis = pconfig.data_axes, pconfig.model_axis
-    p1 = 1
-    for ax in d_axes:
-        p1 *= mesh.shape[ax]
-    p2 = mesh.shape[m_axis]
-    assert n_samples % p1 == 0
-    n_local = n_samples // p1
-    chi = mps.chi
-    assert chi % p2 == 0, (chi, p2)
-    M = mps.n_sites
-
-    dp_keys = jax.random.split(key, p1)    # replicated over "model"
-
-    if pconfig.scheme == "tp_single":
-        measure_first = pconfig.measure_first and config.semantics == "linear"
-
-        def shard_fn(keys_local, gammas_l, lambdas):
-            # local shapes: gammas_l (M, χ/p₂, χ, d); env (N_local, χ/p₂)
-            base = keys_local[0]
-            idx = jax.lax.axis_index(m_axis)
-            env = jnp.zeros((n_local, chi // p2),
-                            dtype=_env_dtype(mps.gammas.dtype))
-            env = jnp.where(idx == 0, env.at[:, 0].set(1.0), env)
-
-            if measure_first:
-                # per-site measure-first operator W (M, χ/p₂, d) — tiny
-                w_l = jnp.einsum("mlrs,mr->mls",
-                                 gammas_l.astype(jnp.float32),
-                                 lambdas.astype(jnp.float32))
-
-                def body(env, xs):
-                    g, w, i = xs
-                    k = jax.random.fold_in(base, i)
-                    env, s = _tp_single_site_step_measure_first(
-                        env, g, w, k, config, m_axis,
-                        wire_dtype=pconfig.wire_dtype)
-                    return env, s
-
-                _, samples = jax.lax.scan(
-                    body, env,
-                    (gammas_l, w_l, jnp.arange(M, dtype=jnp.int32)))
-                return samples.T
-
-            def body(env, xs):
-                g, lam, i = xs
-                k = jax.random.fold_in(base, i)   # same schedule as sampler.py
-                env, s = _tp_single_site_step(env, g, lam, k, config, m_axis,
-                                              wire_dtype=pconfig.wire_dtype)
-                return env, s
-
-            _, samples = jax.lax.scan(
-                body, env, (gammas_l, lambdas, jnp.arange(M, dtype=jnp.int32)))
-            return samples.T                     # (N_local, M)
-
-        f = shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(P(d_axes), P(None, m_axis, None, None), P()),
-            out_specs=P(d_axes), check_vma=False,
-        )
-        return f(dp_keys, mps.gammas, mps.lambdas)
-
-    if pconfig.scheme == "tp_double":
-        assert M % 2 == 0, "double-site schedule needs an even site count"
-        g_odd = mps.gammas[0::2]       # contracted first in each pair
-        g_even = mps.gammas[1::2]
-        lam_odd = mps.lambdas[0::2]
-        lam_even = mps.lambdas[1::2]
-
-        def shard_fn(keys_local, godd_l, lamo, geven_r, lame):
-            # godd_l (M/2, χ/p₂, χ, d) split on left bond;
-            # geven_r (M/2, χ, χ/p₂, d) split on right bond.
-            base = keys_local[0]
-            idx = jax.lax.axis_index(m_axis)
-            env = jnp.zeros((n_local, chi // p2),
-                            dtype=_env_dtype(mps.gammas.dtype))
-            env = jnp.where(idx == 0, env.at[:, 0].set(1.0), env)
-
-            def body(env, xs):
-                go, lo, ge, le, j = xs
-                kp = (jax.random.fold_in(base, 2 * j),
-                      jax.random.fold_in(base, 2 * j + 1))
-                env, (so, se) = _tp_double_site_pair(
-                    env, go, lo, ge, le, kp, config, m_axis,
-                    wire_dtype=pconfig.wire_dtype)
-                return env, jnp.stack([so, se])
-
-            _, samples = jax.lax.scan(
-                body, env,
-                (godd_l, lamo, geven_r, lame, jnp.arange(M // 2, dtype=jnp.int32)))
-            return samples.reshape(M, n_local).T
-
-        f = shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(P(d_axes), P(None, m_axis, None, None), P(),
-                      P(None, None, m_axis, None), P()),
-            out_specs=P(d_axes), check_vma=False,
-        )
-        return f(dp_keys, g_odd, lam_odd, g_even, lam_even)
-
-    raise ValueError(f"unknown scheme {pconfig.scheme!r}")
+    """Deprecated front door — use :class:`repro.api.SamplingSession`."""
+    _warn_legacy("multilevel_sample")
+    return _multilevel_sample(mesh, mps, n_samples, key, pconfig, config)
 
 
 # ---------------------------------------------------------------------------
-# Segment runner (streaming engine data plane, paper §3.1 + §3.3.2)
+# Segment runner (the shared DP×TP data plane, paper §3.1 + §3.3.2)
 #
-# ``multilevel_sample`` above assumes the whole stacked Γ is a device
-# operand.  The streaming engine instead walks the chain in fixed-size
-# segments; this entry point runs ONE contiguous segment under any DP×TP
-# placement, carrying the full (N, χ) left environment between calls.  All
-# PRNG draws use fold_in(base_key, global_site), so a segmented walk is
-# bit-identical to the corresponding single-shot schedule:
-#   dp        ≡ dp_sample / multilevel_sample("dp")
-#   tp_single ≡ multilevel_sample("tp_single")
-#   tp_double ≡ multilevel_sample("tp_double")
-# ``start_site`` is a traced operand and the jitted shard_map callable is
-# cached per (mesh, pconfig, config), so every equally-shaped segment
-# reuses one compilation regardless of its chain offset.
+# This entry point runs ONE contiguous segment of the chain under any DP×TP
+# placement, carrying the full (N, χ) left environment and the per-sample
+# ``log_scale`` diagnostic between calls.  ``_multilevel_sample`` is the
+# whole chain as a single segment; the streaming engine walks fixed-size
+# segments through the same callable.  All PRNG draws use
+# fold_in(base_key, global_site) — per micro chunk when
+# ``pconfig.micro_batch`` is set, with chunk keys split(shard_key, n_micro)
+# exactly as ``sampler.sample_batched`` — so a segmented walk is
+# bit-identical to the corresponding single-shot schedule.  ``start_site``
+# is a traced operand and the jitted shard_map callable is cached per
+# (mesh, pconfig, config), so every equally-shaped segment reuses one
+# compilation regardless of its chain offset (and a dynamic-χ walk costs
+# one compilation per χ bucket).
 # ---------------------------------------------------------------------------
 
 @lru_cache(maxsize=None)
@@ -410,108 +364,142 @@ def _segment_callable(mesh: Mesh, pconfig: ParallelConfig,
     from repro.core import sampler as S
 
     d_axes, m_axis = pconfig.data_axes, pconfig.model_axis
+    n2 = pconfig.micro_batch
+
+    def _with_micro(chain_fn, base, env_l, ls_l, L):
+        """§3.1 micro batching under any placement: run the shard's batch
+        through ``chain_fn`` whole, or as n_local/N₂ chunks with chunk keys
+        split(shard_key, n_micro) — the ``sampler.sample_batched`` schedule,
+        so DP/TP micro-batched walks match the in-memory batched sampler
+        draw-for-draw."""
+        if n2 is None:
+            return chain_fn(base, env_l, ls_l)
+        n_loc = env_l.shape[0]
+        n_micro = n_loc // n2
+        keys_c = jax.random.split(base, n_micro)
+
+        def one(xs):
+            k, e, ls = xs
+            return chain_fn(k, e, ls)
+
+        smp, env_o, ls_o = jax.lax.map(
+            one, (keys_c, env_l.reshape(n_micro, n2, -1),
+                  ls_l.reshape(n_micro, n2)))
+        samples = jnp.transpose(smp, (1, 0, 2)).reshape(L, n_loc)
+        return samples, env_o.reshape(n_loc, -1), ls_o.reshape(n_loc)
 
     if pconfig.scheme == "dp":
 
-        def shard_fn(keys_local, env_l, gammas, lambdas, start_r):
+        def shard_fn(keys_local, env_l, ls_l, gammas, lambdas, start_r):
             base = jax.random.wrap_key_data(keys_local[0].astype(jnp.uint32))
             L = gammas.shape[0]
-
-            def body(carry, xs):
-                g, lam, i = xs
-                st, (smp, _) = S.site_step(
-                    S.SamplerState(carry[0], base, carry[1]),
-                    (g, lam, i), config)
-                return (st.env, st.log_scale), smp
-
-            zero_ls = jnp.zeros((env_l.shape[0],),
-                                dtype=precision.real_dtype_of(env_l.dtype))
             sites = start_r + jnp.arange(L, dtype=jnp.int32)
-            (env_out, _), samples = jax.lax.scan(
-                body, (env_l, zero_ls), (gammas, lambdas, sites))
-            return samples, env_out               # (L, N_local), (N_local, χ)
+
+            def chain(k, e, ls):
+                def body(carry, xs):
+                    g, lam, i = xs
+                    st, (smp, _) = S.site_step(
+                        S.SamplerState(carry[0], k, carry[1]),
+                        (g, lam, i), config)
+                    return (st.env, st.log_scale), smp
+
+                (env_out, ls_out), samples = jax.lax.scan(
+                    body, (e, ls), (gammas, lambdas, sites))
+                return samples, env_out, ls_out   # (L, n), (n, χ), (n,)
+
+            return _with_micro(chain, base, env_l, ls_l, L)
 
         return jax.jit(shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(P(d_axes), P(d_axes), P(), P(), P()),
-            out_specs=(P(None, d_axes), P(d_axes)), check_vma=False,
+            in_specs=(P(d_axes), P(d_axes), P(d_axes), P(), P(), P()),
+            out_specs=(P(None, d_axes), P(d_axes), P(d_axes)),
+            check_vma=False,
         ))
 
     if pconfig.scheme == "tp_single":
         measure_first = (pconfig.measure_first
                          and config.semantics == "linear")
 
-        def shard_fn(keys_local, env_l, gammas_l, lambdas, start_r):
+        def shard_fn(keys_local, env_l, ls_l, gammas_l, lambdas, start_r):
             base = jax.random.wrap_key_data(keys_local[0].astype(jnp.uint32))
             L = gammas_l.shape[0]
             sites = start_r + jnp.arange(L, dtype=jnp.int32)
 
             if measure_first:
                 # per-site measure-first operator W — identical per-site
-                # arithmetic to multilevel_sample, so segmenting preserves
-                # bit-identity for the tp-3 path too
+                # arithmetic to the default schedule's probs, so the tp-3
+                # path stays bit-identical when segmented or micro-batched
                 w_l = jnp.einsum("mlrs,mr->mls",
                                  gammas_l.astype(jnp.float32),
                                  lambdas.astype(jnp.float32))
 
-                def body(env_c, xs):
-                    g, w, i = xs
-                    k = jax.random.fold_in(base, i)
-                    env_c, smp = _tp_single_site_step_measure_first(
-                        env_c, g, w, k, config, m_axis,
-                        wire_dtype=pconfig.wire_dtype)
-                    return env_c, smp
+                def chain(k, e, ls):
+                    def body(carry, xs):
+                        g, w, i = xs
+                        env_c, dlog, smp = _tp_single_site_step_measure_first(
+                            carry[0], g, w, jax.random.fold_in(k, i), config,
+                            m_axis, wire_dtype=pconfig.wire_dtype)
+                        return (env_c, carry[1] + dlog), smp
 
-                env_out, samples = jax.lax.scan(
-                    body, env_l, (gammas_l, w_l, sites))
-                return samples, env_out
+                    (env_out, ls_out), samples = jax.lax.scan(
+                        body, (e, ls), (gammas_l, w_l, sites))
+                    return samples, env_out, ls_out
+            else:
+                def chain(k, e, ls):
+                    def body(carry, xs):
+                        g, lam, i = xs
+                        env_c, dlog, smp = _tp_single_site_step(
+                            carry[0], g, lam, jax.random.fold_in(k, i),
+                            config, m_axis, wire_dtype=pconfig.wire_dtype)
+                        return (env_c, carry[1] + dlog), smp
 
-            def body(env_c, xs):
-                g, lam, i = xs
-                k = jax.random.fold_in(base, i)
-                env_c, smp = _tp_single_site_step(
-                    env_c, g, lam, k, config, m_axis,
-                    wire_dtype=pconfig.wire_dtype)
-                return env_c, smp
+                    (env_out, ls_out), samples = jax.lax.scan(
+                        body, (e, ls), (gammas_l, lambdas, sites))
+                    return samples, env_out, ls_out
 
-            env_out, samples = jax.lax.scan(
-                body, env_l, (gammas_l, lambdas, sites))
-            return samples, env_out
+            return _with_micro(chain, base, env_l, ls_l, L)
 
         return jax.jit(shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(P(d_axes), P(d_axes, m_axis),
+            in_specs=(P(d_axes), P(d_axes, m_axis), P(d_axes),
                       P(None, m_axis, None, None), P(), P()),
-            out_specs=(P(None, d_axes), P(d_axes, m_axis)), check_vma=False,
+            out_specs=(P(None, d_axes), P(d_axes, m_axis), P(d_axes)),
+            check_vma=False,
         ))
 
     if pconfig.scheme == "tp_double":
 
-        def shard_fn(keys_local, env_l, godd_l, lamo, geven_r, lame, start_r):
+        def shard_fn(keys_local, env_l, ls_l, godd_l, lamo, geven_r, lame,
+                     start_r):
             base = jax.random.wrap_key_data(keys_local[0].astype(jnp.uint32))
             n_pairs = godd_l.shape[0]
 
-            def body(env_c, xs):
-                go, lo, ge, le, j = xs
-                kp = (jax.random.fold_in(base, start_r + 2 * j),
-                      jax.random.fold_in(base, start_r + 2 * j + 1))
-                env_c, (so, se) = _tp_double_site_pair(
-                    env_c, go, lo, ge, le, kp, config, m_axis,
-                    wire_dtype=pconfig.wire_dtype)
-                return env_c, jnp.stack([so, se])
+            def chain(k, e, ls):
+                def body(carry, xs):
+                    go, lo, ge, le, j = xs
+                    kp = (jax.random.fold_in(k, start_r + 2 * j),
+                          jax.random.fold_in(k, start_r + 2 * j + 1))
+                    env_c, dlog, (so, se) = _tp_double_site_pair(
+                        carry[0], go, lo, ge, le, kp, config, m_axis,
+                        wire_dtype=pconfig.wire_dtype)
+                    return (env_c, carry[1] + dlog), jnp.stack([so, se])
 
-            env_out, samples = jax.lax.scan(
-                body, env_l,
-                (godd_l, lamo, geven_r, lame,
-                 jnp.arange(n_pairs, dtype=jnp.int32)))
-            return samples.reshape(2 * n_pairs, env_l.shape[0]), env_out
+                (env_out, ls_out), samples = jax.lax.scan(
+                    body, (e, ls),
+                    (godd_l, lamo, geven_r, lame,
+                     jnp.arange(n_pairs, dtype=jnp.int32)))
+                return (samples.reshape(2 * n_pairs, e.shape[0]),
+                        env_out, ls_out)
+
+            return _with_micro(chain, base, env_l, ls_l, 2 * n_pairs)
 
         return jax.jit(shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(P(d_axes), P(d_axes, m_axis),
+            in_specs=(P(d_axes), P(d_axes, m_axis), P(d_axes),
                       P(None, m_axis, None, None), P(),
                       P(None, None, m_axis, None), P(), P()),
-            out_specs=(P(None, d_axes), P(d_axes, m_axis)), check_vma=False,
+            out_specs=(P(None, d_axes), P(d_axes, m_axis), P(d_axes)),
+            check_vma=False,
         ))
 
     raise ValueError(f"segment runner has no scheme {pconfig.scheme!r}")
@@ -520,12 +508,16 @@ def _segment_callable(mesh: Mesh, pconfig: ParallelConfig,
 def sample_segment(mesh: Mesh, mps: MPS, env: Array, key: Array,
                    start_site: Array | int,
                    pconfig: ParallelConfig = ParallelConfig(),
-                   config: SamplerConfig = SamplerConfig()
-                   ) -> tuple[Array, Array]:
+                   config: SamplerConfig = SamplerConfig(),
+                   log_scale: Optional[Array] = None
+                   ) -> tuple[Array, Array, Array]:
     """Run sites [start, start+L) of the chain from a full environment.
 
     mps holds only the segment's L site tensors; returns
-    (samples (L, N) int32 site-major, env' (N, χ)).
+    (samples (L, N) int32 site-major, env' (N, χ), log_scale' (N,)).
+    ``log_scale`` is the accumulated per-sample log10 rescale factor —
+    diagnostic parity with the in-memory ``SamplerState.log_scale``;
+    ``None`` starts the carry at zero.
     """
     d_axes, m_axis = pconfig.data_axes, pconfig.model_axis
     p1 = 1
@@ -536,16 +528,22 @@ def sample_segment(mesh: Mesh, mps: MPS, env: Array, key: Array,
     if pconfig.scheme != "dp":
         p2 = mesh.shape[m_axis]
         assert chi % p2 == 0, (chi, p2)
+    if pconfig.micro_batch is not None:
+        assert (n_samples // p1) % pconfig.micro_batch == 0, \
+            (n_samples, p1, pconfig.micro_batch)
+    if log_scale is None:
+        log_scale = jnp.zeros((n_samples,),
+                              dtype=precision.real_dtype_of(env.dtype))
     start = jnp.asarray(start_site, dtype=jnp.int32)
     dp_keys = jax.random.key_data(jax.random.split(key, p1))  # (p1, key_size)
     f = _segment_callable(mesh, pconfig, config)
 
     if pconfig.scheme in ("dp", "tp_single"):
-        return f(dp_keys, env, mps.gammas, mps.lambdas, start)
+        return f(dp_keys, env, log_scale, mps.gammas, mps.lambdas, start)
     if pconfig.scheme == "tp_double":
         assert mps.n_sites % 2 == 0, \
             "double-site segments need an even site count"
-        return f(dp_keys, env, mps.gammas[0::2], mps.lambdas[0::2],
+        return f(dp_keys, env, log_scale, mps.gammas[0::2], mps.lambdas[0::2],
                  mps.gammas[1::2], mps.lambdas[1::2], start)
     raise ValueError(f"segment runner has no scheme {pconfig.scheme!r}")
 
@@ -562,10 +560,10 @@ def segment_env_init(n_samples: int, chi: int, gamma_dtype) -> Array:
 # Baseline [19]: one worker per site, macro-batch pipeline over a ring
 # ---------------------------------------------------------------------------
 
-def baseline19_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
-                      config: SamplerConfig = SamplerConfig(),
-                      pipeline_axis: str = "data",
-                      n_macro: Optional[int] = None) -> Array:
+def _baseline19_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
+                       config: SamplerConfig = SamplerConfig(),
+                       pipeline_axis: str = "data",
+                       n_macro: Optional[int] = None) -> Array:
     """The model-parallel scheme of [19] (Fig. 2), for comparison benches.
 
     p processes = M sites (p must equal M here).  The left environment of
@@ -638,6 +636,17 @@ def baseline19_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
     )
     out = f(mps.gammas, mps.lambdas, base_keys)  # (M, n1, N1)
     return out.transpose(1, 2, 0).reshape(n_samples, M)
+
+
+def baseline19_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
+                      config: SamplerConfig = SamplerConfig(),
+                      pipeline_axis: str = "data",
+                      n_macro: Optional[int] = None) -> Array:
+    """Deprecated front door — use :class:`repro.api.SamplingSession` with
+    ``scheme="baseline19"``."""
+    _warn_legacy("baseline19_sample")
+    return _baseline19_sample(mesh, mps, n_samples, key, config,
+                              pipeline_axis, n_macro)
 
 
 def config_macro_batches(n_samples: int, target: int = 4) -> int:

@@ -15,6 +15,10 @@ The chain is a single ``lax.scan`` over the stacked Γ (static shapes), so it
 jits once regardless of M.  Micro-batching (N₂) happens *outside* via vmap-
 like batching of the whole scan; macro-batching (N₁) and the double-buffered
 Γ streaming live in ``data/gamma_store.py`` + ``core/parallel.py``.
+
+This module is the innermost data plane; the application front door that
+composes it with DP/TP placement, streaming, dynamic χ, and checkpointing
+is :class:`repro.api.SamplingSession`.
 """
 from __future__ import annotations
 

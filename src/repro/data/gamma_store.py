@@ -196,3 +196,11 @@ class GammaStore:
     def close(self):
         self._queue.put(None)
         self._thread.join()
+
+    # context-manager support: sessions and tests that open a store inline
+    # can never leak the prefetch thread
+    def __enter__(self) -> "GammaStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

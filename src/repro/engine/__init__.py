@@ -1,9 +1,14 @@
 """Streaming multi-level sampling engine (paper §3.1 + §3.3.2 composed).
 
-The first subsystem where every layer of the paper's design runs together:
-segment-streamed chains (GammaStore double-buffered I/O), the jitted scan
-data plane (one compilation per segment shape), DP×TP placement, mid-chain
-checkpointing, and the perfmodel-driven planner.
+Every layer of the paper's design runs together here: segment-streamed
+chains (GammaStore double-buffered I/O), the jitted scan data plane (one
+compilation per segment shape / χ bucket), DP×TP placement with micro
+batching, dynamic bond dimensions, mid-chain checkpointing, and the
+perfmodel-driven planner.
+
+This is the *streamed backend's machinery* — applications reach it through
+:class:`repro.api.SamplingSession`; the ``stream_sample`` convenience
+wrapper is deprecated in favour of the facade.
 """
 from repro.engine.planner import explain_plan, plan_stream
 from repro.engine.streaming import StreamPlan, StreamingEngine, stream_sample

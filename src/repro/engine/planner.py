@@ -57,8 +57,15 @@ def plan_stream(w: Workload, hw: Hardware, *, n_sites: Optional[int] = None,
         scheme = "dp"
     else:
         scheme = "inmem"
+    # N₂ composes with every scheme: under DP/TP the segment runner walks
+    # n_local/N₂ chunks per shard (sample_batched key schedule), so the
+    # planner's per-shard micro batch must subdivide the local macro batch
+    if micro is not None and scheme != "inmem":
+        micro_local = micro // p1
+        micro = (micro_local if micro % p1 == 0 and micro_local > 0
+                 and n1_local % micro_local == 0 else None)
     return StreamPlan(segment_len=seg, scheme=scheme,
-                      micro_batch=micro if scheme == "inmem" else None,
+                      micro_batch=micro,
                       checkpoint_every=checkpoint_every)
 
 

@@ -15,17 +15,27 @@ Every level of the framework composes behind :meth:`StreamingEngine.sample`:
   to ``sampler.sample`` for the same seed (``micro_batch=None``) or to
   ``sampler.sample_batched`` (``micro_batch=N₂``).
 * ``dp`` / ``tp_single`` / ``tp_double`` — the ``core/parallel`` segment
-  runner; bit-identical to the corresponding ``multilevel_sample`` schedule.
+  runner (micro batching N₂ included, and the per-sample ``log_scale``
+  diagnostic carried); bit-identical to the corresponding
+  ``multilevel_sample`` schedule.
+* dynamic bond dimensions (§3.4.2): a bucketed per-site ``chi_profile``
+  splits the walk into χ-stages; segments never cross a stage boundary and
+  every segment of a bucket pads to one shape, so a staged chain costs one
+  jit compilation *per bucket* (not per chain position).  Bit-identical to
+  ``dynamic_bond.sample_staged`` for the inmem scheme.
 * per-segment checkpointing through ``checkpoint/sampler_state`` — a killed
   run resumes mid-chain and emits bit-identical samples (paper §4.1).
 * macro batches (paper N₁) as idempotent :class:`WorkQueue` work items —
   :meth:`StreamingEngine.run_queue`.
 
-All segments run through ONE jit compilation: ``start_site`` is a traced
-operand, and the chain tail is padded to the segment length with *identity
-sites* (Γ = I on outcome 0, Λ = 1) whose draws are discarded — an identity
-site leaves the environment, its rescale factors, and every real site's
-PRNG stream untouched.
+All same-shape segments run through ONE jit compilation: ``start_site`` is a
+traced operand, and segment tails are padded to the segment length with
+*identity sites* (Γ = I on outcome 0, Λ = 1) whose draws are discarded — an
+identity site leaves the environment, its rescale factors, and every real
+site's PRNG stream untouched.
+
+Applications should reach this engine through
+:class:`repro.api.SamplingSession` (backend ``"streamed"``).
 """
 from __future__ import annotations
 
@@ -54,7 +64,7 @@ class StreamPlan:
     """How to walk the chain.  Produced by ``engine.planner.plan_stream``."""
     segment_len: int                    # sites per device-resident segment
     scheme: str = "inmem"               # "inmem" | "dp" | "tp_single" | "tp_double"
-    micro_batch: Optional[int] = None   # N₂ (inmem only); None = one batch
+    micro_batch: Optional[int] = None   # N₂; composes with EVERY scheme
     checkpoint_every: int = 0           # segments between checkpoints; 0 = off
 
 
@@ -100,7 +110,8 @@ class StreamingEngine:
                  config: S.SamplerConfig = S.SamplerConfig(),
                  plan: StreamPlan = StreamPlan(segment_len=64),
                  mesh=None, pconfig: Optional[PP.ParallelConfig] = None,
-                 checkpoint_dir: Optional[str] = None):
+                 checkpoint_dir: Optional[str] = None,
+                 chi_profile=None):
         self.store = store
         self.n_sites = store.n_sites
         if self.n_sites == 0:
@@ -111,31 +122,78 @@ class StreamingEngine:
         self.semantics = semantics
         self.config = config
         self.plan = plan
-        if plan.scheme != "inmem":
-            if mesh is None:
-                raise ValueError(f"scheme {plan.scheme!r} needs a mesh")
-            if plan.micro_batch is not None:
-                raise ValueError("micro_batch composes with the inmem scheme "
-                                 "only (DP/TP shard the batch instead)")
+        if plan.scheme != "inmem" and mesh is None:
+            raise ValueError(f"scheme {plan.scheme!r} needs a mesh")
         self.mesh = mesh
         self.pconfig = pconfig or PP.ParallelConfig(scheme=plan.scheme)
+        if plan.scheme != "inmem" and plan.micro_batch is not None:
+            # §3.1 micro batching composes with the DP/TP schemes through the
+            # segment runner (N₂ per data shard, sample_batched key schedule)
+            self.pconfig = dataclasses.replace(self.pconfig,
+                                               micro_batch=plan.micro_batch)
+        self.chi_profile = (None if chi_profile is None
+                            else np.asarray(chi_profile, dtype=np.int64))
+        if self.chi_profile is not None:
+            if len(self.chi_profile) != self.n_sites:
+                raise ValueError(f"chi_profile covers "
+                                 f"{len(self.chi_profile)} of "
+                                 f"{self.n_sites} sites")
+            if int(self.chi_profile.max()) > self.chi:
+                raise ValueError("chi_profile exceeds the stored χ "
+                                 f"({int(self.chi_profile.max())} > {self.chi})")
         self.checkpoint_dir = checkpoint_dir
         if checkpoint_dir:
             os.makedirs(checkpoint_dir, exist_ok=True)
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._live_lock = threading.Lock()
         self._live = 0
+        # store I/O is counted relative to engine creation so a shared
+        # (session-owned) store can serve many engines without the hidden-
+        # I/O ratio mixing scopes
+        self._store_io0 = (store.io_seconds, store.io_bytes)
         self.stats = {"segments": 0, "io_wait_s": 0.0, "compute_s": 0.0,
                       "max_live_segments": 0, "store_io_s": 0.0,
                       "io_bytes": 0, "io_hidden_frac": 0.0}
 
-    # -- segment fetch (runs on the pool thread) ----------------------------
-    def _fetch(self, start: int) -> tuple[jax.Array, jax.Array, int]:
+    # -- chain schedule ------------------------------------------------------
+    def _segment_schedule(self) -> list[tuple[int, int, int]]:
+        """[(start, stop, χ_stage)] — ``plan.segment_len``-sized chunks that
+        never cross a χ-stage boundary.  With no profile this is the uniform
+        fixed-χ split; with one, each §3.4.2 bucket walks its own segments
+        (every segment of a bucket is padded to the same length, so a
+        dynamic-χ chain costs ONE jit compilation per bucket)."""
+        from repro.core import dynamic_bond as DB
+
         L = self.plan.segment_len
-        g, lam = self.store.get_segment(start, L, prefetch_next_segment=True)
+        if self.chi_profile is None:
+            stages = [(0, self.n_sites, self.chi)]
+        else:
+            stages = [(st.start, st.stop, st.chi)
+                      for st in DB.stages_from_profile(self.chi_profile)]
+        out = []
+        for s0, s1, chi_s in stages:
+            if self.pconfig.scheme == "tp_double" and (s0 % 2 or s1 % 2):
+                raise ValueError(
+                    "tp_double pairs sites (2j, 2j+1): χ-stage boundaries "
+                    f"must be even (got stage [{s0}, {s1}))")
+            c = s0
+            while c < s1:
+                out.append((c, min(c + L, s1), chi_s))
+                c = min(c + L, s1)
+        return out
+
+    # -- segment fetch (runs on the pool thread) ----------------------------
+    def _fetch(self, start: int, stop: int,
+               chi_s: int) -> tuple[jax.Array, jax.Array, int]:
+        L = self.plan.segment_len
+        g, lam = self.store.get_segment(start, stop - start,
+                                        prefetch_next_segment=True)
+        if chi_s < self.chi:              # §3.4.2: only the bucketed bond
+            g = g[:, :chi_s, :chi_s, :]
+            lam = lam[:, :chi_s]
         real = g.shape[0]
         if real < L:                      # tail: pad with identity sites
-            gp, lp = identity_sites(L - real, self.chi, self.d, g.dtype)
+            gp, lp = identity_sites(L - real, chi_s, self.d, g.dtype)
             g = np.concatenate([g, gp], axis=0)
             lam = np.concatenate([lam, lp.astype(lam.dtype)], axis=0)
         gd, ld = jax.device_put(g), jax.device_put(lam)    # async transfer
@@ -161,9 +219,9 @@ class StreamingEngine:
             res = S.sample_chain(seg, S.SamplerState(env, key, log_scale),
                                  self.config, start_site=start)
             return res.samples, res.state.env, res.state.log_scale
-        samples, env = PP.sample_segment(self.mesh, seg, env, key, start,
-                                         self.pconfig, self.config)
-        return samples, env, log_scale
+        return PP.sample_segment(self.mesh, seg, env, key, start,
+                                 self.pconfig, self.config,
+                                 log_scale=log_scale)
 
     def _load_sample_blocks(self, up_to_site: int) -> list[np.ndarray]:
         """Read back the per-segment sample blocks covering [0, up_to_site)."""
@@ -192,16 +250,19 @@ class StreamingEngine:
         engine checkpoints the boundary state and returns the partial
         (N, sites_done) block.
         """
-        L = self.plan.segment_len
+        from repro.core.dynamic_bond import fit_env
+
         M_sites = self.n_sites
         if self.plan.micro_batch is not None:
             assert n_samples % self.plan.micro_batch == 0, \
                 (n_samples, self.plan.micro_batch)
 
-        start = 0
+        schedule = self._segment_schedule()
+        boundaries = {s for s, _, _ in schedule} | {M_sites}
+        idx = 0
         done: list[np.ndarray] = []       # site-major (L_i, N) blocks
         persisted = 0                     # blocks already written to disk
-        env = PP.segment_env_init(n_samples, self.chi, self.gamma_dtype)
+        env = PP.segment_env_init(n_samples, schedule[0][2], self.gamma_dtype)
         log_scale = jnp.zeros((n_samples,),
                               dtype=real_dtype_of(env.dtype))
         if resume:
@@ -209,32 +270,34 @@ class StreamingEngine:
                 raise ValueError("resume=True needs a checkpoint_dir")
             site, state, _ = load_sampler_state(self.checkpoint_dir)
             # the engine only checkpoints segment boundaries (or chain end)
-            assert site % L == 0 or site == M_sites, (site, L)
+            assert site in boundaries, (site, sorted(boundaries))
             # a mismatched key would silently produce a chimera batch
             # (prefix from the checkpoint's seed, suffix from the caller's)
             assert jnp.array_equal(jax.random.key_data(key),
                                    jax.random.key_data(state.key)), \
                 "resume key does not match the checkpointed run"
-            start, env, key, log_scale = (site, state.env, state.key,
-                                          state.log_scale)
+            env, key, log_scale = state.env, state.key, state.log_scale
+            idx = next((i for i, (s, _, _) in enumerate(schedule)
+                        if s == site), len(schedule))
             done = self._load_sample_blocks(site)
             persisted = len(done)
 
-        if start >= M_sites:              # resumed from a finished run
+        if idx >= len(schedule):          # resumed from a finished run
             return np.concatenate(done, axis=0).T.astype(np.int32)
 
-        fut: Future = self._pool.submit(self._fetch, start)
+        fut: Future = self._pool.submit(self._fetch, *schedule[idx])
         seg_idx = 0
-        while start < M_sites:
+        while idx < len(schedule):
+            start, _, chi_s = schedule[idx]
             t0 = time.perf_counter()
             gd, ld, real = fut.result()
             self.stats["io_wait_s"] += time.perf_counter() - t0
-            nxt = start + real
-            if nxt < M_sites:             # double buffer: fetch k+1 now
-                fut = self._pool.submit(self._fetch, nxt)
+            if idx + 1 < len(schedule):   # double buffer: fetch k+1 now
+                fut = self._pool.submit(self._fetch, *schedule[idx + 1])
 
             t0 = time.perf_counter()
             seg = MPS(gd, ld, self.semantics)
+            env = fit_env(env, chi_s)     # χ-stage transition (no-op within)
             samples, env, log_scale = self._run_segment(
                 seg, env, log_scale, key, start)
             samples = np.asarray(samples[:real])      # drop identity pads
@@ -243,19 +306,21 @@ class StreamingEngine:
             self._release(gd, ld)
             done.append(samples)
             self.stats["segments"] += 1
-            start = nxt
+            idx += 1
             seg_idx += 1
+            site_done = start + real
 
             stopping = (stop_after_segments is not None
                         and seg_idx >= stop_after_segments
-                        and start < M_sites)
+                        and idx < len(schedule))
             ckpt_due = (self.plan.checkpoint_every
                         and seg_idx % self.plan.checkpoint_every == 0)
             if self.checkpoint_dir and (ckpt_due or stopping):
                 # samples live in per-segment block files written exactly
                 # once each — re-serializing the cumulative history every
                 # segment would make total checkpoint I/O quadratic in M
-                site_cursor = start - sum(b.shape[0] for b in done[persisted:])
+                site_cursor = site_done - sum(b.shape[0]
+                                              for b in done[persisted:])
                 for blk in done[persisted:]:
                     np.save(os.path.join(self.checkpoint_dir,
                                          f"samples_{site_cursor:06d}.npy"),
@@ -263,20 +328,21 @@ class StreamingEngine:
                     site_cursor += blk.shape[0]
                 persisted = len(done)
                 save_sampler_state(
-                    self.checkpoint_dir, start,
+                    self.checkpoint_dir, site_done,
                     S.SamplerState(env, key, log_scale),
                     np.zeros((0, n_samples), dtype=np.int32))
             if stopping:
-                if nxt < M_sites:     # drain the prefetch we no longer need,
-                    gd, ld, _ = fut.result()   # or its buffers leak and the
-                    self._release(gd, ld)      # ≤2-live-segments bound breaks
+                if idx < len(schedule):   # drain the prefetch we no longer
+                    gd, ld, _ = fut.result()   # need, or its buffers leak and
+                    self._release(gd, ld)      # the ≤2-live bound breaks
                 break
 
-        self.stats["store_io_s"] = self.store.io_seconds
-        self.stats["io_bytes"] = self.store.io_bytes
-        if self.store.io_seconds > 0:
-            hidden = max(0.0, self.store.io_seconds - self.stats["io_wait_s"])
-            self.stats["io_hidden_frac"] = hidden / self.store.io_seconds
+        self.stats["store_io_s"] = self.store.io_seconds - self._store_io0[0]
+        self.stats["io_bytes"] = self.store.io_bytes - self._store_io0[1]
+        if self.stats["store_io_s"] > 0:
+            hidden = max(0.0,
+                         self.stats["store_io_s"] - self.stats["io_wait_s"])
+            self.stats["io_hidden_frac"] = hidden / self.stats["store_io_s"]
         return np.concatenate(done, axis=0).T.astype(np.int32)
 
     def run_queue(self, queue, per_batch: int, base_key: jax.Array,
@@ -291,9 +357,18 @@ class StreamingEngine:
             queue.complete(b)
         return out
 
-    def close(self) -> None:
+    def close(self, close_store: bool = True) -> None:
+        """Join the prefetch thread; ``close_store=False`` leaves the
+        (possibly shared) GammaStore alive for further engines/sessions."""
         self._pool.shutdown(wait=True)
-        self.store.close()
+        if close_store:
+            self.store.close()
+
+    def __enter__(self) -> "StreamingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def stream_sample(store, n_samples: int, key: jax.Array, *,
@@ -301,11 +376,23 @@ def stream_sample(store, n_samples: int, key: jax.Array, *,
                   config: S.SamplerConfig = S.SamplerConfig(),
                   plan: Optional[StreamPlan] = None,
                   mesh=None, pconfig=None) -> np.ndarray:
-    """One-shot convenience wrapper: stream the whole chain once."""
+    """One-shot convenience wrapper: stream the whole chain once.
+
+    Deprecated front door — use :class:`repro.api.SamplingSession` with
+    ``backend="streamed"`` (it owns the engine/store lifecycle and composes
+    checkpointing, micro batching, and dynamic χ behind one call).
+    """
+    import warnings
+    warnings.warn(
+        "repro.engine.stream_sample is a legacy entry point — construct a "
+        "repro.api.SamplingSession instead (one session.sample() call "
+        "routes to the same engine); it will be removed one release after "
+        "the facade (see examples/README.md)",
+        DeprecationWarning, stacklevel=2)
     plan = plan or StreamPlan(segment_len=min(64, store.n_sites))
     eng = StreamingEngine(store, semantics=semantics, config=config,
                           plan=plan, mesh=mesh, pconfig=pconfig)
     try:
         return eng.sample(n_samples, key)
     finally:
-        eng._pool.shutdown(wait=True)
+        eng.close(close_store=False)

@@ -252,8 +252,8 @@ def run_gbs_cell(preset_name: str, scheme: str, mesh_kind: str,
 
     def run(gammas, lambdas, seed):
         m = MPS(gammas, lambdas, "linear")
-        return PP.multilevel_sample(mesh, m, n_samples,
-                                    jax.random.key(seed), pcfg, scfg)
+        return PP._multilevel_sample(mesh, m, n_samples,
+                                     jax.random.key(seed), pcfg, scfg)
 
     try:
         with mesh:

@@ -1,9 +1,13 @@
 """GBS sampling driver: the paper's workload end-to-end, fault-tolerant.
 
-Walks the macro-batch work queue (runtime/elastic.py) over the multi-level
-parallel sampler, checkpointing after every macro batch — kill it at any
-point and rerun: it resumes from the queue state and produces bit-identical
-samples (paper §4.1).
+A thin shell over :class:`repro.api.SamplingSession`: argument parsing →
+config construction → session calls.  The session composes every level —
+DP×TP placement, micro batching, dynamic bond dimensions, segment
+streaming, per-segment checkpoints — and the macro-batch
+:class:`WorkQueue` (runtime/elastic.py) makes the run restart-exact: kill
+it at any point and rerun, it resumes from the queue state (and, when
+streaming, from the last mid-chain segment boundary) and produces
+bit-identical samples (paper §4.1).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.sample --sites 64 --chi 64 \
@@ -12,26 +16,26 @@ Usage:
 Streaming mode (chains too big for device memory, paper §3.1/§3.3.2):
   PYTHONPATH=src python -m repro.launch.sample --sites 512 --chi 64 \
       --samples 4096 --stream --store /tmp/gbs_gamma --segment-len 64
+
+Dynamic bond dimensions (§3.4.2) now compose with every mode:
+  PYTHONPATH=src python -m repro.launch.sample --sites 512 --chi 64 \
+      --samples 4096 --stream --dynamic-bond
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import shutil
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import dynamic_bond as DB
 from repro.core import mps as M
-from repro.core import parallel as PP
-from repro.core import sampler as S
-from repro.core.perfmodel import TPU_V5E, Workload
 from repro.data.gamma_store import GammaStore
-from repro.engine import StreamPlan, StreamingEngine, explain_plan, plan_stream
 from repro.launch.mesh import make_host_mesh
 from repro.runtime.elastic import WorkQueue
 
@@ -44,10 +48,13 @@ def main() -> None:
     ap.add_argument("--samples", type=int, default=4096)
     ap.add_argument("--macro-batches", type=int, default=4)
     ap.add_argument("--scheme", default="dp",
-                    choices=["dp", "tp_single", "tp_double", "baseline19"])
+                    choices=["auto", "seq", "dp", "tp_single", "tp_double",
+                             "baseline19"])
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dynamic-bond", action="store_true")
+    ap.add_argument("--micro-batch", type=int, default=0,
+                    help="N₂ per data shard (0 = whole batch)")
     ap.add_argument("--precision", default="fp64",
                     choices=["fp64", "fp32", "mxu_bf16"])
     ap.add_argument("--out", default="/tmp/fastmps_out")
@@ -71,12 +78,37 @@ def main() -> None:
                               args.chi, args.d,
                               dtype=jnp.float64).astype(dtype)
 
-    # streaming mode reads Γ from the store — only materialize the full
-    # in-memory chain when a path actually consumes it (that is the point
-    # of streaming: the chain may not fit in host memory at all)
-    mps = None if args.stream else build_mps()
-    scfg = S.SamplerConfig(compute_dtype=compute)
-    pcfg = PP.ParallelConfig(scheme=args.scheme)
+    # -- source: an in-memory MPS, or a Γ store the chain streams from ------
+    # (streaming never materializes the full chain — that is its point)
+    if args.stream:
+        root = args.store or os.path.join(args.out, "gamma_store")
+        store_dtype = jnp.float64 if args.precision == "fp64" else jnp.float32
+        source = GammaStore(root, compute_dtype=store_dtype)
+        if source.n_sites == 0:
+            print(f"writing Γ store ({args.sites} sites) to {root}")
+            source.write_mps(build_mps())
+    else:
+        source = build_mps()
+
+    # -- config: every knob is a field; AUTO fields go to the planner -------
+    chi_profile = None
+    if args.dynamic_bond:
+        prof = DB.area_law_profile(args.sites, args.chi, n_photon=1.0)
+        buck = DB.bucketize(prof, sorted({max(args.model_parallel,
+                                              args.chi // 4),
+                                          args.chi // 2, args.chi}))
+        chi_profile = tuple(int(c) for c in buck)
+        print("table1:", DB.table1_metrics(prof, args.chi))
+
+    config = api.SamplerConfig(
+        scheme=args.scheme,
+        backend="streamed" if args.stream else "inmem",
+        compute_dtype=compute,
+        micro_batch=args.micro_batch or None,
+        chi_profile=chi_profile,
+        segment_len=args.segment_len or api.AUTO,
+        checkpoint_every=1,
+    )
 
     n1 = args.macro_batches
     assert args.samples % n1 == 0
@@ -89,72 +121,27 @@ def main() -> None:
             queue.complete(b)
     print(f"pending macro batches: {queue.pending}")
 
-    if args.dynamic_bond:
-        prof = DB.area_law_profile(args.sites, args.chi, n_photon=1.0)
-        buck = DB.bucketize(prof, sorted({args.chi // 4, args.chi // 2,
-                                          args.chi}))
-        print("table1:", DB.table1_metrics(prof, args.chi))
-
-    engine = None
-    if args.stream:
-        assert not args.dynamic_bond, "--stream composes with uniform χ only"
-        assert args.scheme != "baseline19", "--stream has no [19] pipeline"
-        root = args.store or os.path.join(args.out, "gamma_store")
-        compute = {"fp64": jnp.float64, "fp32": jnp.float32,
-                   "mxu_bf16": jnp.float32}[args.precision]
-        store = GammaStore(root, compute_dtype=compute)
-        if store.n_sites == 0:
-            print(f"writing Γ store ({args.sites} sites) to {root}")
-            store.write_mps(build_mps())
-        if args.segment_len:
-            plan = StreamPlan(segment_len=args.segment_len,
-                              scheme=args.scheme, checkpoint_every=1)
-        else:
-            import dataclasses as _dc
-            w = Workload(n_samples=args.samples, n_sites=args.sites,
-                         chi=args.chi, d=args.d, macro_batch=per_batch,
-                         micro_batch=per_batch)
-            plan = plan_stream(w, TPU_V5E, p1=len(jax.devices())
-                               // args.model_parallel, p2=args.model_parallel,
-                               checkpoint_every=1)
-            if plan.scheme != args.scheme:
-                # the planner sizes segments; the requested schedule wins
-                print(f"planner suggested scheme {plan.scheme!r}; "
-                      f"honouring --scheme {args.scheme!r}")
-                # argparse schemes are all parallel → N₂ is inmem-only
-                plan = _dc.replace(plan, scheme=args.scheme, micro_batch=None)
-            print("plan:", explain_plan(plan, w, TPU_V5E))
-        engine = StreamingEngine(
-            store, config=scfg, plan=plan,
-            mesh=mesh if plan.scheme != "inmem" else None,
-            pconfig=PP.ParallelConfig(plan.scheme)
-            if plan.scheme != "inmem" else None)
-
     base = jax.random.key(args.seed + 1)
     t0 = time.perf_counter()
-    while (b := queue.claim("driver")) is not None:
-        kb = jax.random.fold_in(base, b)
-        if engine is not None:
-            # one checkpoint dir per macro batch: a mid-batch kill resumes
-            # from the last segment boundary instead of restarting the chain
-            ck = os.path.join(args.out, "chain_ckpt", f"batch_{b:05d}")
-            engine.checkpoint_dir = ck
-            os.makedirs(ck, exist_ok=True)
-            partial = any(f.startswith("site_") for f in os.listdir(ck))
-            out = engine.sample(per_batch, kb, resume=partial)
-            shutil.rmtree(ck, ignore_errors=True)   # batch_*.npy is durable
-        elif args.dynamic_bond:
-            out = DB.sample_staged(mps, buck, per_batch, kb, scfg)
-        else:
-            out = PP.multilevel_sample(mesh, mps, per_batch, kb, pcfg, scfg)
-        np.save(os.path.join(args.out, f"batch_{b:05d}.npy"),
-                np.asarray(out).astype(np.int8))
-        queue.complete(b)
-        print(f"macro batch {b} done ({per_batch} samples)", flush=True)
-    if engine is not None:
-        print("streaming stats:", {k: (round(v, 4) if isinstance(v, float)
-                                       else v) for k, v in engine.stats.items()})
-        engine.close()
+    with api.SamplingSession(source, config, mesh=mesh) as session:
+        print("plan:", session.plan(per_batch))
+        print("why:", session.explain(per_batch))
+
+        def save_batch(b: int, out: np.ndarray) -> None:
+            np.save(os.path.join(args.out, f"batch_{b:05d}.npy"),
+                    np.asarray(out).astype(np.int8))
+            print(f"macro batch {b} done ({per_batch} samples)", flush=True)
+
+        session.run_queue(
+            queue, per_batch, base, worker="driver",
+            checkpoint_root=os.path.join(args.out, "chain_ckpt"),
+            on_batch=save_batch)
+        if session.stats:
+            print("streaming stats:",
+                  {k: (round(v, 4) if isinstance(v, float) else v)
+                   for k, v in session.stats.items()})
+    if args.stream:
+        source.close()
 
     # merge + stats
     allb = [np.load(os.path.join(args.out, f"batch_{b:05d}.npy"))

@@ -1,0 +1,384 @@
+"""Unified `SamplingSession` API: one front door, bit-identical everywhere.
+
+The facade's contract (paper §4.1 composed over every level): for one seed,
+every supported cell of {inmem, streamed} × {seq, dp, tp_single, tp_double}
+× {static, dynamic-χ} × {whole-batch, micro-batched} emits bit-identical
+samples, and a killed streamed run resumes exactly.  Single-device cells
+run in-process; the DP/TP matrix runs in a subprocess with 8 forced host
+devices (the main pytest process must keep the real device view).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.core import dynamic_bond as DB
+from repro.core import mps as M
+from repro.core import sampler as S
+from repro.data.gamma_store import GammaStore
+
+
+# ---------------------------------------------------------------------------
+# Single-device cells (seq scheme): facade vs the legacy references
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chain(tmp_path_factory, linear_mps_10x6):
+    root = str(tmp_path_factory.mktemp("api_gamma"))
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        store.write_mps(linear_mps_10x6)
+    return root, linear_mps_10x6
+
+
+def test_inmem_seq_matches_legacy_sampler(linear_mps_10x6):
+    mps = linear_mps_10x6
+    key = jax.random.key(3)
+    with api.SamplingSession(mps) as sess:
+        out = sess.sample(24, key)
+    assert np.array_equal(out, np.asarray(S.sample(mps, 24, key)))
+
+
+def test_streamed_seq_matches_legacy_sampler(chain):
+    root, mps = chain
+    key = jax.random.key(3)
+    cfg = api.SamplerConfig(segment_len=4)
+    with api.SamplingSession(root, cfg) as sess:
+        assert sess.plan(24).backend == "streamed"   # auto from the store
+        out = sess.sample(24, key)
+        assert sess.stats["max_live_segments"] <= 2
+    assert np.array_equal(out, np.asarray(S.sample(mps, 24, key)))
+
+
+def test_session_from_mps_materializes_identity_store(linear_mps_10x6):
+    """backend="streamed" over an MPS source: the session writes a store in
+    the MPS's own dtype, so no storage rounding breaks bit-identity."""
+    mps = linear_mps_10x6
+    key = jax.random.key(5)
+    cfg = api.SamplerConfig(backend="streamed", segment_len=5)
+    with api.SamplingSession(mps, cfg) as sess:
+        out = sess.sample(16, key)
+    assert np.array_equal(out, np.asarray(S.sample(mps, 16, key)))
+
+
+def test_micro_batch_both_backends(chain):
+    root, mps = chain
+    key = jax.random.key(9)
+    ref = np.asarray(S.sample_batched(mps, 24, key, micro_batch=8))
+    with api.SamplingSession(mps, api.SamplerConfig(micro_batch=8)) as sess:
+        assert np.array_equal(sess.sample(24, key), ref)
+    cfg = api.SamplerConfig(micro_batch=8, segment_len=4)
+    with api.SamplingSession(root, cfg) as sess:
+        assert np.array_equal(sess.sample(24, key), ref)
+
+
+def test_dynamic_chi_both_backends(chain):
+    root, mps = chain
+    key = jax.random.key(11)
+    prof = DB.bucketize(DB.area_law_profile(10, 6), [4, 6])
+    ref = np.asarray(DB.sample_staged(mps, prof, 24, key))
+    cfg = api.SamplerConfig(chi_profile=tuple(int(c) for c in prof))
+    with api.SamplingSession(mps, cfg) as sess:
+        plan = sess.plan(24)
+        assert plan.stages is not None and len(plan.stages) >= 2
+        assert np.array_equal(sess.sample(24, key), ref)
+    cfg = api.SamplerConfig(chi_profile=tuple(int(c) for c in prof),
+                            segment_len=3)
+    with api.SamplingSession(root, cfg) as sess:
+        assert np.array_equal(sess.sample(24, key), ref)
+
+
+def test_streamed_kill_and_resume(chain, tmp_path):
+    root, mps = chain
+    key = jax.random.key(13)
+    ref = np.asarray(S.sample(mps, 16, key))
+    cfg = api.SamplerConfig(segment_len=4, checkpoint_every=1,
+                            checkpoint_dir=str(tmp_path))
+    with api.SamplingSession(root, cfg) as sess:
+        part = sess.sample(16, key, stop_after_segments=2)
+        assert part.shape == (16, 8)
+        assert np.array_equal(part, ref[:, :8])
+        out = sess.sample(16, key, resume=True)
+        assert sess.stats["segments"] == 1           # only the remaining work
+    assert np.array_equal(out, ref)
+
+
+def test_run_queue_macro_batches(chain):
+    """Macro batches through the facade: batch = f(seed, id), results
+    owner/order-independent (runtime/elastic.py contract)."""
+    from repro.runtime.elastic import WorkQueue
+    root, mps = chain
+    base = jax.random.key(21)
+    with api.SamplingSession(root, api.SamplerConfig(segment_len=5)) as sess:
+        q = WorkQueue(3)
+        outs = sess.run_queue(q, 8, base)
+        assert q.finished
+    for b in range(3):
+        ref = np.asarray(S.sample(mps, 8, jax.random.fold_in(base, b)))
+        assert np.array_equal(outs[b], ref)
+
+
+def test_born_semantics_both_backends(tmp_path, born_mps_6x4):
+    mps = born_mps_6x4
+    key = jax.random.key(2)
+    ref = np.asarray(S.sample(mps, 16, key,
+                              S.SamplerConfig(semantics="born")))
+    with api.SamplingSession(mps) as sess:
+        assert sess.plan(16).semantics == "born"     # auto from the MPS
+        assert np.array_equal(sess.sample(16, key), ref)
+    with GammaStore(str(tmp_path), storage_dtype=jnp.complex128,
+                    compute_dtype=jnp.complex128) as store:
+        store.write_mps(mps)
+        cfg = api.SamplerConfig(semantics="born", segment_len=4)
+        with api.SamplingSession(store, cfg) as sess:
+            assert np.array_equal(sess.sample(16, key), ref)
+
+
+# ---------------------------------------------------------------------------
+# Planning, registry, lifecycle, deprecation
+# ---------------------------------------------------------------------------
+
+def test_plan_and_explain(chain):
+    root, _ = chain
+    with api.SamplingSession(root) as sess:
+        plan = sess.plan(24)
+        assert plan.backend == "streamed" and plan.scheme == "seq"
+        assert plan.segment_len and plan.segment_len >= 1
+        info = sess.explain(24)
+        assert info["backend"] == "streamed"
+        assert info["chi_buckets"] == [6]
+        assert "io_overlapped" in info and "segment_len" in info
+
+
+def test_backend_registry():
+    assert set(api.available_backends()) >= {"inmem", "streamed"}
+    assert api.get_backend("inmem").name == "inmem"
+    with pytest.raises(ValueError, match="no backend"):
+        api.get_backend("nope")
+
+    @api.register_backend("_test_backend")
+    class _TB(api.Backend):
+        name = "_test_backend"
+
+        def sample(self, req):
+            return np.zeros((req.n_samples, 1), np.int32)
+
+    try:
+        assert "_test_backend" in api.available_backends()
+    finally:
+        from repro.api import backends as B
+        B._REGISTRY.pop("_test_backend", None)
+
+
+def test_resolution_errors(linear_mps_10x6):
+    mps = linear_mps_10x6
+    with api.SamplingSession(mps, api.SamplerConfig(scheme="dp")) as sess:
+        with pytest.raises(ValueError, match="needs a mesh"):
+            sess.plan(8)
+    with api.SamplingSession(mps, api.SamplerConfig(micro_batch=7)) as sess:
+        with pytest.raises(ValueError, match="micro_batch"):
+            sess.plan(24)
+    bad_prof = (6,) * 9                              # covers 9 of 10 sites
+    with api.SamplingSession(
+            mps, api.SamplerConfig(chi_profile=bad_prof)) as sess:
+        with pytest.raises(ValueError, match="chi_profile"):
+            sess.plan(8)
+    with api.SamplingSession(mps) as sess:
+        with pytest.raises(ValueError, match="resume"):
+            sess.sample(8, jax.random.key(0), resume=True)
+
+
+def test_auto_micro_degrades_on_unsupported_combination(linear_mps_10x6):
+    """AUTO fields must resolve to supported values: micro_batch=AUTO on the
+    seq+dynamic-χ in-memory path degrades to None instead of raising."""
+    prof = tuple(int(c) for c in DB.bucketize(DB.area_law_profile(10, 6),
+                                              [4, 6]))
+    cfg = api.SamplerConfig(micro_batch=api.AUTO, chi_profile=prof,
+                            device_budget=2e4)
+    with api.SamplingSession(linear_mps_10x6, cfg) as sess:
+        plan = sess.plan(24)
+        assert plan.scheme == "seq" and plan.micro_batch is None
+
+
+def test_gamma_store_context_manager(tmp_path, linear_mps_10x6):
+    with GammaStore(str(tmp_path), storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        store.write_mps(linear_mps_10x6)
+        assert store.n_sites == 10
+    assert not store._thread.is_alive()              # prefetch thread joined
+
+
+def test_legacy_entry_points_warn(chain):
+    root, mps = chain
+    from repro.core import parallel as PP
+    from repro.engine import StreamPlan, stream_sample
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        PP.multilevel_sample(mesh, mps, 8, jax.random.key(0))
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        with pytest.warns(DeprecationWarning, match="repro.api"):
+            stream_sample(store, 8, jax.random.key(0),
+                          plan=StreamPlan(segment_len=5))
+
+
+def test_parallel_log_scale_parity(linear_mps_10x6):
+    """Satellite: the DP segment runner carries the same per-sample
+    log_scale diagnostic as the in-memory chain scan."""
+    from repro.core import parallel as PP
+    mps = linear_mps_10x6
+    key = jax.random.key(4)
+    # dp hands shard i the key split(key, p1)[i]; p1 = 1 here
+    state = S.init_state(mps, 8, jax.random.split(key, 1)[0])
+    res = S.sample_chain(mps, state, S.SamplerConfig())
+    mesh = jax.make_mesh((1,), ("data",))
+    env = PP.segment_env_init(8, mps.chi, mps.gammas.dtype)
+    _, _, ls = PP.sample_segment(mesh, mps, env, key, 0,
+                                 PP.ParallelConfig("dp"), S.SamplerConfig())
+    np.testing.assert_allclose(np.asarray(ls),
+                               np.asarray(res.state.log_scale), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# The full DP/TP matrix (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_CHILD = textwrap.dedent("""
+    import json, os, tempfile, warnings
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import api
+    from repro.core import dynamic_bond as DB, mps as M, parallel as PP
+    from repro.core import sampler as S
+    from repro.data.gamma_store import GammaStore
+    from repro.launch.mesh import make_host_mesh
+
+    m = M.random_linear_mps(jax.random.key(0), 8, 8, 3)
+    mesh = make_host_mesh(model=4)             # 2 data x 4 model
+    key = jax.random.key(7)
+
+    # the pre-existing legacy path is the static reference
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ref = np.asarray(PP.multilevel_sample(mesh, m, 64, key,
+                                              PP.ParallelConfig("dp")))
+
+    root = tempfile.mkdtemp()
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as st:
+        st.write_mps(m)
+
+    # dynamic-χ reference: per-shard staged chains (even-aligned stages so
+    # tp_double's site pairs never straddle a χ transition)
+    prof = np.array([4, 4, 8, 8, 8, 8, 4, 4])
+    sk = jax.random.split(key, 2)
+    ref_dyn = np.concatenate([np.asarray(DB.sample_staged(m, prof, 32, sk[i]))
+                              for i in range(2)], 0)
+    ref_mb = np.concatenate([np.asarray(S.sample_batched(m, 32, sk[i], 8))
+                             for i in range(2)], 0)
+
+    out = {}
+    for backend, src in (("inmem", m), ("streamed", root)):
+        for scheme in ("dp", "tp_single", "tp_double"):
+            cfg = api.SamplerConfig(backend=backend, scheme=scheme,
+                                    segment_len=2)
+            with api.SamplingSession(src, cfg, mesh=mesh) as sess:
+                out[f"{backend}_{scheme}_static"] = bool(
+                    np.array_equal(sess.sample(64, key), ref))
+            cfgd = api.SamplerConfig(backend=backend, scheme=scheme,
+                                     segment_len=2,
+                                     chi_profile=tuple(int(c) for c in prof))
+            with api.SamplingSession(src, cfgd, mesh=mesh) as sess:
+                out[f"{backend}_{scheme}_dynamic"] = bool(
+                    np.array_equal(sess.sample(64, key), ref_dyn))
+        # micro batching N2 under a parallel scheme (per data shard)
+        cfgm = api.SamplerConfig(backend=backend, scheme="tp_single",
+                                 segment_len=4, micro_batch=8)
+        with api.SamplingSession(src, cfgm, mesh=mesh) as sess:
+            out[f"{backend}_tp_single_micro"] = bool(
+                np.array_equal(sess.sample(64, key), ref_mb))
+
+    # log_scale diagnostic parity: the TP segment runners accumulate the
+    # same per-sample rescale log as the DP path (satellite)
+    envd = PP.segment_env_init(64, 8, m.gammas.dtype)
+    _, _, lsd = PP.sample_segment(mesh, m, envd, key, 0,
+                                  PP.ParallelConfig("dp"), S.SamplerConfig())
+    _, _, ls1 = PP.sample_segment(mesh, m, envd, key, 0,
+                                  PP.ParallelConfig("tp_single"),
+                                  S.SamplerConfig())
+    _, _, ls2 = PP.sample_segment(mesh, m, envd, key, 0,
+                                  PP.ParallelConfig("tp_double"),
+                                  S.SamplerConfig())
+    out["log_scale_tp_parity"] = bool(
+        np.allclose(lsd, ls1, rtol=1e-12)
+        and np.allclose(lsd, ls2, rtol=1e-12))
+
+    # multi-pod mesh: "pod" folds into data parallel — the resolved
+    # ParallelConfig.data_axes must cover every non-model axis
+    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    with api.SamplingSession(m, api.SamplerConfig(scheme="dp"),
+                             mesh=mesh3) as sess:
+        assert sess.plan(64).p1 == 4
+        out3 = sess.sample(64, key)
+    sk4 = jax.random.split(key, 4)
+    ref3 = np.concatenate([np.asarray(S.sample(m, 16, sk4[i]))
+                           for i in range(4)], 0)
+    out["multipod_dp"] = bool(np.array_equal(out3, ref3))
+
+    # plan-time validation: fixed-χ TP divisibility surfaces pre-compile
+    m_bad = M.random_linear_mps(jax.random.key(1), 6, 6, 3)
+    try:
+        with api.SamplingSession(m_bad, api.SamplerConfig(scheme="tp_single"),
+                                 mesh=mesh) as sess:
+            sess.plan(64)
+        out["tp_chi_plan_error"] = False
+    except ValueError:
+        out["tp_chi_plan_error"] = True
+
+    # kill-and-resume through the facade: streamed dp, dynamic chi
+    ck = tempfile.mkdtemp()
+    cfg = api.SamplerConfig(backend="streamed", scheme="dp", segment_len=2,
+                            chi_profile=tuple(int(c) for c in prof),
+                            checkpoint_dir=ck, checkpoint_every=1)
+    with api.SamplingSession(root, cfg, mesh=mesh) as sess:
+        sess.sample(64, key, stop_after_segments=2)
+    with api.SamplingSession(root, cfg, mesh=mesh) as sess:
+        out["resume_dynamic_dp"] = bool(
+            np.array_equal(sess.sample(64, key, resume=True), ref_dyn))
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def matrix_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("cell", [
+    f"{b}_{s}_{m}"
+    for b in ("inmem", "streamed")
+    for s in ("dp", "tp_single", "tp_double")
+    for m in ("static", "dynamic")
+] + ["inmem_tp_single_micro", "streamed_tp_single_micro",
+     "resume_dynamic_dp", "log_scale_tp_parity",
+     "multipod_dp", "tp_chi_plan_error"])
+def test_cross_backend_matrix(matrix_results, cell):
+    """One seed ⇒ bit-identical samples in every supported cell of
+    {inmem, streamed} × {dp, tp_single, tp_double} × {static, dynamic-χ},
+    micro-batched DP/TP, and a kill-and-resume — all through the facade."""
+    assert matrix_results[cell]

@@ -115,16 +115,26 @@ def test_workqueue_macro_batches_idempotent(chain):
 
 def test_born_semantics_stream(tmp_path, born_mps_6x4):
     mps = born_mps_6x4
-    store = GammaStore(str(tmp_path), storage_dtype=jnp.complex128,
-                       compute_dtype=jnp.complex128)
-    store.write_mps(mps)
     key = jax.random.key(2)
     cfg = S.SamplerConfig(semantics="born")
     ref = np.asarray(S.sample(mps, 16, key, cfg))
-    out = stream_sample(store, 16, key, semantics="born", config=cfg,
-                        plan=StreamPlan(segment_len=4))
+    with GammaStore(str(tmp_path), storage_dtype=jnp.complex128,
+                    compute_dtype=jnp.complex128) as store:
+        store.write_mps(mps)
+        with StreamingEngine(store, semantics="born", config=cfg,
+                             plan=StreamPlan(segment_len=4)) as eng:
+            out = eng.sample(16, key)
     assert np.array_equal(out, ref)
-    store.close()
+
+
+def test_stream_sample_wrapper_deprecated(chain):
+    root, mps = chain
+    key = jax.random.key(2)
+    with _store(root) as store:
+        with pytest.warns(DeprecationWarning, match="repro.api"):
+            out = stream_sample(store, 16, key,
+                                plan=StreamPlan(segment_len=4))
+    assert np.array_equal(out, np.asarray(S.sample(mps, 16, key)))
 
 
 def test_identity_pad_sites_are_noops():
@@ -170,7 +180,9 @@ def test_planner_scheme_selection():
     assert plan_stream(w, hw, p1=4).scheme == "dp"
     tp = plan_stream(w, hw, p2=4)
     assert tp.scheme == "tp_" + choose_tp_scheme(w, hw, 4)
-    assert tp.micro_batch is None                 # N₂ is inmem-only
+    assert tp.micro_batch == 5_000       # N₂ now composes with DP/TP too
+    dp = plan_stream(w, hw, p1=4)
+    assert dp.micro_batch == 5_000 // 4  # per data shard
 
 
 def test_planner_micro_batch_passthrough():

@@ -90,12 +90,13 @@ def test_serve_batched_requests():
 def test_multilevel_sampler_on_one_device_mesh():
     """The multi-level API degrades gracefully to a 1×1 mesh (the 'users
     with limited computing resources' case the paper §2.2 point (1) makes)."""
-    from repro.core import parallel as PP
+    from repro import api
     mps = M.random_linear_mps(jax.random.key(0), 5, 4, 3)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     key = jax.random.key(1)
-    out = PP.multilevel_sample(mesh, mps, 16, key,
-                               PP.ParallelConfig("tp_single"))
+    with api.SamplingSession(mps, api.SamplerConfig(scheme="tp_single"),
+                             mesh=mesh) as sess:
+        out = sess.sample(16, key)
     # DP group g draws with split(key, p1)[g]; p1 = 1 here
     ref = S.sample(mps, 16, jax.random.split(key, 1)[0])
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
