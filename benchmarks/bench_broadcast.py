@@ -1,0 +1,167 @@
+"""Multi-host Γ broadcast bench: 1 reader + interconnect vs N readers.
+
+The paper's §3.1 observation: with p data-parallel processes each reading
+its own Γ, storage I/O scales as p × chain-bytes and kills the revival at
+scale; with process 0 reading once and broadcasting, storage stays at
+1 × chain-bytes and the interconnect (far faster than disk) carries the
+rest — in the §3.3.2 storage format, so bf16 stores broadcast half the
+fp32 bytes.
+
+This bench streams one chain two ways on an emulated p-process cluster
+(`api.emulated_cluster` — the real engine/session wiring, in-process
+fabric):
+
+* **naive** ("N readers", today's default): p independent
+  ``runtime="local"`` walks, each reading the full chain from the store;
+* **broadcast** ("1 reader"): p ``runtime=<multihost member>`` walks —
+  only the root touches the store.
+
+Rows (common.emit): per-variant wall time, with the derived column carrying
+per-process store bytes.  Each run also appends a JSON record to the BENCH
+trajectory (``benchmarks/BENCH.json`` by default) so successive PRs can
+track the I/O-reduction ratio.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_broadcast.py [--smoke] [--procs 2]
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import common  # noqa: F401  (enables x64 for the fp comparisons)
+from repro import api
+from repro.core import mps as M
+from repro.data.gamma_store import GammaStore
+
+
+def _walk(idx: int, source_root: str, runtime, segment_len: int, n: int,
+          key, outs: dict, stats: dict) -> None:
+    config = api.SamplerConfig(backend="streamed", runtime=runtime,
+                               segment_len=segment_len)
+    with api.SamplingSession(source_root, config) as session:
+        outs[idx] = session.sample(n, key)
+        stats[idx] = dict(session.stats)
+
+
+def _run_cluster(source_root: str, runtimes, segment_len: int, n: int, key
+                 ) -> tuple[float, dict, dict]:
+    """Drive one session per runtime concurrently; returns (wall, outs,
+    stats).  ``runtimes`` of [None]*p means p independent local walks (the
+    naive N-readers variant)."""
+    outs, stats = {}, {}
+    threads = [threading.Thread(
+        target=_walk,
+        args=(i, source_root, rt or api.LocalRuntime(), segment_len, n, key,
+              outs, stats))
+        for i, rt in enumerate(runtimes)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=1200)
+    wall = time.perf_counter() - t0
+    assert len(outs) == len(runtimes), "a walker died"
+    return wall, outs, stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--procs", type=int, default=2)
+    ap.add_argument("--sites", type=int, default=0)
+    ap.add_argument("--chi", type=int, default=0)
+    ap.add_argument("--samples", type=int, default=0)
+    ap.add_argument("--segment-len", type=int, default=0)
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(__file__), "BENCH.json"),
+        help="BENCH trajectory file to append the record to ('' disables)")
+    args = ap.parse_args()
+
+    sites = args.sites or (32 if args.smoke else 192)
+    chi = args.chi or (8 if args.smoke else 48)
+    n = args.samples or (128 if args.smoke else 2048)
+    seg = args.segment_len or max(4, sites // 8)
+    p = args.procs
+
+    mps = M.gbs_like_mps(jax.random.key(0), sites, chi, 3,
+                         dtype=jnp.float32)
+    root = tempfile.mkdtemp(prefix="bench_broadcast_")
+    try:
+        # bf16 storage: the same compression that halves disk reads halves
+        # the broadcast bytes (§3.3.2 applied to the wire)
+        with GammaStore(root, storage_dtype=jnp.bfloat16,
+                        compute_dtype=jnp.float32) as store:
+            store.write_mps(mps)
+        key = jax.random.key(1)
+
+        common.header()
+        # warm the jit cache so neither variant pays compilation in its wall
+        _run_cluster(root, [None], seg, n, key)
+
+        # -- naive: every process reads its own Γ (p readers) ---------------
+        wall_naive, outs_naive, stats_naive = _run_cluster(
+            root, [None] * p, seg, n, key)
+        naive_bytes = [stats_naive[i]["io_bytes"] for i in range(p)]
+        common.emit("broadcast_naive_total", wall_naive,
+                    f"store_bytes_per_proc={naive_bytes}")
+
+        # -- paper §3.1: root reads once, broadcasts (1 reader) -------------
+        wall_bc, outs_bc, stats_bc = _run_cluster(
+            root, api.emulated_cluster(p, timeout=600.0), seg, n, key)
+        bc_bytes = [stats_bc[i]["io_bytes"] for i in range(p)]
+        wire = stats_bc[0]["broadcast_send_bytes"]
+        common.emit("broadcast_root_total", wall_bc,
+                    f"store_bytes_per_proc={bc_bytes}")
+        common.emit("broadcast_wire", 0.0, f"bytes={wire}")
+
+        same = all(np.array_equal(outs_bc[i], outs_naive[0])
+                   for i in range(p))
+        io_reduction = sum(naive_bytes) / max(1, sum(bc_bytes))
+        print(f"# {p} procs, chain {sites}x{chi}: store I/O "
+              f"{sum(naive_bytes)/1e6:.2f} MB -> {sum(bc_bytes)/1e6:.2f} MB "
+              f"({io_reduction:.1f}x fewer store bytes), wire "
+              f"{wire/1e6:.2f} MB, bit-identical={same}")
+        assert same, "broadcast walk diverged from the local walk"
+
+        if args.json:
+            record = {
+                "bench": "broadcast",
+                "utc": datetime.datetime.now(
+                    datetime.timezone.utc).isoformat(timespec="seconds"),
+                "config": {"procs": p, "sites": sites, "chi": chi,
+                           "samples": n, "segment_len": seg,
+                           "smoke": bool(args.smoke)},
+                "naive": {"wall_s": wall_naive,
+                          "store_bytes_per_proc": naive_bytes},
+                "root_broadcast": {"wall_s": wall_bc,
+                                   "store_bytes_per_proc": bc_bytes,
+                                   "wire_bytes": int(wire)},
+                "store_io_reduction": io_reduction,
+                "bit_identical": bool(same),
+            }
+            trajectory = []
+            if os.path.exists(args.json):
+                with open(args.json) as f:
+                    trajectory = json.load(f)
+            trajectory.append(record)
+            with open(args.json, "w") as f:
+                json.dump(trajectory, f, indent=1)
+            print(f"# appended to {args.json} "
+                  f"({len(trajectory)} records)")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,24 +1,41 @@
 """Unified sampling API — one front door for every FastMPS mode.
 
 One :class:`SamplingSession` call covers the whole design matrix
-{in-memory, streamed} × {seq, dp, tp_single, tp_double} × {fixed χ,
-dynamic χ} × {whole-batch, micro-batched}, with fault-tolerant macro
-batches and bit-exact mid-chain resume.  Backends are registry entries
-(:func:`register_backend`) — a new execution strategy never forks the
-driver, examples, or tests.
+{in-memory, streamed, remote} × {local, multihost, remote runtime} ×
+{seq, dp, tp_single, tp_double} × {fixed χ, dynamic χ} × {whole-batch,
+micro-batched}, with fault-tolerant macro batches and bit-exact mid-chain
+resume.
 
-The legacy entry points (``core.parallel.multilevel_sample``/``dp_sample``/
-``baseline19_sample`` and ``engine.stream_sample``) are deprecation-shimmed
-and will be removed one release after this facade; they emit
-``DeprecationWarning`` pointing here.
+Execution is split along two orthogonal, independently-pluggable axes:
+
+* the **data plane** (``backend=`` — :func:`register_backend`): how a
+  resolved plan walks the chain;
+* the **cluster runtime** (``runtime=`` — ``repro.api.runtime``): where
+  processes/devices live and how Γ bytes move between them — ``local``,
+  ``multihost`` (paper §3.1 process-0-reads-then-broadcasts), ``remote``
+  (serialized-config dispatch, ``repro.api.remote``).
+
+so a new execution strategy or a new deployment shape never forks the
+driver, examples, or tests.  The legacy entry points
+(``core.parallel.multilevel_sample``/``dp_sample``/``baseline19_sample``
+and ``engine.stream_sample``) were removed one release after this facade
+shipped, as scheduled — every caller goes through the session.
 """
+from repro.api import remote  # noqa: F401  (registers the remote runtime)
 from repro.api.backends import (Backend, SampleRequest, available_backends,
                                 get_backend, register_backend)
 from repro.api.config import (AUTO, SamplerConfig, SessionPlan, resolve_plan)
+from repro.api.remote import RemoteRuntime
+from repro.api.runtime import (ClusterRuntime, LocalRuntime,
+                               MultiHostRuntime, available_runtimes,
+                               emulated_cluster, get_runtime,
+                               register_runtime, resolve_runtime)
 from repro.api.session import SamplingSession
 
 __all__ = [
-    "AUTO", "Backend", "SampleRequest", "SamplerConfig", "SamplingSession",
-    "SessionPlan", "available_backends", "get_backend", "register_backend",
-    "resolve_plan",
+    "AUTO", "Backend", "ClusterRuntime", "LocalRuntime", "MultiHostRuntime",
+    "RemoteRuntime", "SampleRequest", "SamplerConfig", "SamplingSession",
+    "SessionPlan", "available_backends", "available_runtimes", "get_backend",
+    "get_runtime", "emulated_cluster", "register_backend", "register_runtime",
+    "resolve_plan", "resolve_runtime",
 ]

@@ -1,19 +1,30 @@
-"""Backend registry for :class:`repro.api.SamplingSession`.
+"""Data-plane registry for :class:`repro.api.SamplingSession`.
 
-A *backend* executes one fully-resolved :class:`SessionPlan` against a
-chain source.  Two ship with the repo:
+Execution is the composition of two orthogonal axes:
 
-* ``inmem``    — the whole stacked Γ is a device operand; routes to the
-  ``core/sampler`` scan (scheme ``seq``), the ``core/parallel`` multi-level
-  sampler (``dp``/``tp_*``/``baseline19``), ``dynamic_bond.sample_staged``
-  (seq + χ-profile), or a χ-stage loop over the segment runner
-  (dp/tp + χ-profile).
-* ``streamed`` — the ``engine.StreamingEngine`` walks the chain in
-  device-budgeted segments from a :class:`GammaStore` with double-buffered
-  prefetch, composing every one of the above levels plus per-segment
-  checkpointing and mid-chain resume.
+* a **data plane** (this registry): how a fully-resolved
+  :class:`SessionPlan` walks the chain —
 
-Adding a scheme or a new execution strategy is a registry entry::
+  - ``inmem``    — the whole stacked Γ is a device operand; routes to the
+    ``core/sampler`` scan (scheme ``seq``), the ``core/parallel`` segment
+    runner (``dp``/``tp_*``), the [19] pipeline, ``dynamic_bond``'s staged
+    scans (seq + χ-profile, micro-batched or not), or a χ-stage loop over
+    the segment runner (dp/tp + χ-profile);
+  - ``streamed`` — the ``engine.StreamingEngine`` walks the chain in
+    device-budgeted segments from a :class:`GammaStore` with
+    double-buffered prefetch, composing every one of the above levels plus
+    per-segment checkpointing and mid-chain resume;
+  - ``remote``   — no local walk at all: the request is serialized and
+    dispatched through the runtime (``repro.api.remote``);
+
+* a **cluster runtime** (``repro.api.runtime``): where the participating
+  processes live and how Γ bytes move between them — ``local``,
+  ``multihost`` (paper §3.1 root-reads-then-broadcasts, streamed data
+  plane only), ``remote``.
+
+A (data_plane × runtime) cell is therefore *config*, not a class:
+``SamplerConfig(backend="streamed", runtime="multihost")`` is the paper's
+multi-host broadcast run.  Adding a data plane is a registry entry::
 
     @register_backend("my_backend")
     class MyBackend(Backend):
@@ -21,11 +32,12 @@ Adding a scheme or a new execution strategy is a registry entry::
         def sample(self, req: SampleRequest) -> np.ndarray: ...
 
 — sessions pick it up via ``SamplerConfig(backend="my_backend")``; nothing
-in the session/driver layer changes.
+in the session/driver layer changes.  Runtimes register the same way
+(``repro.api.runtime.register_runtime``).
 
-Every backend honours the seed-consistency contract (paper §4.1): for one
-seed, every (backend × scheme) cell emits **bit-identical** samples —
-asserted in ``tests/test_api.py``.
+Every cell honours the seed-consistency contract (paper §4.1): for one
+seed, every supported (data_plane × runtime × scheme) cell emits
+**bit-identical** samples — asserted in ``tests/test_api.py``.
 """
 from __future__ import annotations
 
@@ -66,7 +78,10 @@ class SampleRequest:
 
     ``mps`` / ``store`` are zero-arg callables so a backend only pays the
     materialization it actually uses (a streamed session never loads the
-    full chain; an in-memory session never writes a store).
+    full chain; an in-memory session never writes a store).  ``runtime`` is
+    the session's resolved :class:`~repro.api.runtime.ClusterRuntime`;
+    ``config`` the original session-level config (what the ``remote`` data
+    plane serializes and dispatches).
     """
     plan: SessionPlan
     n_samples: int
@@ -74,6 +89,8 @@ class SampleRequest:
     mesh: object
     mps: Callable[[], object]
     store: Callable[[], object]
+    runtime: object = None
+    config: object = None
     resume: bool = False
     checkpoint_dir: Optional[str] = None
     stop_after_segments: Optional[int] = None
@@ -108,8 +125,12 @@ class InMemBackend(Backend):
 
         if plan.scheme == "seq":
             if plan.stages is not None:
-                out = DB.sample_staged(mps, np.asarray(plan.chi_profile),
-                                       n, key, cfg)
+                prof = np.asarray(plan.chi_profile)
+                if plan.micro_batch is not None:
+                    out = DB.sample_staged_batched(mps, prof, n, key,
+                                                   plan.micro_batch, cfg)
+                else:
+                    out = DB.sample_staged(mps, prof, n, key, cfg)
             elif plan.micro_batch is not None:
                 out = S.sample_batched(mps, n, key, plan.micro_batch, cfg)
             else:
@@ -161,7 +182,8 @@ class StreamedBackend(Backend):
             mesh=req.mesh if engine_scheme != "inmem" else None,
             pconfig=plan.pconfig,
             checkpoint_dir=req.checkpoint_dir,
-            chi_profile=plan.chi_profile)
+            chi_profile=plan.chi_profile,
+            runtime=req.runtime)
         try:
             out = eng.sample(req.n_samples, req.key, resume=req.resume,
                              stop_after_segments=req.stop_after_segments)
@@ -170,3 +192,41 @@ class StreamedBackend(Backend):
         finally:
             # the store may be session-owned and serve further calls
             eng.close(close_store=False)
+
+
+@register_backend("remote")
+class RemoteBackend(Backend):
+    """Dispatch the serialized request through the runtime (no local walk).
+
+    The payload (``repro.api.remote``) carries the session config, the
+    store location, the batch size, and the PRNG key; the runtime's
+    ``submit`` runs it wherever its workers live — in-process for
+    ``LocalRuntime`` (loopback), a fresh worker interpreter for
+    ``RemoteRuntime``.  The worker resolves the inner config locally and
+    its streamed walk is bit-identical to a local one (§4.1 across the
+    dispatch boundary).
+    """
+    name = "remote"
+
+    def sample(self, req: SampleRequest) -> np.ndarray:
+        from repro.api.remote import build_payload
+
+        if req.resume:
+            raise ValueError("resume is local to the worker's checkpoint "
+                             "dir — re-dispatch the batch instead (macro "
+                             "batches are idempotent work items)")
+        if req.checkpoint_dir is not None:
+            raise ValueError("backend='remote' does not ship a "
+                             "checkpoint_dir (see resolve_plan) — remote "
+                             "fault tolerance is per-macro-batch")
+        # the store is the hand-off medium: an MPS source is materialized
+        # once (identity dtype) and only its *location* rides the payload
+        store = req.store()
+        payload = build_payload(req.config, store, req.n_samples, req.key)
+        # counters are monotonic on the runtime — stats report this call's
+        # delta, matching the streamed engine's per-walk scoping
+        before = dict(req.runtime.io_counters())
+        out = req.runtime.submit(payload)
+        req.stats.update({f"runtime_{k}": v - before.get(k, 0)
+                          for k, v in req.runtime.io_counters().items()})
+        return np.asarray(out)

@@ -20,8 +20,14 @@ field                   meaning
 ``scheme``              "seq" | "dp" | "tp_single" | "tp_double" |
                         "baseline19" | AUTO (planner: Eq. 7 TP selector over
                         the mesh's p₁×p₂)
-``backend``             "inmem" | "streamed" | AUTO (streamed iff the source
-                        is a ``GammaStore`` / store path)
+``backend``             the *data plane*: "inmem" | "streamed" | "remote" |
+                        AUTO (streamed iff the source is a ``GammaStore`` /
+                        store path; remote iff the runtime is remote)
+``runtime``             the *cluster runtime*: "local" | "multihost" |
+                        "remote" | a ``ClusterRuntime`` instance | AUTO
+                        (local on one process).  Orthogonal to ``backend``:
+                        ``streamed × multihost`` is the paper's §3.1
+                        process-0-reads-then-broadcasts cell
 ``scaling``             §3.3 environment rescale: "none"|"global"|"per_sample"
 ``compute_dtype``       mixed-precision GEMM inputs (e.g. ``jnp.bfloat16``)
 ``wire_dtype``          §3.3.2-on-the-wire cast for TP collectives
@@ -46,6 +52,7 @@ from typing import Any, Optional, Union
 
 import numpy as np
 
+from repro.api.runtime import ClusterRuntime, resolve_runtime
 from repro.core.dynamic_bond import stages_from_profile
 from repro.core.parallel import ParallelConfig
 from repro.core.perfmodel import (Hardware, TPU_V5E, Workload,
@@ -55,7 +62,6 @@ from repro.core.sampler import SamplerConfig as CoreSamplerConfig
 AUTO = "auto"
 
 _SCHEMES = ("seq", "dp", "tp_single", "tp_double", "baseline19")
-_BACKENDS = ("inmem", "streamed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,9 +73,10 @@ class SamplerConfig:
     compute_dtype: Optional[Any] = None
     wire_dtype: Optional[Any] = None
     measure_first: bool = False
-    # placement
+    # placement: data plane (backend) × cluster runtime — orthogonal axes
     scheme: str = AUTO
     backend: str = AUTO
+    runtime: Union[str, ClusterRuntime] = AUTO
     # batching (paper N₂; per data shard)
     micro_batch: Union[int, str, None] = None
     # dynamic bond dimensions (paper §3.4.2): bucketed per-site χ
@@ -87,7 +94,8 @@ class SamplerConfig:
 @dataclasses.dataclass(frozen=True)
 class SessionPlan:
     """Fully-resolved execution record for one ``session.sample(n, key)``."""
-    backend: str                       # "inmem" | "streamed"
+    backend: str                       # data plane: "inmem" | "streamed" | ...
+    runtime: str                       # cluster runtime name: "local" | ...
     scheme: str                        # "seq" | "dp" | "tp_single" | ...
     semantics: str
     n_samples: int
@@ -129,17 +137,56 @@ def _auto_micro_batch(n_local: int, chi: int, d: int, budget: float,
 
 def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
                  chi: int, d: int, mesh=None, source_semantics=None,
-                 backend_hint: str = "inmem", elt_bytes: int = 8) -> SessionPlan:
+                 backend_hint: str = "inmem", elt_bytes: int = 8,
+                 runtime: Optional[ClusterRuntime] = None) -> SessionPlan:
     """Resolve every AUTO field of ``config`` into a :class:`SessionPlan`.
 
     Raises ``ValueError`` for contradictory requests (a parallel scheme with
-    no mesh, a χ bucket that does not divide over p₂, ...) — the session
-    surfaces these before any compilation happens.
+    no mesh, a χ bucket that does not divide over p₂, an unsupported
+    runtime × data-plane cell, ...) — the session surfaces these before any
+    compilation happens.  ``runtime`` is the session's already-resolved
+    :class:`ClusterRuntime`; ``None`` resolves ``config.runtime`` here.
     """
-    backend = backend_hint if config.backend == AUTO else config.backend
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; have {_BACKENDS} "
-                         f"(registry: repro.api.available_backends())")
+    from repro.api.backends import available_backends
+
+    if runtime is None:
+        runtime = resolve_runtime(config.runtime)
+    backend = config.backend
+    if backend == AUTO:
+        # a remote runtime can only execute a dispatched payload — the
+        # worker picks the data plane on its side
+        backend = "remote" if runtime.name == "remote" else backend_hint
+    if backend not in available_backends():
+        raise ValueError(f"unknown backend {backend!r}; have "
+                         f"{available_backends()} "
+                         f"(registry: repro.api.register_backend)")
+
+    # -- runtime × data-plane cell validation -------------------------------
+    if runtime.process_count > 1 and backend != "streamed":
+        raise ValueError(
+            f"runtime {runtime.name!r} spans {runtime.process_count} "
+            f"processes — the §3.1 Γ broadcast needs the 'streamed' data "
+            f"plane (got backend={backend!r})")
+    if runtime.name == "remote" and backend != "remote":
+        raise ValueError(
+            f"a remote runtime dispatches serialized configs — use "
+            f"backend='remote' (or AUTO), not {backend!r}")
+    if backend == "remote":
+        if config.scheme not in (AUTO, "seq"):
+            raise ValueError(
+                f"backend='remote' resolves placement on the worker — "
+                f"scheme must stay AUTO/'seq' on the dispatching side "
+                f"(got {config.scheme!r})")
+        if mesh is not None:
+            raise ValueError("backend='remote' takes no local mesh — the "
+                             "worker builds its own from its runtime")
+        if config.checkpoint_dir is not None:
+            raise ValueError(
+                "backend='remote' does not ship checkpoint_dir — the "
+                "worker's checkpoints would be local to it and resume "
+                "could not find them; rely on idempotent macro batches "
+                "(run_queue) for remote fault tolerance")
+
     semantics = (config.semantics if config.semantics != AUTO
                  else (source_semantics or "linear"))
 
@@ -208,10 +255,9 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
     if micro_was_auto:
         micro = _auto_micro_batch(n_local, chi, d, budget,
                                   bytes_per_elt=elt_bytes)
-        # AUTO must resolve to a *supported* value: combinations the user
-        # never asked for degrade to whole-batch instead of raising
-        if scheme == "baseline19" or (scheme == "seq" and stages is not None
-                                      and backend == "inmem"):
+        # AUTO must resolve to a *supported* value: the [19] pipeline is the
+        # one cell micro batching does not compose with
+        if scheme == "baseline19":
             micro = None
     if micro is not None:
         micro = int(micro)
@@ -223,11 +269,6 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
     if micro is not None and scheme == "baseline19":
         raise ValueError("micro batching does not compose with the [19] "
                          "pipeline baseline")
-    if micro is not None and scheme == "seq" and stages is not None \
-            and backend == "inmem":
-        raise ValueError("micro batching + dynamic χ on the in-memory seq "
-                         "path is not supported — use the streamed backend "
-                         "or a dp/tp scheme")
 
     # -- streamed-backend segment length ------------------------------------
     segment_len = None
@@ -260,7 +301,8 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
     sampler_config = CoreSamplerConfig(semantics=semantics,
                                        scaling=config.scaling,
                                        compute_dtype=config.compute_dtype)
-    return SessionPlan(backend=backend, scheme=scheme, semantics=semantics,
+    return SessionPlan(backend=backend, runtime=runtime.name, scheme=scheme,
+                       semantics=semantics,
                        n_samples=n_samples, p1=p1, p2=p2, micro_batch=micro,
                        segment_len=segment_len, chi_profile=chi_profile,
                        stages=stages,

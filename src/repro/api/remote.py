@@ -1,0 +1,196 @@
+"""Remote dispatch: serialize a `SamplerConfig`, ship it through a runtime.
+
+The ``remote`` backend does not walk the chain itself — it packages the
+session's request (config + store location + batch size + PRNG key) into a
+JSON-serializable *payload* and hands it to
+:meth:`repro.api.runtime.ClusterRuntime.submit`:
+
+* :class:`~repro.api.runtime.LocalRuntime` executes the payload in-process
+  (the loopback transport — zero infrastructure, same serialization
+  boundary, so the dispatch path is exercised by every tier-1 run);
+* :class:`RemoteRuntime` (registered as ``runtime="remote"``) spawns a
+  fresh worker interpreter (``python -m repro.api.remote``) that rebuilds a
+  :class:`~repro.api.session.SamplingSession` from the payload and streams
+  the samples back — a stand-in for a real RPC/queue transport with the
+  exact process isolation one would have: nothing but the payload crosses.
+
+Either way the worker resolves the *inner* config against its own
+local runtime (``runtime="local"``, ``backend=AUTO`` → streamed from the
+store path), so remote samples are bit-identical to a local streamed walk
+for the same seed — the §4.1 contract extends across the dispatch
+boundary and is asserted in ``tests/test_api.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from repro.api.runtime import ClusterRuntime, register_runtime
+
+_DTYPE_FIELDS = ("compute_dtype", "wire_dtype")
+
+
+def _dtype_name(dt) -> Optional[str]:
+    return None if dt is None else np.dtype(dt).name
+
+
+def _dtype_from_name(name: Optional[str]):
+    # by-name lookup through jnp attributes: numpy's registry does not know
+    # 'bfloat16' but jnp.bfloat16 (ml_dtypes) does
+    import jax.numpy as jnp
+    return None if name is None else getattr(jnp, name)
+
+
+def config_to_dict(config) -> dict:
+    """``SamplerConfig`` → a JSON-serializable dict (dtypes by name, the
+    perfmodel ``Hardware`` by its fields, runtime by name).
+
+    Field-by-field rather than ``dataclasses.asdict`` — the runtime field
+    may hold a live :class:`ClusterRuntime` whose locks/queues must not be
+    deep-copied."""
+    out = {f.name: getattr(config, f.name)
+           for f in dataclasses.fields(config)}
+    for f in _DTYPE_FIELDS:
+        out[f] = _dtype_name(out[f])
+    rt = out.get("runtime")
+    out["runtime"] = rt if isinstance(rt, (str, type(None))) else rt.name
+    out["hardware"] = dataclasses.asdict(config.hardware)
+    if out.get("chi_profile") is not None:
+        out["chi_profile"] = [int(c) for c in out["chi_profile"]]
+    return out
+
+
+def config_from_dict(d: dict):
+    """Inverse of :func:`config_to_dict`."""
+    from repro.api.config import SamplerConfig
+    from repro.core.perfmodel import Hardware
+    d = dict(d)
+    for f in _DTYPE_FIELDS:
+        d[f] = _dtype_from_name(d.get(f))
+    d["hardware"] = Hardware(**d["hardware"])
+    if d.get("chi_profile") is not None:
+        d["chi_profile"] = tuple(int(c) for c in d["chi_profile"])
+    return SamplerConfig(**d)
+
+
+def build_payload(config, store, n_samples: int, key) -> dict:
+    """The unit of dispatch: everything a worker needs to reproduce one
+    ``session.sample(n, key)`` bit-exactly, as plain JSON.
+
+    The inner config re-resolves on the worker: ``backend=AUTO`` picks the
+    streamed data plane from the store path, ``runtime="local"`` because
+    the worker IS the remote process.  Γ itself never rides the payload —
+    the store location does (shared filesystem / object store in a real
+    deployment).
+    """
+    import jax
+
+    from repro.api.runtime import AUTO
+    inner = dataclasses.replace(config, backend=AUTO, runtime="local",
+                                store_root=None, checkpoint_dir=None)
+    return {
+        "version": 1,
+        "config": config_to_dict(inner),
+        "store_root": str(store.root),
+        "storage_dtype": np.dtype(store.storage_dtype).name,
+        "compute_dtype": np.dtype(store.compute_dtype).name,
+        "n_samples": int(n_samples),
+        "key_data": np.asarray(jax.random.key_data(key)).tolist(),
+        "enable_x64": bool(jax.config.jax_enable_x64),
+    }
+
+
+def execute_payload(payload: dict) -> np.ndarray:
+    """Run one payload to completion — the worker half of the dispatch.
+
+    Called in-process by ``LocalRuntime.submit`` and as ``__main__`` by
+    :class:`RemoteRuntime`'s spawned interpreter."""
+    import jax
+
+    if payload.get("enable_x64"):
+        jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.api.session import SamplingSession
+    from repro.data.gamma_store import GammaStore
+
+    config = config_from_dict(payload["config"])
+    key = jax.random.wrap_key_data(
+        jnp.asarray(payload["key_data"], dtype=jnp.uint32))
+    with GammaStore(payload["store_root"],
+                    storage_dtype=_dtype_from_name(payload["storage_dtype"]),
+                    compute_dtype=_dtype_from_name(payload["compute_dtype"])
+                    ) as store:
+        with SamplingSession(store, config) as session:
+            return session.sample(payload["n_samples"], key)
+
+
+@register_runtime("remote")
+class RemoteRuntime(ClusterRuntime):
+    """Dispatch payloads to worker interpreters on this machine.
+
+    One spawned ``python -m repro.api.remote`` per :meth:`submit` — the
+    subprocess boundary enforces that only the serialized payload crosses,
+    exactly what an RPC transport to another machine would guarantee.
+    Point :attr:`python` / :attr:`env` at a container or remote-exec shim
+    to move the worker off-host; the payload schema does not change.
+    """
+    name = "remote"
+
+    def __init__(self, python: Optional[str] = None,
+                 env: Optional[dict] = None, timeout: float = 600.0):
+        self.python = python or sys.executable
+        self.env = env
+        self.timeout = timeout
+        self._dispatch_bytes = 0
+        self._dispatches = 0
+
+    def io_counters(self) -> dict:
+        out = super().io_counters()
+        out.update(dispatch_bytes=self._dispatch_bytes,
+                   dispatches=self._dispatches)
+        return out
+
+    def submit(self, payload: dict) -> np.ndarray:
+        blob = json.dumps(payload).encode()
+        self._dispatch_bytes += len(blob)
+        self._dispatches += 1
+        env = dict(os.environ if self.env is None else self.env)
+        src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        env["PYTHONPATH"] = src_root + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        with tempfile.TemporaryDirectory(prefix="fastmps_remote_") as tmp:
+            payload_path = os.path.join(tmp, "payload.json")
+            out_path = os.path.join(tmp, "samples.npy")
+            with open(payload_path, "wb") as f:
+                f.write(blob)
+            proc = subprocess.run(
+                [self.python, "-m", "repro.api.remote", payload_path,
+                 out_path],
+                env=env, capture_output=True, text=True,
+                timeout=self.timeout)
+            if proc.returncode != 0:
+                raise RuntimeError(
+                    f"remote worker failed (rc={proc.returncode}):\n"
+                    f"{proc.stderr[-2000:]}")
+            return np.load(out_path)
+
+
+def _worker_main(argv: list[str]) -> int:
+    payload_path, out_path = argv
+    with open(payload_path) as f:
+        payload = json.load(f)
+    np.save(out_path, execute_payload(payload))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_worker_main(sys.argv[1:]))

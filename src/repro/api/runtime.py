@@ -1,0 +1,406 @@
+"""`ClusterRuntime` — where processes/devices live and how bytes move.
+
+A backend used to be a monolith: ``inmem``/``streamed`` each hard-coded
+their own placement, fetch, and collective story.  This module splits the
+execution API into two orthogonal axes:
+
+* the **data plane** (``repro.api.backends``): how a resolved
+  :class:`SessionPlan` walks the chain — in-memory scan vs. segment-streamed;
+* the **runtime** (this module): where the participating processes live and
+  how host bytes move between them — ``local`` (one process, collectives are
+  no-ops), ``multihost`` (the paper's §3.1 process-0-reads-then-broadcast
+  over the interconnect), ``remote`` (dispatch a serialized
+  :class:`SamplerConfig` to a worker, see ``repro.api.remote``).
+
+Every runtime implements the same small protocol::
+
+    runtime.process_index / runtime.process_count / runtime.is_root
+    runtime.mesh(model_parallel)       # device mesh over the global view
+    runtime.broadcast_segment(payload) # root sends, everyone returns it
+    runtime.barrier()                  # line the processes up
+    runtime.io_counters()              # interconnect/dispatch byte counters
+    runtime.submit(payload)            # remote-dispatch entry (see remote.py)
+
+so ``streamed × multihost`` is a *config cell* —
+``SamplerConfig(backend="streamed", runtime="multihost")`` — rather than a
+new backend class, and every future scale concern (elastic workers,
+straggler mitigation, RPC dispatch) is a runtime entry instead of a
+backend fork.
+
+The wire format of :meth:`broadcast_segment` is the **storage format** of
+:class:`repro.data.gamma_store.GammaStore` (bf16-packed Γ when the store is
+bf16 — §3.3.2's FP16 trick halves broadcast bytes exactly as it halves
+disk bytes), and every process — root included — decodes through the same
+``gamma_store.decode_segment`` the local read path uses, so a multihost
+walk is bit-identical to a local one by construction.
+
+Multi-process behaviour is testable on one machine:
+:func:`emulated_cluster` builds N :class:`MultiHostRuntime` instances wired
+through an in-process interconnect — the same code path a real
+``jax.distributed`` deployment takes, minus the network.
+"""
+from __future__ import annotations
+
+import threading
+import queue as queue_mod
+from typing import Callable, Optional
+
+import numpy as np
+
+AUTO = "auto"
+
+_RUNTIME_REGISTRY: dict[str, Callable[[], "ClusterRuntime"]] = {}
+
+
+def register_runtime(name: str):
+    """Decorator: register a zero-arg runtime factory under ``name``."""
+    def deco(factory):
+        _RUNTIME_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available_runtimes() -> list[str]:
+    return sorted(_RUNTIME_REGISTRY)
+
+
+def get_runtime(name: str) -> "ClusterRuntime":
+    try:
+        return _RUNTIME_REGISTRY[name]()
+    except KeyError:
+        raise ValueError(f"no runtime {name!r} registered; "
+                         f"have {available_runtimes()}") from None
+
+
+def resolve_runtime(spec) -> "ClusterRuntime":
+    """AUTO → local on one process; a name → registry; an instance → itself.
+
+    Tests and emulated deployments pass runtime *instances* (e.g. one member
+    of :func:`emulated_cluster`); configs written to disk pass names.
+    """
+    if spec is None or spec == AUTO:
+        return get_runtime("local")
+    if isinstance(spec, ClusterRuntime):
+        return spec
+    if isinstance(spec, str):
+        return get_runtime(spec)
+    raise TypeError(f"runtime must be a name, a ClusterRuntime instance, or "
+                    f"AUTO — got {type(spec).__name__}")
+
+
+def _payload_nbytes(payload) -> int:
+    if payload is None:
+        return 0
+    return sum(int(v.nbytes) for v in payload.values()
+               if isinstance(v, np.ndarray))
+
+
+def payload_to_bytes(payload: dict) -> np.ndarray:
+    """Segment wire payload → one flat uint8 buffer (npz framing).
+
+    ``jax.experimental.multihost_utils.broadcast_one_to_all`` needs every
+    process to supply the *same* pytree of arrays — a dict with variable
+    shapes and non-array metadata is not broadcastable as-is, but
+    (length, bytes) is: see :class:`JaxMultiHostRuntime`.  Dtypes ride as
+    names; the Γ bytes stay in storage format (no recompression)."""
+    import io
+
+    bio = io.BytesIO()
+    np.savez(bio, gamma=payload["gamma"], lam=payload["lam"],
+             gshape=np.asarray(payload["gshape"], dtype=np.int64),
+             two_byte=np.asarray(bool(payload["two_byte"])),
+             start=np.asarray(int(payload["start"]), dtype=np.int64),
+             storage_dtype=np.asarray(
+                 np.dtype(payload["storage_dtype"]).name),
+             compute_dtype=np.asarray(
+                 np.dtype(payload["compute_dtype"]).name))
+    return np.frombuffer(bio.getvalue(), dtype=np.uint8)
+
+
+def payload_from_bytes(buf: np.ndarray) -> dict:
+    """Inverse of :func:`payload_to_bytes`."""
+    import io
+
+    import jax.numpy as jnp
+
+    with np.load(io.BytesIO(np.asarray(buf, dtype=np.uint8).tobytes())) as z:
+        return {"gamma": z["gamma"], "lam": z["lam"],
+                "gshape": tuple(int(x) for x in z["gshape"]),
+                "two_byte": bool(z["two_byte"]),
+                "start": int(z["start"]),
+                "storage_dtype": getattr(jnp, str(z["storage_dtype"])),
+                "compute_dtype": getattr(jnp, str(z["compute_dtype"]))}
+
+
+class ClusterRuntime:
+    """Where processes/devices live and how bytes move between them."""
+    name = "abstract"
+
+    # -- topology ------------------------------------------------------------
+    @property
+    def process_index(self) -> int:
+        return 0
+
+    @property
+    def process_count(self) -> int:
+        return 1
+
+    @property
+    def is_root(self) -> bool:
+        return self.process_index == 0
+
+    def mesh(self, model_parallel: int = 1):
+        """Device mesh over this runtime's global device view (the default
+        covers whatever jax exposes to this process — forced host devices
+        included, which is what the emulated tests use)."""
+        from repro.launch.mesh import make_host_mesh
+        return make_host_mesh(model=model_parallel)
+
+    # -- collectives (host-side, segment granularity) ------------------------
+    def broadcast_segment(self, payload: Optional[dict], root: int = 0
+                          ) -> dict:
+        """Root sends ``payload`` (a dict of host arrays + metadata) to every
+        process; every caller — root included — returns the payload.  The
+        single-process default is a no-op passthrough."""
+        if payload is None:
+            raise ValueError(f"runtime {self.name!r} has one process — "
+                             f"broadcast_segment needs the payload on it")
+        return payload
+
+    def barrier(self) -> None:
+        """Line the processes up (no-op with one process)."""
+
+    def compute_lock(self):
+        """Context manager held around one segment's device execution.
+
+        A no-op everywhere except the *emulated* cluster: there, N
+        "processes" share one local XLA backend, and two collective
+        programs executing concurrently can interleave their rendezvous
+        participants and deadlock the device thread pool — something a
+        real multi-process launch cannot do (one program per process, own
+        devices).  The emulated fabric therefore serializes segment
+        compute across its members; broadcast/prefetch still overlap."""
+        import contextlib
+        return contextlib.nullcontext()
+
+    # -- instrumentation ------------------------------------------------------
+    def io_counters(self) -> dict:
+        """Monotonic byte/segment counters for everything this runtime moved
+        over the interconnect (or dispatched to a worker).  Engines report
+        per-walk deltas of these next to the GammaStore's disk counters."""
+        return {"broadcast_send_bytes": 0, "broadcast_recv_bytes": 0,
+                "broadcast_segments": 0, "dispatch_bytes": 0}
+
+    # -- remote dispatch ------------------------------------------------------
+    def submit(self, payload: dict) -> np.ndarray:
+        """Execute one serialized sampling request (see ``repro.api.remote``
+        for the payload schema) wherever this runtime's workers live."""
+        raise NotImplementedError(f"runtime {self.name!r} has no dispatch "
+                                  f"transport")
+
+
+@register_runtime("local")
+class LocalRuntime(ClusterRuntime):
+    """Today's behaviour: one process, collectives are no-ops.
+
+    ``submit`` still works — it executes the serialized request in-process
+    (the loopback transport), so ``backend="remote"`` is exercisable without
+    any worker infrastructure and the dispatch path never rots.
+    """
+    name = "local"
+
+    def __init__(self):
+        self._dispatch_bytes = 0
+
+    def io_counters(self) -> dict:
+        out = super().io_counters()
+        out["dispatch_bytes"] = self._dispatch_bytes
+        return out
+
+    def submit(self, payload: dict) -> np.ndarray:
+        import json
+
+        from repro.api.remote import execute_payload
+        self._dispatch_bytes += len(json.dumps(payload).encode())
+        return execute_payload(payload)
+
+
+class _Interconnect:
+    """In-process stand-in for the multi-host fabric: one queue per process
+    plus a shared barrier.  Queues are unbounded so the root may run ahead
+    of slow receivers (each *engine* still bounds its own live segments at
+    two; the fabric models wire buffering, not device memory)."""
+
+    def __init__(self, n_processes: int, timeout: float = 120.0):
+        self.n = n_processes
+        self.timeout = timeout
+        self.queues = [queue_mod.Queue() for _ in range(n_processes)]
+        self.barrier = threading.Barrier(n_processes)
+        # emulated processes share one XLA backend: collective programs
+        # from two members must not execute concurrently (their rendezvous
+        # would interleave and deadlock the device pool) — see
+        # ClusterRuntime.compute_lock
+        self.compute = threading.Lock()
+
+    def send(self, dst: int, msg) -> None:
+        self.queues[dst].put(msg)
+
+    def recv(self, dst: int):
+        try:
+            return self.queues[dst].get(timeout=self.timeout)
+        except queue_mod.Empty:
+            raise TimeoutError(
+                f"process {dst} waited >{self.timeout}s for a broadcast — "
+                f"is the root walking the same segment schedule?") from None
+
+
+class MultiHostRuntime(ClusterRuntime):
+    """Paper §3.1: process 0 reads each Γ segment once and broadcasts it.
+
+    One instance per participating process.  The transport is pluggable:
+    :func:`emulated_cluster` wires N instances through an in-process
+    :class:`_Interconnect` (tests, benches, single-machine smoke runs); a
+    real deployment constructs one per host over ``jax.distributed`` (see
+    :func:`jax_multihost_runtime`).
+    """
+    name = "multihost"
+
+    def __init__(self, process_index: int, process_count: int,
+                 fabric: _Interconnect):
+        self._index = process_index
+        self._count = process_count
+        self._fabric = fabric
+        self._send_bytes = 0
+        self._recv_bytes = 0
+        self._segments = 0
+
+    @property
+    def process_index(self) -> int:
+        return self._index
+
+    @property
+    def process_count(self) -> int:
+        return self._count
+
+    def broadcast_segment(self, payload: Optional[dict], root: int = 0
+                          ) -> dict:
+        if self._index == root:
+            if payload is None:
+                raise ValueError("the root process must supply the payload")
+            nbytes = _payload_nbytes(payload)
+            for dst in range(self._count):
+                if dst != root:
+                    self._fabric.send(dst, payload)
+            self._send_bytes += nbytes * (self._count - 1)
+        else:
+            if payload is not None:
+                raise ValueError(
+                    f"process {self._index} is not the broadcast root "
+                    f"({root}) but supplied a payload — only the root may "
+                    f"touch the GammaStore")
+            payload = self._fabric.recv(self._index)
+            self._recv_bytes += _payload_nbytes(payload)
+        self._segments += 1
+        return payload
+
+    def barrier(self) -> None:
+        self._fabric.barrier.wait(timeout=self._fabric.timeout)
+
+    def compute_lock(self):
+        import contextlib
+        if self._fabric is not None and hasattr(self._fabric, "compute"):
+            return self._fabric.compute
+        return contextlib.nullcontext()
+
+    def io_counters(self) -> dict:
+        out = super().io_counters()
+        out.update(broadcast_send_bytes=self._send_bytes,
+                   broadcast_recv_bytes=self._recv_bytes,
+                   broadcast_segments=self._segments)
+        return out
+
+
+def emulated_cluster(n_processes: int, timeout: float = 120.0
+                     ) -> list[MultiHostRuntime]:
+    """N multihost runtimes sharing an in-process interconnect.
+
+    Drive one engine/session per returned runtime (concurrently — e.g. one
+    thread each, the way tests/test_api.py does) and the root alone reads
+    the GammaStore while every process emits bit-identical samples."""
+    if n_processes < 2:
+        raise ValueError(f"an emulated cluster needs ≥ 2 processes, got "
+                         f"{n_processes}")
+    fabric = _Interconnect(n_processes, timeout=timeout)
+    return [MultiHostRuntime(i, n_processes, fabric)
+            for i in range(n_processes)]
+
+
+class JaxMultiHostRuntime(MultiHostRuntime):  # pragma: no cover — ≥2 procs
+    """The same broadcast over a real ``jax.distributed`` launch.
+
+    ``multihost_utils.broadcast_one_to_all`` requires every process to
+    supply an identically-structured pytree of arrays, so the
+    variable-shape payload goes over in two fixed-structure rounds: a
+    (1,)-int64 length every process can pre-shape, then the npz-framed
+    byte buffer (:func:`payload_to_bytes` — storage format, no
+    recompression; the round-trip itself is unit-tested in-process).  The
+    in-process :class:`MultiHostRuntime` above exercises the identical
+    engine/session wiring in CI."""
+
+    def __init__(self):
+        import jax
+        super().__init__(jax.process_index(), jax.process_count(),
+                         fabric=None)
+
+    def broadcast_segment(self, payload, root: int = 0) -> dict:
+        from jax.experimental import multihost_utils as mhu
+        if self.is_root:
+            if payload is None:
+                raise ValueError("the root process must supply the payload")
+            blob = payload_to_bytes(payload)
+            length = np.asarray([blob.size], dtype=np.int64)
+        else:
+            blob = None
+            length = np.zeros((1,), dtype=np.int64)
+        length = np.asarray(
+            mhu.broadcast_one_to_all(length, is_source=self.is_root))
+        if not self.is_root:
+            blob = np.zeros((int(length[0]),), dtype=np.uint8)
+        blob = np.asarray(
+            mhu.broadcast_one_to_all(blob, is_source=self.is_root))
+        if self.is_root:
+            self._send_bytes += int(blob.size) * (self._count - 1)
+        else:
+            payload = payload_from_bytes(blob)
+            self._recv_bytes += int(blob.size)
+        self._segments += 1
+        return payload
+
+    def barrier(self) -> None:
+        from jax.experimental import multihost_utils as mhu
+        mhu.sync_global_devices("repro.api.runtime.barrier")
+
+
+@register_runtime("multihost")
+def jax_multihost_runtime() -> MultiHostRuntime:
+    """The real multi-process entry: requires ``jax.distributed`` to be
+    initialized (jax.process_count() > 1).  Single-process sessions that
+    want the broadcast code path pass an :func:`emulated_cluster` member as
+    ``SamplerConfig(runtime=<instance>)`` instead."""
+    import jax
+
+    if jax.process_count() < 2:
+        raise ValueError(
+            "runtime='multihost' needs a jax.distributed launch with ≥ 2 "
+            "processes (jax.process_count() == "
+            f"{jax.process_count()}); for single-machine tests pass an "
+            "emulated_cluster(n) member as SamplerConfig(runtime=<instance>)")
+    return JaxMultiHostRuntime()
+
+
+__all__ = [
+    "AUTO", "ClusterRuntime", "JaxMultiHostRuntime", "LocalRuntime",
+    "MultiHostRuntime", "available_runtimes", "emulated_cluster",
+    "get_runtime", "payload_from_bytes", "payload_to_bytes",
+    "register_runtime", "resolve_runtime",
+]

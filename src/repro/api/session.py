@@ -39,17 +39,22 @@ import numpy as np
 
 from repro.api.backends import SampleRequest, get_backend
 from repro.api.config import SamplerConfig, SessionPlan, resolve_plan
+from repro.api.runtime import resolve_runtime
 from repro.core.mps import MPS
 from repro.data.gamma_store import GammaStore
 
 
 class SamplingSession:
-    """Facade over the backend registry; see module docstring."""
+    """Facade over the (data plane × runtime) registries; see module
+    docstring."""
 
     def __init__(self, source: Union[MPS, GammaStore, str, os.PathLike],
                  config: Optional[SamplerConfig] = None, *, mesh=None):
         self.config = config or SamplerConfig()
         self.mesh = mesh
+        # the cluster runtime is session state (it may hold live transport
+        # handles); plans record only its name
+        self.runtime = resolve_runtime(self.config.runtime)
         self._mps: Optional[MPS] = None
         self._store: Optional[GammaStore] = None
         self._owns_store = False
@@ -90,7 +95,7 @@ class SamplingSession:
                 chi=self.chi, d=self.d, mesh=self.mesh,
                 source_semantics=self._source_semantics,
                 backend_hint=self._backend_hint,
-                elt_bytes=self._elt_bytes)
+                elt_bytes=self._elt_bytes, runtime=self.runtime)
         return self._plans[n_samples]
 
     def explain(self, n_samples: int) -> dict:
@@ -98,7 +103,9 @@ class SamplingSession:
         plan = self.plan(n_samples)
         stages = plan.stages or ((0, self.n_sites, self.chi),)
         info = {
-            "backend": plan.backend, "scheme": plan.scheme,
+            "backend": plan.backend, "runtime": plan.runtime,
+            "processes": self.runtime.process_count,
+            "scheme": plan.scheme,
             "semantics": plan.semantics, "p1": plan.p1, "p2": plan.p2,
             "micro_batch": plan.micro_batch,
             "n_stages": len(stages),
@@ -164,7 +171,8 @@ class SamplingSession:
         plan = self.plan(n_samples)
         req = SampleRequest(
             plan=plan, n_samples=n_samples, key=key, mesh=self.mesh,
-            mps=self._ensure_mps, store=self._ensure_store, resume=resume,
+            mps=self._ensure_mps, store=self._ensure_store,
+            runtime=self.runtime, config=self.config, resume=resume,
             checkpoint_dir=checkpoint_dir or self.config.checkpoint_dir,
             stop_after_segments=stop_after_segments)
         out = get_backend(plan.backend).sample(req)

@@ -132,3 +132,23 @@ def sample_staged(mps: MPS, bucketed: np.ndarray, n_samples: int, key: Array,
         site_offset += sm.n_sites
         outs.append(res.samples)
     return jnp.concatenate(outs, axis=0).T      # (N, M)
+
+
+def sample_staged_batched(mps: MPS, bucketed: np.ndarray, n_samples: int,
+                          key: Array, micro_batch: int,
+                          config: sampler_mod.SamplerConfig =
+                          sampler_mod.SamplerConfig()) -> Array:
+    """§3.1 micro batching composed with the staged (dynamic-χ) walk.
+
+    Chunk c carries key ``split(key, n_micro)[c]`` for the *whole* chain —
+    the exact ``sampler.sample_batched`` key schedule, which is also what
+    the streaming engine's micro-batched segments use — so this in-memory
+    cell is bit-identical to the streamed dynamic-χ micro-batched one (and
+    to ``sample_batched`` when the profile is flat).  Each χ-stage's scan
+    is jitted once and reused across every chunk.
+    """
+    assert n_samples % micro_batch == 0, (n_samples, micro_batch)
+    keys = jax.random.split(key, n_samples // micro_batch)
+    outs = [sample_staged(mps, bucketed, micro_batch, k, config)
+            for k in keys]
+    return jnp.concatenate(outs, axis=0)        # chunk-major, (N, M)

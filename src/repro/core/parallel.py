@@ -32,10 +32,13 @@ All schemes draw identical randoms within a TP group (the key is replicated
 over "model"), so DP and both TP schedules produce bit-identical samples for
 the same seed — asserted in tests.
 
-This module is the *data plane*.  The supported application front door is
-:class:`repro.api.SamplingSession` — the public samplers here
-(``multilevel_sample`` / ``dp_sample`` / ``baseline19_sample``) remain as
-deprecation-shimmed legacy entry points for one release.
+This module is the *data plane*.  The only application front door is
+:class:`repro.api.SamplingSession` — the deprecation-shimmed legacy entry
+points (``multilevel_sample`` / ``dp_sample`` / ``baseline19_sample``)
+were removed one release after the facade shipped, as scheduled; the
+internal ``_multilevel_sample`` / ``_baseline19_sample`` /
+``sample_segment`` callables below are what the registered backends route
+through.
 """
 from __future__ import annotations
 
@@ -111,52 +114,6 @@ def _tp_rescale(env: Array, mode: str, axis: Optional[str] = None
         factor = jnp.where(m > 0, m, 1.0).astype(rdt)
         return env / factor, jnp.broadcast_to(jnp.log10(factor), (n,))
     raise ValueError(f"unknown scaling mode: {mode}")
-
-
-_LEGACY_NOTE = ("; it will be removed one release after the facade "
-                "(see examples/README.md)")
-
-
-def _warn_legacy(name: str) -> None:
-    import warnings
-    warnings.warn(
-        f"repro.core.parallel.{name} is a legacy entry point — construct a "
-        f"repro.api.SamplingSession instead (one session.sample() call "
-        f"routes to the same data plane){_LEGACY_NOTE}",
-        DeprecationWarning, stacklevel=3)
-
-
-# ---------------------------------------------------------------------------
-# Data parallel (shard samples over ("pod","data"); replicate Γ)
-# ---------------------------------------------------------------------------
-
-def dp_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
-              config: SamplerConfig = SamplerConfig(),
-              data_axes: tuple[str, ...] = ("data",)) -> Array:
-    """Pure data-parallel sampling: each data shard runs the full chain.
-
-    Deprecated front door — use :class:`repro.api.SamplingSession`.
-    """
-    _warn_legacy("dp_sample")
-    from repro.core import sampler as S
-
-    n_shards = 1
-    for ax in data_axes:
-        n_shards *= mesh.shape[ax]
-    assert n_samples % n_shards == 0
-    keys = jax.random.split(key, n_shards)
-
-    def shard_fn(keys_local, gammas, lambdas):
-        local = MPS(gammas, lambdas, mps.semantics)
-        out = S.sample(local, n_samples // n_shards, keys_local[0], config)
-        return out
-
-    f = shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(data_axes), P(), P()),
-        out_specs=P(data_axes), check_vma=False,
-    )
-    return f(keys, mps.gammas, mps.lambdas)
 
 
 # ---------------------------------------------------------------------------
@@ -324,14 +281,6 @@ def _multilevel_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
     env = segment_env_init(n_samples, mps.chi, mps.gammas.dtype)
     samples, _, _ = sample_segment(mesh, mps, env, key, 0, pconfig, config)
     return samples.T
-
-
-def multilevel_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
-                      pconfig: ParallelConfig = ParallelConfig(),
-                      config: SamplerConfig = SamplerConfig()) -> Array:
-    """Deprecated front door — use :class:`repro.api.SamplingSession`."""
-    _warn_legacy("multilevel_sample")
-    return _multilevel_sample(mesh, mps, n_samples, key, pconfig, config)
 
 
 # ---------------------------------------------------------------------------
@@ -551,7 +500,7 @@ def sample_segment(mesh: Mesh, mps: MPS, env: Array, key: Array,
 def segment_env_init(n_samples: int, chi: int, gamma_dtype) -> Array:
     """Boundary environment for site 0: one-hot row 0, full (unsharded) view.
     TP shards slice it — shard 0 holds the hot column, others zeros —
-    matching ``multilevel_sample``'s per-shard initialisation exactly."""
+    matching ``_multilevel_sample``'s per-shard initialisation exactly."""
     env = jnp.zeros((n_samples, chi), dtype=_env_dtype(gamma_dtype))
     return env.at[:, 0].set(1.0)
 
@@ -636,17 +585,6 @@ def _baseline19_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
     )
     out = f(mps.gammas, mps.lambdas, base_keys)  # (M, n1, N1)
     return out.transpose(1, 2, 0).reshape(n_samples, M)
-
-
-def baseline19_sample(mesh: Mesh, mps: MPS, n_samples: int, key: Array,
-                      config: SamplerConfig = SamplerConfig(),
-                      pipeline_axis: str = "data",
-                      n_macro: Optional[int] = None) -> Array:
-    """Deprecated front door — use :class:`repro.api.SamplingSession` with
-    ``scheme="baseline19"``."""
-    _warn_legacy("baseline19_sample")
-    return _baseline19_sample(mesh, mps, n_samples, key, config,
-                              pipeline_axis, n_macro)
 
 
 def config_macro_batches(n_samples: int, target: int = 4) -> int:

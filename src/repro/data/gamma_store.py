@@ -7,7 +7,7 @@ paper's FP16-storage trick, halving I/O and broadcast bytes) and a one-slot
 prefetch thread; ``get(i)`` returns site i (upcast to the compute dtype) and
 immediately schedules site i+1.
 
-Two consumers build on the per-site path:
+Three consumers build on the per-site path:
 
 * the all-in-memory sampler simply stacks Γ and ``lax.scan``s over it;
 * the streaming engine (``repro.engine``) walks the chain in fixed-size
@@ -15,7 +15,14 @@ Two consumers build on the per-site path:
   worker thread, :meth:`get_segment` blocks until it is read and returns the
   stacked host arrays, and :meth:`get_segment_on_device` additionally hands
   the buffers to the accelerator (``jax.device_put``) so the transfer of
-  segment k+1 overlaps the contraction of segment k.
+  segment k+1 overlaps the contraction of segment k;
+* the multihost runtime (``repro.api.runtime``) broadcasts Γ in the
+  **storage format**: :meth:`get_segment_raw` returns a wire payload of the
+  packed on-disk bytes (bf16 when the store is bf16 — the same §3.3.2 trick
+  that halves disk I/O halves the broadcast), and the module-level
+  :func:`decode_segment` turns a payload back into compute-dtype arrays.
+  The local read path (:meth:`get`) decodes through the *same* function, so
+  a broadcast-received segment is bit-identical to a locally-read one.
 
 ``get(i)`` never re-reads a site whose prefetch is already in flight: it
 blocks on the worker's result queue instead (the old fall-back issued a
@@ -35,6 +42,35 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def decode_gamma(raw: np.ndarray, gshape: tuple[int, ...], two_byte: bool,
+                 storage_dtype, compute_dtype) -> np.ndarray:
+    """Storage-format Γ bytes → a compute-dtype host array.
+
+    THE decode path: the store's local reads and the multihost broadcast
+    receive both go through here, so the two are bit-identical by
+    construction.  ``raw`` may carry a leading stack axis (a whole segment
+    decodes in one call)."""
+    lead = raw.shape[:max(0, raw.ndim - len(gshape))]
+    if two_byte:
+        g = jnp.asarray(raw.view(np.uint16)).view(storage_dtype)
+        g = g.reshape(lead + tuple(gshape))
+    else:
+        g = jnp.asarray(raw)
+    return np.asarray(g.astype(compute_dtype))
+
+
+def decode_segment(payload: dict, compute_dtype=None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Wire payload (see :meth:`GammaStore.get_segment_raw`) → stacked
+    (gammas (L, χ, χ, d), lambdas (L, χ)) compute-dtype host arrays."""
+    compute = payload["compute_dtype"] if compute_dtype is None \
+        else compute_dtype
+    g = decode_gamma(payload["gamma"], tuple(payload["gshape"]),
+                     bool(payload["two_byte"]), payload["storage_dtype"],
+                     compute)
+    return g, payload["lam"]
+
+
 class GammaStore:
     def __init__(self, root: str, storage_dtype=jnp.bfloat16,
                  compute_dtype=jnp.float32):
@@ -51,6 +87,7 @@ class GammaStore:
         self._thread.start()
         self.io_bytes = 0          # instrumentation for the benches
         self.io_seconds = 0.0      # worker+sync read wall time
+        self.payload_reads = 0     # Γ payload reads (meta() probes excluded)
         self._n_sites = sum(1 for f in os.listdir(root)
                             if f.startswith("site_") and f.endswith(".npz"))
 
@@ -84,23 +121,28 @@ class GammaStore:
         with np.load(self._path(i)) as z:
             return tuple(int(x) for x in z["gshape"])
 
-    def _read(self, i: int):
+    def _read_raw(self, i: int) -> tuple[np.ndarray, np.ndarray,
+                                         tuple[int, ...], bool]:
+        """One site's storage-format payload: (packed Γ, Λ, gshape, two_byte).
+        This is the only place Γ payload bytes leave the disk — the I/O
+        counters here are what the only-root-reads contract asserts on."""
         t0 = time.perf_counter()
         with np.load(self._path(i)) as z:
             raw, lam = z["gamma"], z["lam"]
-            nbytes = raw.nbytes + lam.nbytes
-            if bool(z["two_byte"]):
-                g = jnp.asarray(raw.view(np.uint16)).view(self.storage_dtype)
-                g = g.reshape(tuple(z["gshape"]))
-            else:
-                g = jnp.asarray(raw)
-        out = np.asarray(g.astype(self.compute_dtype)), lam
+            gshape = tuple(int(x) for x in z["gshape"])
+            two_byte = bool(z["two_byte"])
         # the worker thread and a caller's synchronous fall-back read can
         # race here — unsynchronized += would lose counts
         with self._lock:
-            self.io_bytes += nbytes
+            self.io_bytes += raw.nbytes + lam.nbytes
             self.io_seconds += time.perf_counter() - t0
-        return out
+            self.payload_reads += 1
+        return raw, lam, gshape, two_byte
+
+    def _read(self, i: int):
+        raw, lam, gshape, two_byte = self._read_raw(i)
+        return decode_gamma(raw, gshape, two_byte, self.storage_dtype,
+                            self.compute_dtype), lam
 
     def _worker(self):
         while True:
@@ -192,6 +234,27 @@ class GammaStore:
         previous segment simply by calling this from a background thread."""
         g, lam = self.get_segment(start, length, prefetch_next_segment)
         return jax.device_put(g, device), jax.device_put(lam, device)
+
+    def get_segment_raw(self, start: int, length: int) -> dict:
+        """Storage-format wire payload for sites [start, start+length).
+
+        This is what the multihost runtime broadcasts (paper §3.1): the
+        packed on-disk bytes — bf16 when the store is bf16, so the §3.3.2
+        compression that halves disk I/O halves the interconnect bytes too —
+        plus the metadata a receiver needs to :func:`decode_segment` them.
+        Reads synchronously on the caller's thread (the streaming engine
+        calls this from its prefetch pool, which already overlaps the read
+        and the broadcast with compute on the previous segment)."""
+        stop = min(start + length, self.n_sites)
+        raws, lams, gshape, two_byte = [], [], None, False
+        for i in range(start, stop):
+            raw, lam, gshape, two_byte = self._read_raw(i)
+            raws.append(raw)
+            lams.append(lam)
+        return {"start": start, "gamma": np.stack(raws),
+                "lam": np.stack(lams), "gshape": gshape,
+                "two_byte": two_byte, "storage_dtype": self.storage_dtype,
+                "compute_dtype": self.compute_dtype}
 
     def close(self):
         self._queue.put(None)

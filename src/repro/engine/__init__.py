@@ -1,17 +1,17 @@
 """Streaming multi-level sampling engine (paper §3.1 + §3.3.2 composed).
 
 Every layer of the paper's design runs together here: segment-streamed
-chains (GammaStore double-buffered I/O), the jitted scan data plane (one
-compilation per segment shape / χ bucket), DP×TP placement with micro
-batching, dynamic bond dimensions, mid-chain checkpointing, and the
-perfmodel-driven planner.
+chains (GammaStore double-buffered I/O, or the multihost runtime's
+root-reads-then-broadcast), the jitted scan data plane (one compilation per
+segment shape / χ bucket), DP×TP placement with micro batching, dynamic
+bond dimensions, mid-chain checkpointing, and the perfmodel-driven planner.
 
-This is the *streamed backend's machinery* — applications reach it through
-:class:`repro.api.SamplingSession`; the ``stream_sample`` convenience
-wrapper is deprecated in favour of the facade.
+This is the *streamed data plane's machinery* — applications reach it
+through :class:`repro.api.SamplingSession` (``backend="streamed"``, any
+``runtime=``).  The legacy ``stream_sample`` wrapper was removed one
+release after the facade shipped, as scheduled.
 """
 from repro.engine.planner import explain_plan, plan_stream
-from repro.engine.streaming import StreamPlan, StreamingEngine, stream_sample
+from repro.engine.streaming import StreamPlan, StreamingEngine
 
-__all__ = ["StreamPlan", "StreamingEngine", "stream_sample",
-           "plan_stream", "explain_plan"]
+__all__ = ["StreamPlan", "StreamingEngine", "plan_stream", "explain_plan"]

@@ -8,6 +8,10 @@ segment k, a background thread reads segment k+1 from :class:`GammaStore`
 (``device_put`` is asynchronous), so Γ I/O is hidden behind compute exactly
 as in the paper's data-parallel revival.  At most **two** segments are ever
 device-resident (current + next); consumed buffers are explicitly deleted.
+On a multi-process :class:`~repro.api.runtime.ClusterRuntime`, the same
+prefetch slot carries the paper's §3.1 collective instead: only the ROOT
+process reads the store and broadcasts each segment in storage format —
+see ``_fetch_via_runtime``.
 
 Every level of the framework composes behind :meth:`StreamingEngine.sample`:
 
@@ -16,8 +20,8 @@ Every level of the framework composes behind :meth:`StreamingEngine.sample`:
   ``sampler.sample_batched`` (``micro_batch=N₂``).
 * ``dp`` / ``tp_single`` / ``tp_double`` — the ``core/parallel`` segment
   runner (micro batching N₂ included, and the per-sample ``log_scale``
-  diagnostic carried); bit-identical to the corresponding
-  ``multilevel_sample`` schedule.
+  diagnostic carried); bit-identical to the corresponding whole-chain
+  segment-runner schedule (``parallel._multilevel_sample``).
 * dynamic bond dimensions (§3.4.2): a bucketed per-site ``chi_profile``
   splits the walk into χ-stages; segments never cross a stage boundary and
   every segment of a bucket pads to one shape, so a staged chain costs one
@@ -51,12 +55,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.runtime import ClusterRuntime, LocalRuntime
 from repro.checkpoint.sampler_state import (load_sampler_state,
                                             save_sampler_state)
 from repro.core import parallel as PP
 from repro.core import sampler as S
 from repro.core.mps import MPS
 from repro.core.precision import real_dtype_of
+from repro.data import gamma_store as GS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,8 +117,14 @@ class StreamingEngine:
                  plan: StreamPlan = StreamPlan(segment_len=64),
                  mesh=None, pconfig: Optional[PP.ParallelConfig] = None,
                  checkpoint_dir: Optional[str] = None,
-                 chi_profile=None):
+                 chi_profile=None,
+                 runtime: Optional[ClusterRuntime] = None):
         self.store = store
+        # where this engine's process lives and how Γ bytes reach it: on a
+        # LocalRuntime every segment is a store read; on a multi-process
+        # runtime only the ROOT touches the store and everyone else receives
+        # the broadcast (paper §3.1) — see _fetch
+        self.runtime = runtime or LocalRuntime()
         self.n_sites = store.n_sites
         if self.n_sites == 0:
             raise ValueError(f"empty GammaStore at {store.root}")
@@ -151,9 +163,14 @@ class StreamingEngine:
         # (session-owned) store can serve many engines without the hidden-
         # I/O ratio mixing scopes
         self._store_io0 = (store.io_seconds, store.io_bytes)
+        # runtime counters are scoped the same way: deltas since engine
+        # creation, so shared runtimes serve many engines cleanly
+        self._runtime_io0 = dict(self.runtime.io_counters())
         self.stats = {"segments": 0, "io_wait_s": 0.0, "compute_s": 0.0,
                       "max_live_segments": 0, "store_io_s": 0.0,
                       "io_bytes": 0, "io_hidden_frac": 0.0}
+        for k in self._runtime_io0:
+            self.stats[k] = 0
 
     # -- chain schedule ------------------------------------------------------
     def _segment_schedule(self) -> list[tuple[int, int, int]]:
@@ -183,11 +200,38 @@ class StreamingEngine:
         return out
 
     # -- segment fetch (runs on the pool thread) ----------------------------
+    def _fetch_via_runtime(self, start: int,
+                           stop: int) -> tuple[np.ndarray, np.ndarray]:
+        """Paper §3.1: process 0 reads the segment once and broadcasts it.
+
+        Only the root runtime instance ever touches the GammaStore payload;
+        the wire carries the store's *storage format* (bf16-packed when the
+        store is bf16 — half the interconnect bytes), and every process —
+        root included — decodes through ``gamma_store.decode_segment``, so
+        the walk stays bit-identical to a LocalRuntime one.  Running on the
+        prefetch pool thread, the broadcast of segment k+1 overlaps the
+        contraction of segment k exactly like the local read does."""
+        payload = None
+        if self.runtime.is_root:
+            payload = self.store.get_segment_raw(start, stop - start)
+        payload = self.runtime.broadcast_segment(payload)
+        if payload["start"] != start:
+            # a real error, not an assert: schedule desync across processes
+            # must never silently sample the wrong segment (python -O)
+            raise RuntimeError(
+                f"broadcast schedule desync: this process expected segment "
+                f"start {start} but received {payload['start']} — are all "
+                f"processes walking the same plan?")
+        return GS.decode_segment(payload, compute_dtype=self.gamma_dtype)
+
     def _fetch(self, start: int, stop: int,
                chi_s: int) -> tuple[jax.Array, jax.Array, int]:
         L = self.plan.segment_len
-        g, lam = self.store.get_segment(start, stop - start,
-                                        prefetch_next_segment=True)
+        if self.runtime.process_count > 1:
+            g, lam = self._fetch_via_runtime(start, stop)
+        else:
+            g, lam = self.store.get_segment(start, stop - start,
+                                            prefetch_next_segment=True)
         if chi_s < self.chi:              # §3.4.2: only the bucketed bond
             g = g[:, :chi_s, :chi_s, :]
             lam = lam[:, :chi_s]
@@ -256,6 +300,23 @@ class StreamingEngine:
         if self.plan.micro_batch is not None:
             assert n_samples % self.plan.micro_batch == 0, \
                 (n_samples, self.plan.micro_batch)
+        if self.runtime.process_count > 1:
+            if stop_after_segments is not None:
+                raise ValueError(
+                    "stop_after_segments injects a single-process kill — "
+                    "on a multi-process runtime the peers would block on "
+                    "the broadcast")
+            if resume:
+                # each process checkpoints independently; after a cluster
+                # kill their persisted boundaries can differ, and resuming
+                # from unequal indices desyncs the broadcast schedule.
+                # Cluster-synchronized resume is a runtime follow-up
+                # (ROADMAP); until then macro batches are the restart unit.
+                raise ValueError(
+                    "resume on a multi-process runtime needs a cluster-"
+                    "synchronized checkpoint boundary, which is not wired "
+                    "yet — re-run the macro batch instead (batches are "
+                    "idempotent work items)")
 
         schedule = self._segment_schedule()
         boundaries = {s for s, _, _ in schedule} | {M_sites}
@@ -283,6 +344,7 @@ class StreamingEngine:
             persisted = len(done)
 
         if idx >= len(schedule):          # resumed from a finished run
+            self._finish_walk()
             return np.concatenate(done, axis=0).T.astype(np.int32)
 
         fut: Future = self._pool.submit(self._fetch, *schedule[idx])
@@ -296,12 +358,17 @@ class StreamingEngine:
                 fut = self._pool.submit(self._fetch, *schedule[idx + 1])
 
             t0 = time.perf_counter()
-            seg = MPS(gd, ld, self.semantics)
-            env = fit_env(env, chi_s)     # χ-stage transition (no-op within)
-            samples, env, log_scale = self._run_segment(
-                seg, env, log_scale, key, start)
-            samples = np.asarray(samples[:real])      # drop identity pads
-            jax.block_until_ready((env, log_scale))
+            # the lock is a no-op except on the emulated cluster, where the
+            # member "processes" share one XLA backend and concurrent
+            # collective programs would interleave their rendezvous and
+            # deadlock (block_until_ready stays inside: dispatch is async)
+            with self.runtime.compute_lock():
+                seg = MPS(gd, ld, self.semantics)
+                env = fit_env(env, chi_s)  # χ-stage transition (no-op within)
+                samples, env, log_scale = self._run_segment(
+                    seg, env, log_scale, key, start)
+                samples = np.asarray(samples[:real])  # drop identity pads
+                jax.block_until_ready((env, log_scale))
             self.stats["compute_s"] += time.perf_counter() - t0
             self._release(gd, ld)
             done.append(samples)
@@ -337,13 +404,23 @@ class StreamingEngine:
                     self._release(gd, ld)      # the ≤2-live bound breaks
                 break
 
+        self._finish_walk()
+        return np.concatenate(done, axis=0).T.astype(np.int32)
+
+    def _finish_walk(self) -> None:
+        """Fold the store's and the runtime's I/O counters (deltas since
+        engine creation) into ``stats`` and line the processes up — every
+        process finishes macro batch b before any starts b+1."""
         self.stats["store_io_s"] = self.store.io_seconds - self._store_io0[0]
         self.stats["io_bytes"] = self.store.io_bytes - self._store_io0[1]
         if self.stats["store_io_s"] > 0:
             hidden = max(0.0,
                          self.stats["store_io_s"] - self.stats["io_wait_s"])
             self.stats["io_hidden_frac"] = hidden / self.stats["store_io_s"]
-        return np.concatenate(done, axis=0).T.astype(np.int32)
+        counters = self.runtime.io_counters()
+        for k, v0 in self._runtime_io0.items():
+            self.stats[k] = counters[k] - v0
+        self.runtime.barrier()
 
     def run_queue(self, queue, per_batch: int, base_key: jax.Array,
                   worker: str = "engine") -> dict[int, np.ndarray]:
@@ -369,30 +446,3 @@ class StreamingEngine:
 
     def __exit__(self, *exc) -> None:
         self.close()
-
-
-def stream_sample(store, n_samples: int, key: jax.Array, *,
-                  semantics: str = "linear",
-                  config: S.SamplerConfig = S.SamplerConfig(),
-                  plan: Optional[StreamPlan] = None,
-                  mesh=None, pconfig=None) -> np.ndarray:
-    """One-shot convenience wrapper: stream the whole chain once.
-
-    Deprecated front door — use :class:`repro.api.SamplingSession` with
-    ``backend="streamed"`` (it owns the engine/store lifecycle and composes
-    checkpointing, micro batching, and dynamic χ behind one call).
-    """
-    import warnings
-    warnings.warn(
-        "repro.engine.stream_sample is a legacy entry point — construct a "
-        "repro.api.SamplingSession instead (one session.sample() call "
-        "routes to the same engine); it will be removed one release after "
-        "the facade (see examples/README.md)",
-        DeprecationWarning, stacklevel=2)
-    plan = plan or StreamPlan(segment_len=min(64, store.n_sites))
-    eng = StreamingEngine(store, semantics=semantics, config=config,
-                          plan=plan, mesh=mesh, pconfig=pconfig)
-    try:
-        return eng.sample(n_samples, key)
-    finally:
-        eng.close(close_store=False)

@@ -20,7 +20,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model: int = 1):
-    """Whatever this host actually has — for tests and examples."""
+    """Whatever this host actually has — for tests and examples.
+
+    Runtime-aware callers (``launch/sample.py``) ask the session's
+    :class:`repro.api.runtime.ClusterRuntime` instead —
+    ``runtime.mesh(model)`` — so the mesh covers the runtime's *global*
+    device view rather than assuming the local host."""
     n = len(jax.devices())
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))

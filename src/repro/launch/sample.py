@@ -36,7 +36,6 @@ from repro import api
 from repro.core import dynamic_bond as DB
 from repro.core import mps as M
 from repro.data.gamma_store import GammaStore
-from repro.launch.mesh import make_host_mesh
 from repro.runtime.elastic import WorkQueue
 
 
@@ -50,6 +49,10 @@ def main() -> None:
     ap.add_argument("--scheme", default="dp",
                     choices=["auto", "seq", "dp", "tp_single", "tp_double",
                              "baseline19"])
+    ap.add_argument("--runtime", default="auto",
+                    choices=["auto", "local", "multihost", "remote"],
+                    help="cluster runtime: where processes live and how Γ "
+                         "bytes move (auto = local on one process)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dynamic-bond", action="store_true")
@@ -67,8 +70,15 @@ def main() -> None:
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
-    mesh = make_host_mesh(model=args.model_parallel)
-    print(f"mesh: {dict(mesh.shape)}  scheme: {args.scheme}")
+    # the runtime decides where devices live; the mesh is derived from it
+    # (a remote runtime dispatches the whole request — no local mesh)
+    runtime = api.resolve_runtime(args.runtime)
+    mesh = (None if runtime.name == "remote"
+            else runtime.mesh(args.model_parallel))
+    print(f"runtime: {runtime.name} "
+          f"(process {runtime.process_index}/{runtime.process_count})  "
+          f"mesh: {dict(mesh.shape) if mesh else None}  "
+          f"scheme: {args.scheme}")
 
     dtype = jnp.float64 if args.precision == "fp64" else jnp.float32
     compute = jnp.bfloat16 if args.precision == "mxu_bf16" else None
@@ -100,9 +110,16 @@ def main() -> None:
         chi_profile = tuple(int(c) for c in buck)
         print("table1:", DB.table1_metrics(prof, args.chi))
 
+    scheme = args.scheme
+    if runtime.name == "remote" and scheme not in ("auto", "seq"):
+        print(f"runtime=remote resolves placement on the worker — "
+              f"overriding scheme {scheme!r} to auto")
+        scheme = "auto"
     config = api.SamplerConfig(
-        scheme=args.scheme,
-        backend="streamed" if args.stream else "inmem",
+        scheme=scheme,
+        runtime=runtime,
+        backend=("auto" if runtime.name == "remote"
+                 else ("streamed" if args.stream else "inmem")),
         compute_dtype=compute,
         micro_batch=args.micro_batch or None,
         chi_profile=chi_profile,
@@ -140,6 +157,9 @@ def main() -> None:
             print("streaming stats:",
                   {k: (round(v, 4) if isinstance(v, float) else v)
                    for k, v in session.stats.items()})
+        # where the Γ bytes moved: disk I/O lives on the store counters,
+        # interconnect/dispatch bytes on the runtime's
+        print("runtime counters:", runtime.io_counters())
     if args.stream:
         source.close()
 

@@ -14,7 +14,7 @@ from repro.core import sampler as S
 from repro.core.perfmodel import Hardware, Workload, choose_tp_scheme
 from repro.data.gamma_store import GammaStore
 from repro.engine import (StreamPlan, StreamingEngine, explain_plan,
-                          plan_stream, stream_sample)
+                          plan_stream)
 from repro.engine.streaming import identity_sites
 from repro.runtime.elastic import WorkQueue
 
@@ -127,14 +127,47 @@ def test_born_semantics_stream(tmp_path, born_mps_6x4):
     assert np.array_equal(out, ref)
 
 
-def test_stream_sample_wrapper_deprecated(chain):
+def test_multihost_engine_root_reads_peers_receive(chain):
+    """Tentpole unit test at the engine level: on a 2-process emulated
+    runtime, ONLY the root engine issues GammaStore payload reads (its
+    per-engine store-I/O delta covers the whole chain; the peer's is zero)
+    and both walks are bit-identical to the single-process one."""
+    import threading
+
+    from repro.api.runtime import emulated_cluster
+
     root, mps = chain
-    key = jax.random.key(2)
-    with _store(root) as store:
-        with pytest.warns(DeprecationWarning, match="repro.api"):
-            out = stream_sample(store, 16, key,
-                                plan=StreamPlan(segment_len=4))
-    assert np.array_equal(out, np.asarray(S.sample(mps, 16, key)))
+    key = jax.random.key(5)
+    ref = np.asarray(S.sample(mps, 16, key))
+    per_site = mps.gammas[0].size * 8 + mps.lambdas[0].size * 8
+
+    runtimes = emulated_cluster(2)
+    outs, stats, errs = {}, {}, []
+
+    def walk(rt):
+        try:
+            with _store(root) as store:
+                eng = StreamingEngine(store, plan=StreamPlan(segment_len=4),
+                                      runtime=rt)
+                outs[rt.process_index] = eng.sample(16, key)
+                stats[rt.process_index] = dict(eng.stats)
+                eng.close(close_store=False)
+        except Exception as e:          # pragma: no cover - surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=walk, args=(rt,)) for rt in runtimes]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errs, errs
+    assert np.array_equal(outs[0], ref) and np.array_equal(outs[1], ref)
+    # the §3.1 contract: one reader, everyone else on the interconnect
+    assert stats[0]["io_bytes"] == mps.n_sites * per_site
+    assert stats[1]["io_bytes"] == 0
+    assert stats[0]["broadcast_send_bytes"] == mps.n_sites * per_site
+    assert stats[1]["broadcast_recv_bytes"] == mps.n_sites * per_site
+    assert stats[1]["broadcast_segments"] == stats[1]["segments"]
 
 
 def test_identity_pad_sites_are_noops():

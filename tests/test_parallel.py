@@ -26,9 +26,9 @@ _CHILD = textwrap.dedent("""
     mesh = make_host_mesh(model=4)           # 2 data x 4 model
     key = jax.random.key(7)
     cfg = S.SamplerConfig()
-    dp = PP.multilevel_sample(mesh, m, 64, key, PP.ParallelConfig("dp"), cfg)
-    ts = PP.multilevel_sample(mesh, m, 64, key, PP.ParallelConfig("tp_single"), cfg)
-    td = PP.multilevel_sample(mesh, m, 64, key, PP.ParallelConfig("tp_double"), cfg)
+    dp = PP._multilevel_sample(mesh, m, 64, key, PP.ParallelConfig("dp"), cfg)
+    ts = PP._multilevel_sample(mesh, m, 64, key, PP.ParallelConfig("tp_single"), cfg)
+    td = PP._multilevel_sample(mesh, m, 64, key, PP.ParallelConfig("tp_double"), cfg)
     out["dp_eq_single"] = bool(jnp.all(dp == ts))
     out["dp_eq_double"] = bool(jnp.all(dp == td))
     out["shape_ok"] = list(dp.shape) == [64, 6]
@@ -36,16 +36,16 @@ _CHILD = textwrap.dedent("""
     # born semantics through both TP schedules (psum-before-square correctness)
     mb = M.random_born_mps(jax.random.key(2), 4, 8, 2)
     cb = S.SamplerConfig(semantics="born")
-    dpb = PP.multilevel_sample(mesh, mb, 32, key, PP.ParallelConfig("dp"), cb)
-    tsb = PP.multilevel_sample(mesh, mb, 32, key, PP.ParallelConfig("tp_single"), cb)
-    tdb = PP.multilevel_sample(mesh, mb, 32, key, PP.ParallelConfig("tp_double"), cb)
+    dpb = PP._multilevel_sample(mesh, mb, 32, key, PP.ParallelConfig("dp"), cb)
+    tsb = PP._multilevel_sample(mesh, mb, 32, key, PP.ParallelConfig("tp_single"), cb)
+    tdb = PP._multilevel_sample(mesh, mb, 32, key, PP.ParallelConfig("tp_double"), cb)
     out["born_dp_eq_single"] = bool(jnp.all(dpb == tsb))
     out["born_dp_eq_double"] = bool(jnp.all(dpb == tdb))
 
     # [19] baseline pipeline == per-macro-batch sequential chain
     mesh19 = jax.make_mesh((6,), ("data",))
     n, n1 = 60, PP.config_macro_batches(60)
-    b19 = PP.baseline19_sample(mesh19, m, n, jax.random.key(9))
+    b19 = PP._baseline19_sample(mesh19, m, n, jax.random.key(9))
     bk = jax.random.split(jax.random.key(9), n1)
     ref = jnp.concatenate([S.sample(m, n // n1, bk[b]) for b in range(n1)], 0)
     out["baseline19_eq_seq"] = bool(jnp.all(b19 == ref))
