@@ -27,8 +27,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import datetime
-import json
 import os
 import shutil
 import tempfile
@@ -134,31 +132,17 @@ def main() -> None:
               f"{wire/1e6:.2f} MB, bit-identical={same}")
         assert same, "broadcast walk diverged from the local walk"
 
-        if args.json:
-            record = {
-                "bench": "broadcast",
-                "utc": datetime.datetime.now(
-                    datetime.timezone.utc).isoformat(timespec="seconds"),
-                "config": {"procs": p, "sites": sites, "chi": chi,
-                           "samples": n, "segment_len": seg,
-                           "smoke": bool(args.smoke)},
-                "naive": {"wall_s": wall_naive,
-                          "store_bytes_per_proc": naive_bytes},
-                "root_broadcast": {"wall_s": wall_bc,
-                                   "store_bytes_per_proc": bc_bytes,
-                                   "wire_bytes": int(wire)},
-                "store_io_reduction": io_reduction,
-                "bit_identical": bool(same),
-            }
-            trajectory = []
-            if os.path.exists(args.json):
-                with open(args.json) as f:
-                    trajectory = json.load(f)
-            trajectory.append(record)
-            with open(args.json, "w") as f:
-                json.dump(trajectory, f, indent=1)
-            print(f"# appended to {args.json} "
-                  f"({len(trajectory)} records)")
+        common.append_bench_record(
+            args.json, "broadcast",
+            {"procs": p, "sites": sites, "chi": chi, "samples": n,
+             "segment_len": seg, "smoke": bool(args.smoke)},
+            naive={"wall_s": wall_naive,
+                   "store_bytes_per_proc": naive_bytes},
+            root_broadcast={"wall_s": wall_bc,
+                            "store_bytes_per_proc": bc_bytes,
+                            "wire_bytes": int(wire)},
+            store_io_reduction=io_reduction,
+            bit_identical=bool(same))
     finally:
         shutil.rmtree(root, ignore_errors=True)
 

@@ -1,0 +1,121 @@
+"""Fused site-step bench: HBM bytes and wall time, fused vs unfused.
+
+Three measurements per shape:
+
+* **modeled HBM bytes/site** (``perfmodel.site_hbm_bytes``): the roofline
+  byte model of the hot loop with and without the fusion — the unfused
+  path round-trips the unmeasured ``temp[N, χ, d]`` three times, the fused
+  Pallas pipeline never writes it.  The acceptance quantity is the ratio
+  (≥ 2× for every d ≥ 2 shape).
+* **measured XLA bytes/site** (``hloanalysis`` over the compiled unfused
+  site step) — grounds the model against what XLA actually emits.
+* **wall time** of one site step, ``kernels="pallas"`` vs ``kernels="xla"``
+  (compiled on TPU; interpret mode elsewhere, where the time column is
+  about correctness plumbing, not speed — the bytes model is the portable
+  number).
+
+Each full run appends a record to the BENCH.json trajectory so successive
+PRs track per-site bytes/FLOPs.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_site_step.py [--smoke] [--json ...]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+try:                                     # script style (cwd = benchmarks/)
+    import common
+except ImportError:                      # harness style (-m benchmarks.run)
+    from benchmarks import common
+from repro.core import perfmodel as PM
+from repro.kernels import dispatch, ref
+from repro.kernels.site_impls import site_step_linear_pallas, \
+    site_step_linear_xla
+from repro.launch import hloanalysis as H
+
+# paper-facing shapes: the bench_roofline pair + a mid-size cell; smoke
+# shrinks to interpret-mode-friendly sizes
+_SHAPES = ((5_000, 2_000, 3), (20_000, 10_000, 4), (4_096, 1_024, 4))
+_SMOKE_SHAPES = ((128, 64, 3), (64, 96, 4))
+
+
+def _measured_unfused_bytes(n: int, chi: int, d: int, dtype) -> float:
+    """Bytes of the compiled (unfused, XLA) site step from its HLO."""
+    sds = jax.ShapeDtypeStruct
+    rdt = jnp.zeros((), dtype).real.dtype
+
+    def step(env, gamma, lam, u):
+        return site_step_linear_xla(env, gamma, lam, u, scaling="per_sample",
+                                    compute_dtype=None)
+
+    c = jax.jit(step).lower(
+        sds((n, chi), dtype), sds((chi, chi, d), dtype), sds((chi,), dtype),
+        sds((n, 1), rdt)).compile()
+    return H.analyze(c.as_text()).memory_bytes
+
+
+def run(quick: bool = True, json_path: str | None = None) -> None:
+    shapes = _SMOKE_SHAPES if quick else _SHAPES
+    elt = 8                                  # fp64 (the x64 bench default)
+    rows = []
+    for (n, chi, d) in shapes:
+        b_unfused = PM.site_hbm_bytes(n, chi, d, elt, fused=False)
+        b_fused = PM.site_hbm_bytes(n, chi, d, elt, fused=True)
+        ratio = b_unfused / b_fused
+        measured = _measured_unfused_bytes(n, chi, d, jnp.float64)
+        flops = 2.0 * n * chi * chi * d
+        common.emit(
+            f"site_step_bytes_N{n}_chi{chi}_d{d}", 0.0,
+            f"model_unfused={b_unfused:.3g}B|model_fused={b_fused:.3g}B"
+            f"|reduction={ratio:.1f}x|hlo_unfused={measured:.3g}B")
+        assert ratio >= 2.0, (n, chi, d, ratio)
+
+        # wall time: one dispatched site step, both backends (tiny shapes
+        # only off-TPU — interpret mode is a correctness vehicle, not perf)
+        times = {}
+        if quick or dispatch.on_tpu():
+            k1, k2, k3, k4 = jax.random.split(jax.random.key(0), 4)
+            env = jax.random.uniform(k1, (n, chi), dtype=jnp.float64)
+            gamma = jax.random.uniform(k2, (chi, chi, d), dtype=jnp.float64)
+            lam = jax.random.uniform(k3, (chi,), dtype=jnp.float64)
+            u = jax.random.uniform(k4, (n, 1), dtype=jnp.float64)
+            for name, fn in (("pallas", site_step_linear_pallas),
+                             ("xla", site_step_linear_xla)):
+                t = common.time_fn(fn, env, gamma, lam, u,
+                                   scaling="per_sample", compute_dtype=None,
+                                   warmup=1, iters=2)
+                times[name] = t
+                common.emit(f"site_step_{name}_N{n}_chi{chi}_d{d}", t,
+                            f"{flops / max(t, 1e-12) / 1e9:.1f}GFLOP/s")
+        rows.append({
+            "n": n, "chi": chi, "d": d, "flops_per_site": flops,
+            "model_bytes_unfused": b_unfused, "model_bytes_fused": b_fused,
+            "byte_reduction": ratio, "hlo_bytes_unfused": float(measured),
+            "wall_s": times or None,
+        })
+
+    common.append_bench_record(
+        json_path, "site_step",
+        {"backend": jax.default_backend(),
+         "kernels": dispatch.resolve_kernels("auto"),
+         "elt_bytes": elt, "smoke": bool(quick)},
+        shapes=rows,
+        autotuner=dispatch.autotune_cache_stats())
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="BENCH trajectory file ('' disables; default: "
+                         "benchmarks/BENCH.json for full runs, disabled "
+                         "for --smoke)")
+    args = ap.parse_args()
+    json_path = (args.json if args.json is not None
+                 else ("" if args.smoke else common.BENCH_JSON))
+    common.header()
+    run(quick=args.smoke, json_path=json_path or None)

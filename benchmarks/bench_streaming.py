@@ -39,7 +39,14 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=3)
     ap.add_argument("--samples", type=int, default=0)
     ap.add_argument("--segment-len", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="BENCH trajectory file to append the record to "
+                         "('' disables; default: benchmarks/BENCH.json for "
+                         "full runs, disabled for --smoke so CI never "
+                         "mutates the tracked history)")
     args = ap.parse_args()
+    json_path = (args.json if args.json is not None
+                 else ("" if args.smoke else common.BENCH_JSON))
 
     sites = args.sites or (32 if args.smoke else 256)
     chi = args.chi or (8 if args.smoke else 64)
@@ -101,6 +108,16 @@ def main() -> None:
         print(f"# overlap: {st['io_hidden_frac']:.1%} of "
               f"{st['store_io_s']*1e3:.1f} ms disk time hidden behind "
               f"compute (visible wait {st['io_wait_s']*1e3:.1f} ms)")
+        common.append_bench_record(
+            json_path, "streaming",
+            {"sites": sites, "chi": chi, "d": d, "samples": n,
+             "segment_len": plan.segment_len, "smoke": bool(args.smoke)},
+            stream={"wall_s": t, "io_hidden_frac": st["io_hidden_frac"],
+                    "io_wait_s": st["io_wait_s"],
+                    "store_io_s": st["store_io_s"],
+                    "io_bytes": int(st["io_bytes"])},
+            inmem={"wall_s": t_mem},
+            stream_overhead=t / t_mem - 1.0)
         store.close()
     finally:
         shutil.rmtree(root, ignore_errors=True)

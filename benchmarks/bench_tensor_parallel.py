@@ -13,7 +13,8 @@ from __future__ import annotations
 
 import textwrap
 
-from benchmarks.common import emit, run_child
+from benchmarks.common import BENCH_JSON, append_bench_record, emit, \
+    run_child
 from repro.core import perfmodel as PM
 
 _CHILD = textwrap.dedent("""
@@ -47,7 +48,7 @@ _CHILD = textwrap.dedent("""
 """)
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, json_path: str | None = BENCH_JSON) -> None:
     p2 = 4
     results = {}
     for scheme in ("tp_single", "tp_double"):
@@ -78,6 +79,17 @@ def run(quick: bool = True) -> None:
     for scheme in ("single", "double"):
         o = PM.eq7_tp_overhead(w, v5e, 4, scheme)
         emit(f"eq7_overhead_v5e_{scheme}_p4", 0.0, f"{o:.2%}")
+
+    append_bench_record(
+        json_path, "tensor_parallel",
+        {"p2": p2, "sites": results["tp_single"]["sites"],
+         "chi": results["tp_single"]["chi"],
+         "d": results["tp_single"]["d"],
+         "samples": results["tp_single"]["n"], "quick": bool(quick)},
+        wire_bytes_per_site={
+            s: results[s]["wire"] / results[s]["sites"]
+            for s in ("tp_single", "tp_double")},
+        collective_count_ratio=n_single / max(n_double, 1))
 
 
 if __name__ == "__main__":

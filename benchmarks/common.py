@@ -1,14 +1,25 @@
-"""Shared benchmark plumbing: timing + CSV emission.
+"""Shared benchmark plumbing: timing + CSV emission + BENCH.json trajectory.
 
 Every bench prints ``name,us_per_call,derived`` rows (one per sweep point).
 ``derived`` is the paper-facing number (speedup, efficiency, GFLOP/s, ...).
+
+Benches that track a paper-facing quantity across PRs also append a JSON
+record to the shared trajectory file (``benchmarks/BENCH.json``) via
+:func:`append_bench_record` — broadcast I/O reduction, streaming overlap,
+TP wire bytes, and the fused-site-step HBM model all live there, so the
+perf history is one file.
 """
 from __future__ import annotations
 
+import datetime
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH.json")
 
 # the MPS oracles/benches compare against float64 (the paper's reference
 # precision); model benches specify their dtypes explicitly
@@ -37,6 +48,35 @@ def emit(name: str, seconds: float, derived: str | float = "") -> None:
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+def append_bench_record(json_path: Optional[str], bench: str, config: dict,
+                        **payload) -> Optional[dict]:
+    """Append one record to the BENCH trajectory file and return it.
+
+    ``json_path`` of ``None``/``""`` disables the append (CI smoke runs pass
+    ``--json ""`` so ephemeral runners never mutate the tracked history).
+    The record carries the bench name, a UTC timestamp, the sweep config,
+    and the bench-specific payload — successive PRs diff the trajectory.
+    """
+    record = {
+        "bench": bench,
+        "utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "config": config,
+        **payload,
+    }
+    if not json_path:
+        return record
+    trajectory = []
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            trajectory = json.load(f)
+    trajectory.append(record)
+    with open(json_path, "w") as f:
+        json.dump(trajectory, f, indent=1)
+    print(f"# appended to {json_path} ({len(trajectory)} records)")
+    return record
 
 
 def run_child(code: str, devices: int = 8, timeout: int = 600) -> dict:

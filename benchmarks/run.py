@@ -20,6 +20,7 @@ MODULES = [
     ("fig13_eq7_tensor_parallel", "benchmarks.bench_tensor_parallel"),
     ("table2_3_vs_baseline", "benchmarks.bench_vs_baseline"),
     ("roofline_site_kernel", "benchmarks.bench_roofline"),
+    ("site_step_fusion", "benchmarks.bench_site_step"),
 ]
 
 

@@ -105,6 +105,27 @@ class Backend:
         raise NotImplementedError
 
 
+def _warm_kernel_autotuner(plan: SessionPlan, n_samples: int, chi: int,
+                           d: int, dtype) -> None:
+    """Seed the kernel autotuner for every site-step shape the walk will
+    trace.  The timed TPU sweep cannot run inside a jit trace, so the data
+    planes call this *before* compiling; off-TPU it just records the
+    heuristic block table (no compilation, microseconds)."""
+    if plan.kernels != "pallas":
+        return
+    from repro.kernels.site_impls import warm_site_step
+
+    p1 = plan.p1 if plan.scheme != "seq" else 1
+    n_chunk = plan.micro_batch or (n_samples // max(1, p1))
+    chis = ({chi_s for _, _, chi_s in plan.stages}
+            if plan.stages is not None else {chi})
+    for chi_s in sorted(chis):
+        warm_site_step(n_chunk, chi_s, d, dtype,
+                       semantics=plan.semantics,
+                       scaling=plan.sampler_config.scaling,
+                       compute_dtype=plan.sampler_config.compute_dtype)
+
+
 @register_backend("inmem")
 class InMemBackend(Backend):
     """Whole-chain-on-device execution (paper §3.1–§3.2 in-memory paths)."""
@@ -122,6 +143,8 @@ class InMemBackend(Backend):
                              "(it owns the per-segment checkpoints)")
         mps = req.mps()
         cfg = plan.sampler_config
+        _warm_kernel_autotuner(plan, n, mps.chi, mps.phys_dim,
+                               mps.gammas.dtype)
 
         if plan.scheme == "seq":
             if plan.stages is not None:
@@ -172,6 +195,9 @@ class StreamedBackend(Backend):
 
         plan = req.plan
         store = req.store()
+        shape = store.meta(0)
+        _warm_kernel_autotuner(plan, req.n_samples, shape[0], shape[2],
+                               store.compute_dtype)
         engine_scheme = "inmem" if plan.scheme == "seq" else plan.scheme
         eng = StreamingEngine(
             store, semantics=plan.semantics, config=plan.sampler_config,

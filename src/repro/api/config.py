@@ -29,6 +29,9 @@ field                   meaning
                         ``streamed × multihost`` is the paper's §3.1
                         process-0-reads-then-broadcasts cell
 ``scaling``             §3.3 environment rescale: "none"|"global"|"per_sample"
+``kernels``             site-step kernel dispatch: "pallas" (fused VMEM-
+                        resident pipeline, ``kernels/dispatch.py``) | "xla" |
+                        AUTO (pallas on a TPU backend, xla elsewhere)
 ``compute_dtype``       mixed-precision GEMM inputs (e.g. ``jnp.bfloat16``)
 ``wire_dtype``          §3.3.2-on-the-wire cast for TP collectives
 ``measure_first``       tp-3 measure-first reformulation (linear semantics)
@@ -70,6 +73,7 @@ class SamplerConfig:
     # workload semantics / numerics
     semantics: str = AUTO
     scaling: str = "per_sample"
+    kernels: str = AUTO                # site-step dispatch: pallas | xla
     compute_dtype: Optional[Any] = None
     wire_dtype: Optional[Any] = None
     measure_first: bool = False
@@ -98,6 +102,7 @@ class SessionPlan:
     runtime: str                       # cluster runtime name: "local" | ...
     scheme: str                        # "seq" | "dp" | "tp_single" | ...
     semantics: str
+    kernels: str                       # resolved dispatch: "pallas" | "xla"
     n_samples: int
     p1: int                            # data-parallel shards
     p2: int                            # tensor-parallel workers per group
@@ -189,6 +194,10 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
 
     semantics = (config.semantics if config.semantics != AUTO
                  else (source_semantics or "linear"))
+
+    # -- kernel dispatch (AUTO → pallas on TPU, xla elsewhere) --------------
+    from repro.kernels.dispatch import resolve_kernels
+    kernels = resolve_kernels(config.kernels)   # raises on unknown modes
 
     p1, p2 = _mesh_sizes(mesh)
     hw = config.hardware
@@ -300,9 +309,10 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
                                  micro_batch=micro)
     sampler_config = CoreSamplerConfig(semantics=semantics,
                                        scaling=config.scaling,
-                                       compute_dtype=config.compute_dtype)
+                                       compute_dtype=config.compute_dtype,
+                                       kernels=kernels)
     return SessionPlan(backend=backend, runtime=runtime.name, scheme=scheme,
-                       semantics=semantics,
+                       semantics=semantics, kernels=kernels,
                        n_samples=n_samples, p1=p1, p2=p2, micro_batch=micro,
                        segment_len=segment_len, chi_profile=chi_profile,
                        stages=stages,

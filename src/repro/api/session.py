@@ -105,7 +105,7 @@ class SamplingSession:
         info = {
             "backend": plan.backend, "runtime": plan.runtime,
             "processes": self.runtime.process_count,
-            "scheme": plan.scheme,
+            "scheme": plan.scheme, "kernels": plan.kernels,
             "semantics": plan.semantics, "p1": plan.p1, "p2": plan.p2,
             "micro_batch": plan.micro_batch,
             "n_stages": len(stages),

@@ -54,6 +54,8 @@ from repro.compat import axis_size, shard_map
 from repro.core.mps import MPS
 from repro.core import precision
 from repro.core.sampler import SamplerConfig, draw_from_probs
+from repro.kernels import dispatch
+from repro.kernels.site_impls import contract_parallel, measure_probs_xla
 
 Array = jax.Array
 
@@ -66,24 +68,12 @@ def _env_dtype(gamma_dtype):
 
 
 def _contract(env: Array, gamma: Array, config: SamplerConfig) -> Array:
-    """temp[n,r,s] = Σ_l env[n,l] Γ[l,r,s] under the configured precision."""
-    n, lsz = env.shape
-    _, r, d = gamma.shape[0], gamma.shape[1], gamma.shape[2]
-    if config.compute_dtype is not None:
-        out = jax.lax.dot_general(
-            env.astype(config.compute_dtype),
-            gamma.reshape(gamma.shape[0], -1).astype(config.compute_dtype),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32).astype(env.dtype)
-        return out.reshape(n, r, d)
-    return jnp.einsum("nl,lrs->nrs", env, gamma)
+    """temp[n,r,s] = Σ_l env[n,l] Γ[l,r,s] under the configured precision
+    (one shared implementation with the dispatched xla cells)."""
+    return contract_parallel(env, gamma, config.compute_dtype)
 
 
-def _measure(temp: Array, lam: Array, semantics: str) -> Array:
-    if semantics == "linear":
-        return jnp.einsum("nrs,r->ns", temp, lam)
-    scaled = temp * lam[None, :, None]
-    return jnp.sum(jnp.abs(scaled) ** 2, axis=1)
+_measure = measure_probs_xla
 
 
 def _tp_rescale(env: Array, mode: str, axis: Optional[str] = None
@@ -128,10 +118,16 @@ def _tp_single_site_step(env, gamma_l, lam, key, config, axis,
     """
     semantics = config.semantics
     dtype = env.dtype
-    temp_partial = _contract(env, gamma_l, config)        # (N, χ, d) partial sum
     if semantics == "linear":
+        # contract + partial measure in one dispatched op (the Pallas cell
+        # fuses them so the partial temp makes one HBM pass, not two), then
         # measure-before-communicate: tiny psum of (N, d) partial probs
-        probs = jax.lax.psum(_measure(temp_partial, lam, semantics), axis)
+        cm = dispatch.get_site_op("contract_measure", semantics,
+                                  config.kernels)
+        temp_partial, probs_partial = cm(env, gamma_l, lam,
+                                         semantics=semantics,
+                                         compute_dtype=config.compute_dtype)
+        probs = jax.lax.psum(probs_partial, axis)
         samples = draw_from_probs(probs, key)
         collapsed = jnp.take_along_axis(
             temp_partial, samples[:, None, None], axis=2)[:, :, 0]  # (N, χ) partial
@@ -141,7 +137,9 @@ def _tp_single_site_step(env, gamma_l, lam, key, config, axis,
             collapsed, axis, scatter_dimension=1, tiled=True)       # (N, χ/p₂)
         env_new = env_new.astype(dtype)
     else:
-        # born: must sum split-K partials before squaring.
+        # born: must sum split-K partials before squaring (|Σ·|² ≠ Σ|·|², so
+        # there is no valid fused-measure cell here — stays XLA by design).
+        temp_partial = _contract(env, gamma_l, config)    # (N, χ, d) partial
         temp = jax.lax.psum_scatter(temp_partial, axis,
                                     scatter_dimension=1, tiled=True)  # (N, χ/p₂, d)
         p2 = axis_size(axis)
@@ -157,39 +155,24 @@ def _tp_single_site_step(env, gamma_l, lam, key, config, axis,
     return env_new, dlog, samples
 
 
-def _collapse_select_xla(env, gamma_l, samples, config):
-    """env' = env @ Γ[:, :, s_n] without materializing the (N, χ, d) temp:
-    d masked GEMMs (the Pallas kernel fuses the mask on TPU)."""
-    d = gamma_l.shape[2]
-    n, _ = env.shape
-    acc = None
-    for s in range(d):
-        mask = (samples == s).astype(env.dtype)[:, None]
-        part = _contract_2d(env * mask, gamma_l[:, :, s], config)
-        acc = part if acc is None else acc + part
-    return acc
-
-
-def _contract_2d(env, gamma2d, config):
-    if config.compute_dtype is not None:
-        return jax.lax.dot_general(
-            env.astype(config.compute_dtype),
-            gamma2d.astype(config.compute_dtype),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32).astype(jnp.float32)
-    return env @ gamma2d
-
-
 def _tp_single_site_step_measure_first(env, gamma_l, w_l, key, config, axis,
                                        wire_dtype=None):
     """tp-3: probs from the tiny env@W GEMM; collapse via select-GEMM.
 
-    env (N, χ/p₂) sharded; gamma_l (χ/p₂, χ, d); w_l (χ/p₂, d).
+    env (N, χ/p₂) sharded; gamma_l (χ/p₂, χ, d); w_l (χ/p₂, d).  Both ops
+    are dispatched: the Pallas cells are ``kernels/site_step.measure_probs``
+    and ``kernels/collapse_select.collapse_select`` (masked operand
+    VMEM-resident — the (N, χ, d) temp never exists anywhere).
     """
     dtype = env.dtype
-    probs = jax.lax.psum(_contract_2d(env, w_l, config).astype(dtype), axis)
+    measure_op = dispatch.get_site_op("measure", "linear", config.kernels)
+    collapse_op = dispatch.get_site_op("collapse", "linear", config.kernels)
+    probs = jax.lax.psum(
+        measure_op(env, w_l, compute_dtype=config.compute_dtype)
+        .astype(dtype), axis)
     samples = draw_from_probs(probs, key)
-    collapsed = _collapse_select_xla(env, gamma_l, samples, config)  # (N, χ)
+    collapsed = collapse_op(env, gamma_l, samples,
+                            compute_dtype=config.compute_dtype)  # (N, χ)
     if wire_dtype is not None:
         collapsed = collapsed.astype(wire_dtype)
     env_new = jax.lax.psum_scatter(
@@ -207,13 +190,31 @@ def _tp_double_site_pair(env, gamma_odd_l, lam_odd, gamma_even_r, lam_even,
     """Two sites per round: AllReduce once, even site communication-free."""
     semantics = config.semantics
     k_odd, k_even = key_pair
+    fused = (dispatch.resolve_kernels(config.kernels) == "pallas"
+             and semantics == "linear")
 
     # --- odd site: split-K over left bond, AllReduce the unmeasured temp ----
-    temp = _contract(env, gamma_odd_l, config)
-    if wire_dtype is not None:
-        temp = temp.astype(wire_dtype)
-    temp = jax.lax.psum(temp, axis).astype(env.dtype)     # (N, χ, d) full
-    probs = _measure(temp, lam_odd, semantics)          # replicated (η overhead)
+    if fused and wire_dtype is None:
+        # Pallas cell: partial probs come out of the contraction's output
+        # tiles (one HBM pass over the partial temp instead of two); the
+        # measurement linearity makes psum-of-partial-measures ≡ measure-of-
+        # psum, and the extra (N, d) psum is noise next to the (N, χ, d) one.
+        # With a wire_dtype the XLA reference measures the *wire-rounded*
+        # psummed temp, which partial measures cannot reproduce — that cell
+        # keeps the reference structure below so pallas ≡ xla stays exact.
+        cm = dispatch.get_site_op("contract_measure", semantics,
+                                  config.kernels)
+        temp, probs_partial = cm(env, gamma_odd_l, lam_odd,
+                                 semantics=semantics,
+                                 compute_dtype=config.compute_dtype)
+        temp = jax.lax.psum(temp, axis).astype(env.dtype)   # (N, χ, d) full
+        probs = jax.lax.psum(probs_partial, axis)
+    else:
+        temp = _contract(env, gamma_odd_l, config)
+        if wire_dtype is not None:
+            temp = temp.astype(wire_dtype)
+        temp = jax.lax.psum(temp, axis).astype(env.dtype)   # (N, χ, d) full
+        probs = _measure(temp, lam_odd, semantics)      # replicated (η overhead)
     samples_odd = draw_from_probs(probs, k_odd)
     env_full = jnp.take_along_axis(temp, samples_odd[:, None, None], axis=2)[:, :, 0]
     if semantics == "born":
@@ -222,12 +223,21 @@ def _tp_double_site_pair(env, gamma_odd_l, lam_odd, gamma_even_r, lam_even,
     env_full, dlog_odd = _tp_rescale(env_full, config.scaling)
 
     # --- even site: Γ split on the right bond; local GEMM, no collective ----
-    temp_loc = _contract(env_full, gamma_even_r, config)   # (N, χ/p₂, d) exact slice
     p2 = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     lam_shard = jax.lax.dynamic_slice_in_dim(
         lam_even, idx * (lam_even.shape[0] // p2), lam_even.shape[0] // p2)
-    probs = jax.lax.psum(_measure(temp_loc, lam_shard, semantics), axis)  # tiny
+    if fused:
+        cm = dispatch.get_site_op("contract_measure", semantics,
+                                  config.kernels)
+        temp_loc, probs_partial = cm(env_full, gamma_even_r, lam_shard,
+                                     semantics=semantics,
+                                     compute_dtype=config.compute_dtype)
+        probs = jax.lax.psum(probs_partial, axis)          # tiny (N, d)
+    else:
+        temp_loc = _contract(env_full, gamma_even_r, config)  # (N, χ/p₂, d)
+        probs = jax.lax.psum(_measure(temp_loc, lam_shard, semantics),
+                             axis)                         # tiny
     samples_even = draw_from_probs(probs, k_even)
     env_new = jnp.take_along_axis(temp_loc, samples_even[:, None, None], axis=2)[:, :, 0]
     if semantics == "born":

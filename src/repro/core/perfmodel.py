@@ -109,6 +109,38 @@ def eq3_memory(w: Workload, bytes_per_elt: int | None = None) -> float:
             + w.micro_batch * w.chi * w.d) * b
 
 
+def site_hbm_bytes(n: int, chi: int, d: int, bytes_per_elt: int = 8,
+                   fused: bool = False) -> float:
+    """Modeled per-site HBM traffic of the sampling hot loop (§Roofline).
+
+    *Unfused* (separate XLA ops): the unmeasured ``temp[N, χ, d]`` makes
+    three HBM trips — written by the contraction GEMM, read back by the
+    measurement, read again by the collapse — on top of the operands
+    (env, Γ) and results (probs, env').
+
+    *Fused* (``kernels/site_step.py``): temp lives in VMEM for the whole
+    pipeline; HBM carries only env + Γ + u in and env' + samples + dlog
+    out.  The 3·N·χ·d term — the dominant one for d ≥ 2 — vanishes, which
+    is the ≥ 2× byte reduction ``bench_site_step.py`` records.
+    """
+    operands = n * chi + chi * chi * d            # env read + Γ read
+    env_out = n * chi                             # env' write
+    if fused:
+        # + uniforms in, samples (int32≈elt) + dlog out
+        return (operands + env_out + 3 * n) * bytes_per_elt
+    temp = 3 * n * chi * d                        # write + 2 reads
+    probs = 2 * n * d                             # write + read for the draw
+    return (operands + env_out + temp + probs) * bytes_per_elt
+
+
+def site_fusion_byte_reduction(n: int, chi: int, d: int,
+                               bytes_per_elt: int = 8) -> float:
+    """HBM bytes(unfused) / bytes(fused) for one site — the paper-facing
+    derived column of the site-step bench."""
+    return (site_hbm_bytes(n, chi, d, bytes_per_elt, fused=False)
+            / site_hbm_bytes(n, chi, d, bytes_per_elt, fused=True))
+
+
 def eq4_tp_site(w: Workload, hw: Hardware, p2: int, scheme: str,
                 efficiency: float = 0.5, t_measure: float | None = None) -> float:
     """Eq. 4 — one TP site step: GEMM + measure + comm_volume/bandwidth."""

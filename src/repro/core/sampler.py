@@ -16,6 +16,14 @@ jits once regardless of M.  Micro-batching (N₂) happens *outside* via vmap-
 like batching of the whole scan; macro-batching (N₁) and the double-buffered
 Γ streaming live in ``data/gamma_store.py`` + ``core/parallel.py``.
 
+The site body itself is dispatched through ``kernels/dispatch.py``:
+``SamplerConfig.kernels`` picks the fused Pallas site-step pipeline
+(``"pallas"`` — contract → measure → draw → collapse → rescale with the
+(N, χ, d) intermediate VMEM-resident, never in HBM) or the reference XLA
+ops (``"xla"``).  Randomness is identical either way: the per-site uniform
+is drawn from ``fold_in(key, site)`` *before* the dispatch, so both
+backends consume the same bits and emit bit-identical samples (§4.1).
+
 This module is the innermost data plane; the application front door that
 composes it with DP/TP placement, streaming, dynamic χ, and checkpointing
 is :class:`repro.api.SamplingSession`.
@@ -31,6 +39,8 @@ import jax.numpy as jnp
 
 from repro.core.mps import MPS
 from repro.core import precision
+from repro.kernels import dispatch
+from repro.kernels.site_impls import draw_from_uniform, site_probs_dtype
 
 Array = jax.Array
 
@@ -51,27 +61,10 @@ class SampleResult(NamedTuple):
     site_stats: Array   # (M, 3) [max |env|, min nonzero |env|, mean photon] diagnostics
 
 
-def _measure_linear(temp: Array, lam: Array) -> Array:
-    """(N, chi, d), (chi,) -> unnormalised probs (N, d).  Paper Alg. 1 line 1."""
-    return jnp.einsum("nrs,r->ns", temp, lam)
-
-
-def _measure_born(temp: Array, lam: Array) -> Array:
-    scaled = temp * lam[None, :, None]
-    return jnp.sum(jnp.abs(scaled) ** 2, axis=1)
-
-
 def draw_from_probs(probs: Array, key: Array) -> Array:
     """Alg. 1 lines 2-4: normalise, cumsum, threshold draw.  probs (N, d) ≥ 0."""
-    probs = jnp.clip(probs, 0.0, None)
-    total = jnp.sum(probs, axis=1, keepdims=True)
-    # Guard fully-underflowed rows: fall back to uniform (paper Fig. 6 failure
-    # mode — with per-sample scaling this should never trigger).
-    safe = jnp.where(total > 0, probs / jnp.where(total > 0, total, 1.0),
-                     jnp.ones_like(probs) / probs.shape[1])
-    cdf = jnp.cumsum(safe, axis=1)
-    u = jax.random.uniform(key, (probs.shape[0], 1), dtype=cdf.dtype)
-    return jnp.sum((u > cdf).astype(jnp.int32), axis=1).clip(0, probs.shape[1] - 1)
+    u = jax.random.uniform(key, (probs.shape[0], 1), dtype=probs.dtype)
+    return draw_from_uniform(probs, u)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +72,7 @@ class SamplerConfig:
     semantics: str = "linear"          # "linear" | "born"
     scaling: str = "per_sample"        # "none" | "global" | "per_sample"  (§3.3)
     compute_dtype: Optional[jnp.dtype] = None  # e.g. jnp.bfloat16 for MXU path
-    use_kernel: bool = False           # route contraction+measure through Pallas
+    kernels: str = "xla"               # "pallas" (fused site step) | "xla" | "auto"
 
 
 def init_state(mps: MPS, n_samples: int, key: Array,
@@ -96,34 +89,25 @@ def init_state(mps: MPS, n_samples: int, key: Array,
 
 def site_step(state: SamplerState, site: tuple[Array, Array, Array],
               config: SamplerConfig) -> tuple[SamplerState, tuple[Array, Array]]:
-    """One site of the chain: contract → measure → collapse → rescale."""
+    """One site of the chain: contract → measure → collapse → rescale.
+
+    The pipeline body is a dispatched :func:`kernels.dispatch.get_site_op`
+    — the fused Pallas kernel when ``config.kernels`` resolves to
+    ``"pallas"``, the reference XLA ops otherwise.  The inverse-CDF uniform
+    is drawn here (same fold_in, same shape/dtype as always), so the two
+    backends are draw-for-draw identical.
+    """
     gamma, lam, site_idx = site            # (chi, chi, d), (chi,), () int32
     env, key, log_scale = state
     sub = jax.random.fold_in(key, site_idx)
 
-    if config.compute_dtype is not None and config.semantics == "linear":
-        # Mixed-precision GEMM (§3.3): inputs in low precision, fp32 accumulate.
-        temp = jax.lax.dot_general(
-            env.astype(config.compute_dtype),
-            gamma.reshape(gamma.shape[0], -1).astype(config.compute_dtype),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).reshape(env.shape[0], gamma.shape[1], gamma.shape[2]).astype(env.dtype)
-    else:
-        temp = jnp.einsum("nl,lrs->nrs", env, gamma)
-
-    if config.semantics == "linear":
-        probs = _measure_linear(temp, lam)
-    else:
-        probs = _measure_born(temp, lam)
-
-    samples = draw_from_probs(probs, sub)
-    new_env = jnp.take_along_axis(
-        temp, samples[:, None, None].astype(jnp.int32), axis=2)[:, :, 0]
-    if config.semantics == "born":
-        new_env = new_env * lam[None, :]
-
-    new_env, dlog = precision.rescale(new_env, mode=config.scaling)
+    u = jax.random.uniform(
+        sub, (env.shape[0], 1),
+        dtype=site_probs_dtype(env, gamma, lam, config.semantics,
+                               config.compute_dtype))
+    op = dispatch.get_site_op("site_step", config.semantics, config.kernels)
+    new_env, samples, dlog = op(env, gamma, lam, u, scaling=config.scaling,
+                                compute_dtype=config.compute_dtype)
 
     absenv = jnp.abs(new_env)
     stats = jnp.stack([

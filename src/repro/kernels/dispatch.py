@@ -1,0 +1,254 @@
+"""Kernel dispatch layer: one registry for every site-step stage.
+
+The sampling data planes never call a Pallas kernel (or its XLA fallback)
+directly — they ask this registry for the implementation of a *stage*:
+
+=================  ==========================================================
+stage              semantics of the op
+=================  ==========================================================
+``site_step``      the fully fused contract → measure → draw → collapse →
+                   rescale pipeline (``kernels/site_step.py``); temp stays
+                   VMEM-resident, only (N, χ) + two (N,) vectors hit HBM
+``contract_measure``  contract + measure emitting (temp, probs) — the TP
+                   schedules that must ship the unmeasured temp through a
+                   collective use this (``kernels/contract_measure.py``)
+``measure``        the tp-3 measure-first partial-probs GEMM env @ W
+``collapse``       the sample-selected collapse GEMM env·Γ[:, :, sₙ]
+                   (``kernels/collapse_select.py``)
+=================  ==========================================================
+
+Implementations register under ``(stage, semantics, backend)`` where
+``backend`` is ``"pallas"`` or ``"xla"``.  Lookup order for
+``backend="pallas"`` is ``(stage, semantics, "pallas")`` then the XLA entry
+— a cell with no Pallas kernel (e.g. Born split-K TP, whose collective
+forces the temp to HBM anyway) silently keeps its XLA implementation, so
+``kernels="pallas"`` is always safe to request globally.
+
+``SamplerConfig.kernels ∈ {"auto", "pallas", "xla"}`` is resolved by the
+session planner through :func:`resolve_kernels`: AUTO means Pallas on a
+real TPU backend and XLA elsewhere (tests force ``"pallas"`` explicitly
+and the kernels run under ``interpret=True``).
+
+The **autotuner** picks Pallas block sizes per shape: on TPU a timed sweep
+over MXU-aligned candidates (cached per process), elsewhere a deterministic
+heuristic table (largest divisors under a VMEM budget) — interpret-mode
+numerics do not depend on the block choice, so CI exercises the same code
+path the TPU runs.  ``autotune_cache_stats()`` reports cache behaviour
+(surfaced by ``launch/sample.py --kernels``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+
+STAGES = ("site_step", "contract_measure", "measure", "collapse")
+KERNEL_MODES = ("auto", "pallas", "xla")
+
+_REGISTRY: dict[tuple[str, str, str], Callable] = {}
+
+
+def register_site_op(stage: str, semantics: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` implementation of
+    ``stage`` under ``semantics`` ("linear" | "born" | "*" for both)."""
+    assert stage in STAGES, stage
+
+    def deco(fn: Callable) -> Callable:
+        sems = ("linear", "born") if semantics == "*" else (semantics,)
+        for s in sems:
+            _REGISTRY[(stage, s, backend)] = fn
+        return fn
+    return deco
+
+
+def get_site_op(stage: str, semantics: str, backend: str) -> Callable:
+    """The implementation for a stage; Pallas requests fall back to XLA
+    when the cell has no kernel (see module docstring)."""
+    if backend == "auto":
+        backend = resolve_kernels("auto")
+    if backend == "pallas":
+        impl = _REGISTRY.get((stage, semantics, "pallas"))
+        if impl is not None:
+            return impl
+        backend = "xla"
+    try:
+        return _REGISTRY[(stage, semantics, backend)]
+    except KeyError:
+        raise ValueError(
+            f"no implementation for stage={stage!r} semantics={semantics!r} "
+            f"backend={backend!r}; registered: {sorted(_REGISTRY)}") from None
+
+
+def registered_ops() -> list[tuple[str, str, str]]:
+    return sorted(_REGISTRY)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_kernels(requested: str) -> str:
+    """``"auto" | "pallas" | "xla"`` → a concrete backend name."""
+    if requested not in KERNEL_MODES:
+        raise ValueError(f"kernels must be one of {KERNEL_MODES}, "
+                         f"got {requested!r}")
+    if requested == "auto":
+        return "pallas" if on_tpu() else "xla"
+    return requested
+
+
+# ---------------------------------------------------------------------------
+# Block-size autotuner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Pallas tile sizes for one (stage, shape) cell."""
+    bn: int
+    br: int
+    bl: int
+
+
+# heuristic VMEM budget: a v5e core has ~16 MB; leave headroom for the
+# compiler's own double buffering of the streamed operand tiles
+_VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+_cache: dict[tuple, BlockConfig] = {}
+_stats = {"hits": 0, "misses": 0, "swept": 0}
+
+
+def autotune_cache_stats() -> dict:
+    """Cache behaviour counters + current entries (per process)."""
+    return {"entries": len(_cache), **_stats}
+
+
+def clear_autotune_cache() -> None:
+    _cache.clear()
+    _stats.update(hits=0, misses=0, swept=0)
+
+
+def _divisor_tile(size: int, pref: int) -> int:
+    """Largest divisor of ``size`` that is ≤ ``pref`` — non-power-of-two and
+    prime dimensions degrade gracefully (worst case: the whole dimension,
+    which is always a legal Pallas block)."""
+    for t in range(min(pref, size), 0, -1):
+        if size % t == 0:
+            return t
+    return size
+
+
+def _working_set_bytes(stage: str, cfg: BlockConfig, chi_r: int, d: int,
+                       elt: int, planes: int) -> int:
+    """VMEM model of a block choice (the site_step slab dominates)."""
+    bn, br, bl = cfg.bn, cfg.br, cfg.bl
+    if stage == "site_step":
+        # env tile + Γ tile + split-K acc + resident temp slab + env' row
+        per_plane = bn * bl + bl * br * d + bn * br * d + bn * chi_r * d
+        return (planes * per_plane + bn * chi_r + bn * d) * elt
+    if stage == "contract_measure":
+        return (bn * bl + bl * br * d + 2 * bn * br * d + bn * d) * elt
+    if stage == "collapse":
+        return (bn * bl + bl * br * d + 2 * bn * br) * elt
+    if stage == "measure":
+        return (bn * bl + bl * d + 2 * bn * d) * elt
+    raise ValueError(stage)
+
+
+def _heuristic(stage: str, n: int, chi_l: int, chi_r: int, d: int,
+               elt: int, planes: int) -> BlockConfig:
+    """Deterministic block choice: MXU-preferred divisors, then shrink BN
+    (the only axis the site_step slab scales with) until the VMEM model
+    fits.  Correctness never depends on the choice — any divisors work."""
+    cfg = BlockConfig(bn=_divisor_tile(n, 256), br=_divisor_tile(chi_r, 256),
+                      bl=_divisor_tile(chi_l, 256))
+    while (_working_set_bytes(stage, cfg, chi_r, d, elt, planes)
+           > _VMEM_BUDGET_BYTES):
+        if cfg.bn > 1:                       # the slab scales with BN first
+            cfg = dataclasses.replace(cfg, bn=_divisor_tile(n, cfg.bn // 2))
+        elif cfg.br > 1:
+            cfg = dataclasses.replace(cfg, br=_divisor_tile(chi_r,
+                                                            cfg.br // 2))
+        elif cfg.bl > 1:
+            cfg = dataclasses.replace(cfg, bl=_divisor_tile(chi_l,
+                                                            cfg.bl // 2))
+        else:                                # χ itself exceeds the model —
+            break                            # compile anyway, VMEM will tell
+    return cfg
+
+
+def _sweep_candidates(stage: str, n: int, chi_l: int, chi_r: int, d: int,
+                      elt: int, planes: int) -> list[BlockConfig]:
+    """MXU-aligned candidate grid for the timed TPU sweep (budget-filtered)."""
+    seen, out = set(), []
+    for pn in (512, 256, 128, 64):
+        for pr in (512, 256, 128):
+            for plb in (512, 256, 128):
+                cfg = BlockConfig(bn=_divisor_tile(n, pn),
+                                  br=_divisor_tile(chi_r, pr),
+                                  bl=_divisor_tile(chi_l, plb))
+                if cfg in seen:
+                    continue
+                seen.add(cfg)
+                if (_working_set_bytes(stage, cfg, chi_r, d, elt, planes)
+                        <= _VMEM_BUDGET_BYTES):
+                    out.append(cfg)
+    return out or [_heuristic(stage, n, chi_l, chi_r, d, elt, planes)]
+
+
+def _time_call(fn: Callable, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(stage: str, *, n: int, chi_l: int, chi_r: int, d: int,
+             dtype, planes: int = 1,
+             probe: Optional[Callable[[BlockConfig], Callable]] = None
+             ) -> BlockConfig:
+    """Block sizes for one (stage, shape, dtype) cell, cached per process.
+
+    Off-TPU (and whenever no ``probe`` is supplied) the heuristic table
+    answers immediately.  On TPU, ``probe(cfg)`` must return a zero-arg
+    thunk running the kernel at ``cfg``; the fastest candidate wins and is
+    cached, so a production sampler pays the sweep once per distinct
+    (χ-bucket, N₂) shape.
+    """
+    elt = jax.numpy.dtype(dtype).itemsize
+    key = (stage, n, chi_l, chi_r, d, str(jax.numpy.dtype(dtype)), planes,
+           on_tpu())
+    hit = _cache.get(key)
+    if hit is not None:
+        _stats["hits"] += 1
+        return hit
+    _stats["misses"] += 1
+    if probe is not None and on_tpu():
+        best_cfg, best_t = None, float("inf")
+        for cfg in _sweep_candidates(stage, n, chi_l, chi_r, d, elt, planes):
+            _stats["swept"] += 1
+            try:
+                t = _time_call(probe(cfg))
+            except Exception:       # a candidate the compiler rejects
+                continue
+            if t < best_t:
+                best_cfg, best_t = cfg, t
+        cfg = best_cfg or _heuristic(stage, n, chi_l, chi_r, d, elt, planes)
+    else:
+        cfg = _heuristic(stage, n, chi_l, chi_r, d, elt, planes)
+    _cache[key] = cfg
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Implementations (imported last so the registry decorators see the helpers)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import site_impls  # noqa: E402,F401  (registers the ops)

@@ -1,8 +1,17 @@
 """jit'd public wrappers around the Pallas kernels.
 
-On a real TPU backend the kernels run compiled; everywhere else (this
-container) they run with ``interpret=True`` against the same BlockSpecs, and
-``tests/test_kernels.py`` sweeps shapes/dtypes against ``ref.py``.
+Routing goes through :mod:`repro.kernels.dispatch`: ``kernels="auto"``
+resolves to the compiled Pallas cell on a real TPU backend and the XLA
+reference everywhere else (where the Pallas cells run with
+``interpret=True`` when requested explicitly — ``tests/test_kernels.py``
+sweeps shapes/dtypes against ``ref.py`` that way).
+
+Historical note: ``collapse_rescale`` used to take the materialized
+``temp[N, χ, d]`` and unconditionally call the pure-jnp reference — the
+collapse never reached the ``collapse_select`` Pallas kernel on TPU *and*
+forced the caller to keep the very intermediate the kernel exists to
+avoid.  It now takes ``(env, Γ, samples)`` and dispatches the
+sample-selected collapse GEMM + §3.3 per-sample rescale.
 """
 from __future__ import annotations
 
@@ -12,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.contract_measure import contract_measure as _cm_kernel
+from repro.kernels.dispatch import get_site_op, resolve_kernels
 from repro.kernels.displacement_expm import displacement_expm as _de_kernel
 
 Array = jax.Array
@@ -22,23 +31,12 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
+@functools.partial(jax.jit, static_argnames=("kernels",))
 def contract_measure(env: Array, gamma: Array, lam: Array,
-                     use_kernel: bool = True):
+                     kernels: str = "auto"):
     """Fused site contraction + linear measurement. Returns (temp, probs)."""
-    if not use_kernel:
-        return _ref.contract_measure_ref(env, gamma, lam)
-    n, chi = env.shape
-    d = gamma.shape[2]
-    # MXU-aligned tiles when shapes allow; fall back to whole-array blocks.
-    def tile(sz, pref):
-        for t in (pref, 256, 128, 64, 32, 16, 8, 4, 2, 1):
-            if t <= sz and sz % t == 0:
-                return t
-        return sz
-    bn, br, bl = tile(n, 256), tile(gamma.shape[1], 256), tile(chi, 256)
-    return _cm_kernel(env, gamma, lam, bn=bn, br=br, bl=bl,
-                      interpret=not _on_tpu())
+    op = get_site_op("contract_measure", "linear", kernels)
+    return op(env, gamma, lam, semantics="linear", compute_dtype=None)
 
 
 @functools.partial(jax.jit, static_argnames=("d", "use_kernel"))
@@ -54,6 +52,31 @@ def displacement_matrices(mu: Array, d: int, use_kernel: bool = True) -> Array:
     return ore + 1j * oim
 
 
-def collapse_rescale(temp: Array, samples: Array) -> Array:
-    """Collapse + per-sample rescale (bandwidth-bound; XLA fuses this fine)."""
-    return _ref.collapse_rescale_ref(temp, samples)
+@functools.partial(jax.jit, static_argnames=("kernels",))
+def collapse_rescale(env: Array, gamma: Array, samples: Array,
+                     kernels: str = "auto"):
+    """Sample-selected collapse + per-sample rescale (§3.3), dispatched:
+    env (N, L) · Γ[:, :, sₙ] → env' (N, R), rescaled to unit per-row max.
+
+    The Pallas cell (``collapse_select``) keeps the masked operand
+    VMEM-resident so the (N, χ, d) temp never exists; the XLA cell runs the
+    d masked GEMMs.  Resolution follows :func:`dispatch.resolve_kernels`.
+    """
+    op = get_site_op("collapse", "linear", kernels)
+    env_new = op(env, gamma, samples, compute_dtype=None)
+    m = jnp.max(jnp.abs(env_new), axis=1, keepdims=True)
+    return env_new / jnp.where(m > 0, m, 1.0)
+
+
+def site_step(env: Array, gamma: Array, lam: Array, u: Array,
+              kernels: str = "auto", semantics: str = "linear",
+              scaling: str = "per_sample"):
+    """The whole fused pipeline for one site (see ``kernels/site_step.py``):
+    contract → measure → inverse-CDF draw with the given uniforms u (N, 1)
+    → collapse → rescale.  Returns (env', samples, dlog)."""
+    op = get_site_op("site_step", semantics, kernels)
+    return op(env, gamma, lam, u, scaling=scaling, compute_dtype=None)
+
+
+__all__ = ["contract_measure", "displacement_matrices", "collapse_rescale",
+           "site_step", "resolve_kernels"]

@@ -45,6 +45,39 @@ def collapse_select_ref(env, gamma, samples):
         temp, samples[:, None, None].astype(jnp.int32), axis=2)[:, :, 0]
 
 
+def site_step_ref(env, gamma, lam, u, semantics="linear",
+                  scaling="per_sample"):
+    """Oracle for the fused site-step pipeline (kernels/site_step.py):
+    contract → measure → normalise/cumsum/draw with the supplied uniforms
+    u (N,) → collapse(+λ for born) → per-sample rescale.
+
+    Returns (env' (N, χ), samples (N,) int, dlog (N,)).
+    """
+    temp = jnp.einsum("nl,lrs->nrs", env, gamma)
+    if semantics == "linear":
+        probs = jnp.einsum("nrs,r->ns", temp, lam)
+    else:
+        scaled = temp * lam[None, :, None]
+        probs = jnp.sum(jnp.abs(scaled) ** 2, axis=1)
+    probs = jnp.clip(probs, 0.0, None)
+    total = jnp.sum(probs, axis=1, keepdims=True)
+    safe = jnp.where(total > 0, probs / jnp.where(total > 0, total, 1.0),
+                     jnp.ones_like(probs) / probs.shape[1])
+    cdf = jnp.cumsum(safe, axis=1)
+    samples = jnp.sum((u[:, None] > cdf).astype(jnp.int32), axis=1).clip(
+        0, probs.shape[1] - 1)
+    env_new = jnp.take_along_axis(
+        temp, samples[:, None, None].astype(jnp.int32), axis=2)[:, :, 0]
+    if semantics == "born":
+        env_new = env_new * lam[None, :]
+    rdt = jnp.zeros((), env_new.dtype).real.dtype
+    if scaling == "per_sample":
+        m = jnp.max(jnp.abs(env_new), axis=1, keepdims=True)
+        factor = jnp.where(m > 0, m, 1.0).astype(rdt)
+        return env_new / factor, samples, jnp.log10(factor[:, 0])
+    return env_new, samples, jnp.zeros((env.shape[0],), rdt)
+
+
 def measure_first_probs_ref(env, gamma, lam):
     """probs via the associativity trick: env @ (Γ·Λ) — must equal
     contract_measure_ref(...)[1]."""

@@ -1,0 +1,390 @@
+"""Fused MPS site-step pipeline — Pallas TPU kernels (§Perf iteration ks-4).
+
+One site of Alg. 1 is contract → measure → normalise/cumsum/draw →
+collapse(+λ) → per-sample rescale.  Run as separate XLA ops the unmeasured
+``temp[N, χ, d]`` intermediate makes **three** HBM round trips per site
+(write after the GEMM, read for the measurement, read again for the
+collapse) — exactly the traffic ``bench_roofline.py`` models as the
+memory-bound term at large χ.  These kernels keep ``temp`` VMEM-resident
+for the whole pipeline: per n-tile the full ``(BN, χ_r, d)`` slab lives in
+a VMEM scratch across the (r, l) tile sweep, the inverse-CDF draw and the
+collapse happen on-chip, and only ``env'[N, χ_r]``, ``samples[N]`` and
+``dlog[N]`` are ever written back — the ``(N, χ, d)`` intermediate never
+touches HBM.
+
+Kernels (all dispatched through ``kernels/dispatch.py``):
+
+* :func:`site_step_linear` — the full fused pipeline, linear semantics
+  (paper Alg. 1).  Grid ``(n_tiles, r_tiles, l_tiles)``, l innermost
+  (sequential split-K on TPU); the draw/collapse/rescale epilogue runs once
+  per n-tile on the last (r, l) program.
+* :func:`site_step_born` — same pipeline for Born semantics.  Complex
+  amplitudes ride as split re/im planes (the MXU has no complex type):
+  two GEMMs per plane, ``probs = Σ_r (re² + im²)·λ²``, collapse ×λ, and
+  the per-sample max over ``|env'| = √(re² + im²)``.
+* :func:`measure_probs` — measure-only variant for the TP split-K
+  schedules: the tp-3 ``probs_partial = env_shard @ W_shard`` GEMM whose
+  (N, d) output is what crosses the wire *before* the big collective.
+* the collapse-only variant is :func:`kernels.collapse_select.collapse_select`
+  (sample-selected GEMM, masked operand VMEM-resident).
+
+Randomness stays outside: the caller passes the per-site uniforms
+``u[N]`` (drawn from the same folded key as the XLA path), so the fused
+path is draw-for-draw identical to ``core/sampler.site_step`` — the §4.1
+seed contract extends across the kernel boundary and is asserted in
+``tests/test_site_step.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _acc_dtype_for(dtype) -> jnp.dtype:
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def _draw(probs: Array, u: Array) -> Array:
+    """Alg. 1 lines 2-4 on a (BN, d) tile: normalise → cumsum → threshold.
+
+    Mirrors ``core.sampler.draw_from_uniform`` op-for-op so interpret-mode
+    runs stay bit-compatible with the XLA path.
+    """
+    d = probs.shape[1]
+    probs = jnp.clip(probs, 0.0, None)
+    total = jnp.sum(probs, axis=1, keepdims=True)
+    safe = jnp.where(total > 0, probs / jnp.where(total > 0, total, 1.0),
+                     jnp.ones_like(probs) / d)
+    cdf = jnp.cumsum(safe, axis=1)
+    return jnp.sum((u[:, None] > cdf).astype(jnp.int32), axis=1).clip(0, d - 1)
+
+
+def _collapse(temp: Array, samples: Array, d: int) -> Array:
+    """temp (BN, χr, d) → temp[n, :, s_n] via d masked adds (VPU-local)."""
+    acc = jnp.zeros(temp.shape[:2], dtype=temp.dtype)
+    for s in range(d):
+        mask = (samples == s).astype(temp.dtype)[:, None]
+        acc = acc + mask * temp[:, :, s]
+    return acc
+
+
+def _rescale(env: Array, mag: Array, scaling: str):
+    """Per-sample §3.3 rescale on a full (BN, χr) row; ``mag`` = |env|.
+
+    Returns (factor (BN, 1), dlog (BN,)).  ``scaling == "global"`` cannot be
+    fused (the max crosses n-tiles) — the wrapper rejects it.
+    """
+    if scaling == "none":
+        n = env.shape[0]
+        return jnp.ones((n, 1), dtype=mag.dtype), jnp.zeros((n,), mag.dtype)
+    m = jnp.max(mag, axis=1, keepdims=True)
+    factor = jnp.where(m > 0, m, 1.0)
+    return factor, jnp.log10(factor[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# Linear semantics: the paper-faithful Alg. 1 pipeline
+# ---------------------------------------------------------------------------
+
+def _linear_kernel(env_ref, gamma_ref, lam_ref, u_ref,
+                   env_out_ref, samples_ref, dlog_ref,
+                   temp_ref, acc_ref, probs_ref,
+                   *, n_r: int, n_l: int, br: int, d: int,
+                   scaling: str, out_dtype, compute_dtype):
+    j = pl.program_id(1)      # r tile
+    k = pl.program_id(2)      # l tile (sequential reduction)
+    acc_dtype = acc_ref.dtype
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    env = env_ref[...]                              # (BN, BL)
+    gam = gamma_ref[...]                            # (BL, BR, d)
+    bl = gam.shape[0]
+    if compute_dtype is not None:
+        env = env.astype(compute_dtype)
+        gam = gam.astype(compute_dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        env, gam.reshape(bl, br * d),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    ).reshape(env.shape[0], br, d)
+
+    @pl.when(k == n_l - 1)
+    def _measured():
+        temp = acc_ref[...]
+        # park this r tile of temp in the VMEM slab (never leaves the chip)
+        temp_ref[:, pl.ds(j * br, br), :] = temp
+        contrib = jax.lax.dot_general(
+            temp.swapaxes(1, 2).reshape(-1, br),        # (BN·d, BR)
+            lam_ref[...].astype(acc_dtype),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        ).reshape(temp.shape[0], d)
+
+        @pl.when(j == 0)
+        def _set():
+            probs_ref[...] = contrib
+
+        @pl.when(j > 0)
+        def _add():
+            probs_ref[...] += contrib
+
+    @pl.when((j == n_r - 1) & (k == n_l - 1))
+    def _epilogue():
+        # whole-site state for this n tile is on-chip: draw, collapse, rescale
+        samples = _draw(probs_ref[...].astype(out_dtype), u_ref[...])
+        env_new = _collapse(temp_ref[...].astype(out_dtype), samples, d)
+        factor, dlog = _rescale(env_new, jnp.abs(env_new), scaling)
+        env_out_ref[...] = env_new / factor
+        samples_ref[...] = samples.astype(jnp.int32)
+        dlog_ref[...] = dlog.astype(dlog_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "br", "bl", "scaling",
+                                             "compute_dtype", "interpret"))
+def site_step_linear(env: Array, gamma: Array, lam: Array, u: Array,
+                     bn: int = 256, br: int = 256, bl: int = 256,
+                     scaling: str = "per_sample",
+                     compute_dtype=None,
+                     interpret: bool = False):
+    """Fused site step: env (N, χl), Γ (χl, χr, d), Λ (χr), u (N,) →
+    (env' (N, χr), samples (N,) int32, dlog (N,)).
+
+    VMEM working set ≈ BN·BL + BL·BR·d + 2·BN·BR·d + **BN·χr·d** (the
+    resident temp slab) + BN·χr words — the autotuner sizes BN so the slab
+    fits; χr itself is never tiled out of VMEM, which is the whole point.
+    """
+    n, chi_l = env.shape
+    _, chi_r, d = gamma.shape
+    if scaling not in ("per_sample", "none"):
+        raise ValueError(f"fused site step cannot do scaling={scaling!r} "
+                         "(the max crosses n-tiles); rescale outside")
+    bn, br, bl = min(bn, n), min(br, chi_r), min(bl, chi_l)
+    assert n % bn == 0 and chi_r % br == 0 and chi_l % bl == 0, \
+        (n, chi_l, chi_r, bn, br, bl)
+    grid = (n // bn, chi_r // br, chi_l // bl)
+    out_dtype = (jnp.float32 if env.dtype in (jnp.bfloat16, jnp.float16)
+                 else env.dtype)
+    acc_dtype = _acc_dtype_for(env.dtype)
+
+    kern = functools.partial(
+        _linear_kernel, n_r=grid[1], n_l=grid[2], br=br, d=d,
+        scaling=scaling, out_dtype=out_dtype, compute_dtype=compute_dtype)
+    env_new, samples, dlog = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bl), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bl, br, d), lambda i, j, k: (k, j, 0)),
+            pl.BlockSpec((br,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, chi_r), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, chi_r), out_dtype),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), out_dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, chi_r, d), acc_dtype),    # the resident temp slab
+            pltpu.VMEM((bn, br, d), acc_dtype),       # split-K accumulator
+            pltpu.VMEM((bn, d), acc_dtype),           # probs accumulator
+        ],
+        interpret=interpret,
+    )(env, gamma, lam, u)
+    return env_new, samples, dlog
+
+
+# ---------------------------------------------------------------------------
+# Born semantics: complex amplitudes as split re/im planes
+# ---------------------------------------------------------------------------
+
+def _born_kernel(ere_ref, eim_ref, gre_ref, gim_ref, lam_ref, u_ref,
+                 ore_ref, oim_ref, samples_ref, dlog_ref,
+                 sre_ref, sim_ref, acc_re_ref, acc_im_ref, probs_ref,
+                 *, n_r: int, n_l: int, br: int, d: int,
+                 scaling: str, out_dtype):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    acc_dtype = acc_re_ref.dtype
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_re_ref[...] = jnp.zeros_like(acc_re_ref)
+        acc_im_ref[...] = jnp.zeros_like(acc_im_ref)
+
+    ere, eim = ere_ref[...], eim_ref[...]           # (BN, BL)
+    gre, gim = gre_ref[...], gim_ref[...]           # (BL, BR, d)
+    bl = gre.shape[0]
+
+    def mm(a, b):
+        return jax.lax.dot_general(
+            a, b.reshape(bl, br * d),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        ).reshape(a.shape[0], br, d)
+
+    # (ere + i·eim)(gre + i·gim): four real GEMMs per tile
+    acc_re_ref[...] += mm(ere, gre) - mm(eim, gim)
+    acc_im_ref[...] += mm(ere, gim) + mm(eim, gre)
+
+    @pl.when(k == n_l - 1)
+    def _measured():
+        lam = lam_ref[...].astype(acc_dtype)         # (BR,)
+        # the slab holds temp·λ: it IS the measurement operand *and* the
+        # born-collapsed environment (env' = temp[:, :, s]·λ), so no second
+        # λ pass is needed in the epilogue
+        sre = acc_re_ref[...] * lam[None, :, None]
+        sim = acc_im_ref[...] * lam[None, :, None]
+        sre_ref[:, pl.ds(j * br, br), :] = sre
+        sim_ref[:, pl.ds(j * br, br), :] = sim
+        contrib = jnp.sum(sre * sre + sim * sim, axis=1)   # (BN, d)
+
+        @pl.when(j == 0)
+        def _set():
+            probs_ref[...] = contrib
+
+        @pl.when(j > 0)
+        def _add():
+            probs_ref[...] += contrib
+
+    @pl.when((j == n_r - 1) & (k == n_l - 1))
+    def _epilogue():
+        samples = _draw(probs_ref[...].astype(out_dtype), u_ref[...])
+        ore = _collapse(sre_ref[...].astype(out_dtype), samples, d)
+        oim = _collapse(sim_ref[...].astype(out_dtype), samples, d)
+        factor, dlog = _rescale(ore, jnp.sqrt(ore * ore + oim * oim), scaling)
+        ore_ref[...] = ore / factor
+        oim_ref[...] = oim / factor
+        samples_ref[...] = samples.astype(jnp.int32)
+        dlog_ref[...] = dlog.astype(dlog_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "br", "bl", "scaling",
+                                             "interpret"))
+def site_step_born(env: Array, gamma: Array, lam: Array, u: Array,
+                   bn: int = 256, br: int = 256, bl: int = 256,
+                   scaling: str = "per_sample",
+                   interpret: bool = False):
+    """Fused Born site step on complex operands via split re/im planes.
+
+    env (N, χl) complex, Γ (χl, χr, d) complex, λ (χr) real, u (N,) real →
+    (env' (N, χr) complex, samples (N,) int32, dlog (N,) real).
+    """
+    n, chi_l = env.shape
+    _, chi_r, d = gamma.shape
+    if scaling not in ("per_sample", "none"):
+        raise ValueError(f"fused site step cannot do scaling={scaling!r} "
+                         "(the max crosses n-tiles); rescale outside")
+    bn, br, bl = min(bn, n), min(br, chi_r), min(bl, chi_l)
+    assert n % bn == 0 and chi_r % br == 0 and chi_l % bl == 0, \
+        (n, chi_l, chi_r, bn, br, bl)
+    grid = (n // bn, chi_r // br, chi_l // bl)
+    rdt = jnp.zeros((), dtype=env.dtype).real.dtype
+    out_dtype = jnp.float32 if rdt in (jnp.bfloat16, jnp.float16) else rdt
+    acc_dtype = _acc_dtype_for(out_dtype)
+
+    kern = functools.partial(_born_kernel, n_r=grid[1], n_l=grid[2], br=br,
+                             d=d, scaling=scaling, out_dtype=out_dtype)
+    plane_spec = pl.BlockSpec((bn, bl), lambda i, j, k: (i, k))
+    gamma_spec = pl.BlockSpec((bl, br, d), lambda i, j, k: (k, j, 0))
+    ore, oim, samples, dlog = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            plane_spec, plane_spec, gamma_spec, gamma_spec,
+            pl.BlockSpec((br,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, chi_r), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bn, chi_r), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, chi_r), out_dtype),
+            jax.ShapeDtypeStruct((n, chi_r), out_dtype),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), out_dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, chi_r, d), acc_dtype),    # temp·λ slab, re plane
+            pltpu.VMEM((bn, chi_r, d), acc_dtype),    # temp·λ slab, im plane
+            pltpu.VMEM((bn, br, d), acc_dtype),
+            pltpu.VMEM((bn, br, d), acc_dtype),
+            pltpu.VMEM((bn, d), acc_dtype),
+        ],
+        interpret=interpret,
+    )(jnp.real(env).astype(out_dtype), jnp.imag(env).astype(out_dtype),
+      jnp.real(gamma).astype(out_dtype), jnp.imag(gamma).astype(out_dtype),
+      lam.astype(out_dtype), u)
+    return (ore + 1j * oim).astype(env.dtype), samples, dlog
+
+
+# ---------------------------------------------------------------------------
+# Measure-only variant (tp-3 split-K schedule): probs_partial = env @ W
+# ---------------------------------------------------------------------------
+
+def _measure_kernel(env_ref, w_ref, probs_ref, acc_ref, *, n_l: int,
+                    out_dtype, compute_dtype):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    env = env_ref[...]                               # (BN, BL)
+    w = w_ref[...]                                   # (BL, d)
+    if compute_dtype is not None:
+        env = env.astype(compute_dtype)
+        w = w.astype(compute_dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        env, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == n_l - 1)
+    def _emit():
+        probs_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bl", "compute_dtype",
+                                             "interpret"))
+def measure_probs(env: Array, w: Array, bn: int = 256, bl: int = 256,
+                  compute_dtype=None, interpret: bool = False) -> Array:
+    """env (N, L) · W (L, d) → partial probs (N, d) — the tp-3 measure-first
+    GEMM for one bond shard (the caller psums over the TP group)."""
+    n, L = env.shape
+    d = w.shape[1]
+    bn, bl = min(bn, n), min(bl, L)
+    assert n % bn == 0 and L % bl == 0, (n, L, bn, bl)
+    grid = (n // bn, L // bl)
+    out_dtype = (jnp.float32 if env.dtype in (jnp.bfloat16, jnp.float16)
+                 else env.dtype)
+    acc_dtype = _acc_dtype_for(env.dtype)
+    kern = functools.partial(_measure_kernel, n_l=grid[1],
+                             out_dtype=out_dtype, compute_dtype=compute_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bl), lambda i, k: (i, k)),
+            pl.BlockSpec((bl, d), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bn, d), acc_dtype)],
+        interpret=interpret,
+    )(env, w)

@@ -36,6 +36,7 @@ from repro import api
 from repro.core import dynamic_bond as DB
 from repro.core import mps as M
 from repro.data.gamma_store import GammaStore
+from repro.kernels import dispatch
 from repro.runtime.elastic import WorkQueue
 
 
@@ -53,6 +54,10 @@ def main() -> None:
                     choices=["auto", "local", "multihost", "remote"],
                     help="cluster runtime: where processes live and how Γ "
                          "bytes move (auto = local on one process)")
+    ap.add_argument("--kernels", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="site-step kernel dispatch: fused Pallas pipeline, "
+                         "XLA reference, or auto (pallas on TPU)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dynamic-bond", action="store_true")
@@ -117,6 +122,7 @@ def main() -> None:
         scheme = "auto"
     config = api.SamplerConfig(
         scheme=scheme,
+        kernels=args.kernels,
         runtime=runtime,
         backend=("auto" if runtime.name == "remote"
                  else ("streamed" if args.stream else "inmem")),
@@ -141,8 +147,12 @@ def main() -> None:
     base = jax.random.key(args.seed + 1)
     t0 = time.perf_counter()
     with api.SamplingSession(source, config, mesh=mesh) as session:
-        print("plan:", session.plan(per_batch))
+        plan = session.plan(per_batch)
+        print("plan:", plan)
         print("why:", session.explain(per_batch))
+        print(f"kernel dispatch: requested={args.kernels!r} → resolved "
+              f"{plan.kernels!r} (backend={jax.default_backend()}; "
+              f"registered ops: {len(dispatch.registered_ops())})")
 
         def save_batch(b: int, out: np.ndarray) -> None:
             np.save(os.path.join(args.out, f"batch_{b:05d}.npy"),
@@ -160,6 +170,9 @@ def main() -> None:
         # where the Γ bytes moved: disk I/O lives on the store counters,
         # interconnect/dispatch bytes on the runtime's
         print("runtime counters:", runtime.io_counters())
+        # where the kernel block sizes came from (TPU: timed sweep entries;
+        # elsewhere: heuristic table — either way cached per process)
+        print("autotuner cache:", dispatch.autotune_cache_stats())
     if args.stream:
         source.close()
 
