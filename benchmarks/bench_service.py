@@ -1,0 +1,145 @@
+"""Service-layer bench: job throughput and time-to-first-block.
+
+What the async front door buys over the blocking call:
+
+* **jobs/s** — a burst of J same-cell jobs against one store coalesces
+  onto one session (one resolved plan, one streamed engine, one jit
+  cache), so per-job overhead is scheduling, not recompilation.  The
+  baseline opens a fresh session per request — the pre-service serving
+  story.
+* **time-to-first-block** — a k-batch job streams its first macro batch
+  after ~1/k of the run, while the one-shot call holds the caller for the
+  whole walk.  Gang-scheduling (batch b+1's first Γ segment fetched behind
+  batch b's tail compute) keeps the pipeline full in between.
+
+Rows (common.emit): `service_burst` / `fresh_sessions` wall time with
+jobs/s derived, `first_block` / `one_shot` with the latency ratio.  Each
+full run appends a `service` record to the BENCH trajectory
+(``benchmarks/BENCH.json``); CI smoke passes ``--json ""`` so ephemeral
+runners never mutate the tracked history.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_service.py [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+import common
+from repro import api
+from repro.core import mps as M
+from repro.data.gamma_store import GammaStore
+
+
+def _build_store(sites: int, chi: int, d: int) -> str:
+    root = tempfile.mkdtemp(prefix="fastmps_bench_service_")
+    mps = M.gbs_like_mps(jax.random.key(0), sites, chi, d,
+                         dtype=jnp.float64)
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        store.write_mps(mps)
+    return root
+
+
+def bench_job_burst(root: str, cfg: api.SamplerConfig, jobs: int, n: int
+                    ) -> tuple[float, float]:
+    """J single-batch jobs through one service (coalesced) vs J fresh
+    sessions (the pre-service per-request cost).  Returns (svc_s, fresh_s)."""
+    with api.SamplingService(workers=1) as svc:
+        # prime: the first job pays the one compilation both variants need
+        svc.submit(root, cfg, n_samples=n, key=jax.random.key(99)).result()
+        t0 = time.perf_counter()
+        handles = [svc.submit(root, cfg, n_samples=n, key=jax.random.key(j))
+                   for j in range(jobs)]
+        for h in handles:
+            h.result()
+        svc_s = time.perf_counter() - t0
+        assert svc.stats()["sessions"] == 1          # all coalesced
+
+    t0 = time.perf_counter()
+    for j in range(jobs):
+        with api.SamplingSession(root, cfg) as sess:
+            sess.sample(n, jax.random.key(j))
+    fresh_s = time.perf_counter() - t0
+    return svc_s, fresh_s
+
+
+def bench_first_block(root: str, cfg: api.SamplerConfig, n: int, k: int
+                      ) -> tuple[float, float, float]:
+    """(time to first streamed block of a k-batch job, full job wall,
+    one-shot wall for the same N)."""
+    with api.SamplingService(workers=1) as svc:
+        # warm serving state: one identical job pays every one-time cost
+        # (compile, engine build, key-fold trace) outside the timed section
+        svc.submit(root, cfg, n_samples=n, key=jax.random.key(98),
+                   macro_batches=k).result()
+        t0 = time.perf_counter()
+        h = svc.submit(root, cfg, n_samples=n, key=jax.random.key(1),
+                       macro_batches=k)
+        stream = h.stream()
+        next(stream)
+        ttfb = time.perf_counter() - t0
+        for _ in stream:
+            pass
+        full = time.perf_counter() - t0
+
+    with api.SamplingSession(root, cfg) as sess:
+        sess.sample(n, jax.random.key(98))           # same warm state
+        t0 = time.perf_counter()
+        sess.sample(n, jax.random.key(1))
+        one_shot = time.perf_counter() - t0
+    return ttfb, full, one_shot
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=common.BENCH_JSON,
+                    help='BENCH trajectory path ("" disables the append)')
+    args = ap.parse_args()
+
+    # full scale is compute-dominated (χ²·d·N·M keeps the walk on the MXU/
+    # BLAS, not on per-segment dispatch overhead) so the streamed first
+    # block genuinely lands at ~1/k of the run; smoke only checks wiring
+    sites, chi, d = (24, 8, 3) if args.smoke else (48, 48, 3)
+    n = 256 if args.smoke else 8192
+    jobs = 4 if args.smoke else 16
+    k = 4 if args.smoke else 8
+    root = _build_store(sites, chi, d)
+    cfg = api.SamplerConfig(segment_len=max(4, sites // 4))
+
+    try:
+        common.header()
+        svc_s, fresh_s = bench_job_burst(root, cfg, jobs, n)
+        common.emit("service_burst", svc_s / jobs,
+                    f"{jobs / svc_s:.2f} jobs/s")
+        common.emit("fresh_sessions", fresh_s / jobs,
+                    f"{jobs / fresh_s:.2f} jobs/s")
+        ttfb, full, one_shot = bench_first_block(root, cfg, n, k)
+        common.emit("first_block", ttfb, f"{one_shot / ttfb:.2f}x earlier")
+        common.emit("one_shot", one_shot, "")
+
+        common.append_bench_record(
+            args.json, "service",
+            {"sites": sites, "chi": chi, "d": d, "n": n, "jobs": jobs,
+             "macro_batches": k, "smoke": bool(args.smoke)},
+            jobs_per_s=jobs / svc_s,
+            fresh_jobs_per_s=jobs / fresh_s,
+            burst_speedup=fresh_s / svc_s,
+            time_to_first_block_s=ttfb,
+            job_wall_s=full,
+            one_shot_wall_s=one_shot,
+            first_block_speedup=one_shot / ttfb)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

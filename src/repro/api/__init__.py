@@ -20,6 +20,15 @@ driver, examples, or tests.  The legacy entry points
 (``core.parallel.multilevel_sample``/``dp_sample``/``baseline19_sample``
 and ``engine.stream_sample``) were removed one release after this facade
 shipped, as scheduled — every caller goes through the session.
+
+On top of the session sits the **service layer**
+(:class:`SamplingService`): sampling as asynchronous *jobs* —
+``submit(...) -> JobHandle`` with ``result``/``stream``/``status``/
+``progress``/``cancel``, priority scheduling, elastic worker lanes over
+the macro-batch :class:`~repro.runtime.elastic.WorkQueue`, plan
+coalescing, and gang-scheduled cross-batch prefetch.
+``SamplingSession.sample``/``run_queue`` are synchronous wrappers over a
+one-lane service, so the job path is the ONLY execution path.
 """
 from repro.api import remote  # noqa: F401  (registers the remote runtime)
 from repro.api.backends import (Backend, SampleRequest, available_backends,
@@ -30,12 +39,15 @@ from repro.api.runtime import (ClusterRuntime, LocalRuntime,
                                MultiHostRuntime, available_runtimes,
                                emulated_cluster, get_runtime,
                                register_runtime, resolve_runtime)
+from repro.api.service import (JobBatch, JobCancelled, JobHandle,
+                               SamplingService, batch_key)
 from repro.api.session import SamplingSession
 
 __all__ = [
-    "AUTO", "Backend", "ClusterRuntime", "LocalRuntime", "MultiHostRuntime",
-    "RemoteRuntime", "SampleRequest", "SamplerConfig", "SamplingSession",
-    "SessionPlan", "available_backends", "available_runtimes", "get_backend",
-    "get_runtime", "emulated_cluster", "register_backend", "register_runtime",
-    "resolve_plan", "resolve_runtime",
+    "AUTO", "Backend", "ClusterRuntime", "JobBatch", "JobCancelled",
+    "JobHandle", "LocalRuntime", "MultiHostRuntime", "RemoteRuntime",
+    "SampleRequest", "SamplerConfig", "SamplingService", "SamplingSession",
+    "SessionPlan", "available_backends", "available_runtimes", "batch_key",
+    "get_backend", "get_runtime", "emulated_cluster", "register_backend",
+    "register_runtime", "resolve_plan", "resolve_runtime",
 ]

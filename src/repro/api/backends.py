@@ -95,6 +95,15 @@ class SampleRequest:
     checkpoint_dir: Optional[str] = None
     stop_after_segments: Optional[int] = None
     stats: dict = dataclasses.field(default_factory=dict)
+    # service-layer extensions: the job-batch identity this request executes
+    # (``repro.api.service.JobBatch`` — the remote data plane dispatches it
+    # as the payload unit), whether the streamed engine should gang-schedule
+    # (prefetch the next batch's first segment behind this batch's tail
+    # compute), and the session's per-plan engine cache (one compilation and
+    # one prefetch pool across all batches of a coalesced plan)
+    job: object = None
+    pipeline: bool = False
+    engines: Optional[dict] = None
 
 
 class Backend:
@@ -107,23 +116,37 @@ class Backend:
 
 def _warm_kernel_autotuner(plan: SessionPlan, n_samples: int, chi: int,
                            d: int, dtype) -> None:
-    """Seed the kernel autotuner for every site-step shape the walk will
+    """Seed the kernel autotuner for every dispatched shape the walk will
     trace.  The timed TPU sweep cannot run inside a jit trace, so the data
     planes call this *before* compiling; off-TPU it just records the
-    heuristic block table (no compilation, microseconds)."""
+    heuristic block table (no compilation, microseconds).
+
+    seq/dp walks hit the fused ``site_step`` at the (per-chunk, χ-bucket)
+    shapes; the TP schedules instead hit the bond-sharded
+    ``contract_measure``/``measure``/``collapse`` stages, whose χ/p₂
+    operand shapes are warmed per χ bucket too (``warm_tp_stages``)."""
     if plan.kernels != "pallas":
         return
-    from repro.kernels.site_impls import warm_site_step
+    from repro.kernels.site_impls import warm_site_step, warm_tp_stages
 
     p1 = plan.p1 if plan.scheme != "seq" else 1
     n_chunk = plan.micro_batch or (n_samples // max(1, p1))
     chis = ({chi_s for _, _, chi_s in plan.stages}
             if plan.stages is not None else {chi})
     for chi_s in sorted(chis):
-        warm_site_step(n_chunk, chi_s, d, dtype,
-                       semantics=plan.semantics,
-                       scaling=plan.sampler_config.scaling,
-                       compute_dtype=plan.sampler_config.compute_dtype)
+        if plan.scheme in ("tp_single", "tp_double"):
+            if plan.semantics != "linear":
+                continue            # born TP cells stay XLA by design
+            warm_tp_stages(
+                n_chunk, chi_s, d, dtype, p2=plan.p2, scheme=plan.scheme,
+                measure_first=(plan.pconfig is not None
+                               and plan.pconfig.measure_first),
+                compute_dtype=plan.sampler_config.compute_dtype)
+        else:
+            warm_site_step(n_chunk, chi_s, d, dtype,
+                           semantics=plan.semantics,
+                           scaling=plan.sampler_config.scaling,
+                           compute_dtype=plan.sampler_config.compute_dtype)
 
 
 @register_backend("inmem")
@@ -199,25 +222,56 @@ class StreamedBackend(Backend):
         _warm_kernel_autotuner(plan, req.n_samples, shape[0], shape[2],
                                store.compute_dtype)
         engine_scheme = "inmem" if plan.scheme == "seq" else plan.scheme
-        eng = StreamingEngine(
-            store, semantics=plan.semantics, config=plan.sampler_config,
-            plan=StreamPlan(segment_len=plan.segment_len,
-                            scheme=engine_scheme,
-                            micro_batch=plan.micro_batch,
-                            checkpoint_every=plan.checkpoint_every),
-            mesh=req.mesh if engine_scheme != "inmem" else None,
-            pconfig=plan.pconfig,
-            checkpoint_dir=req.checkpoint_dir,
-            chi_profile=plan.chi_profile,
-            runtime=req.runtime)
-        try:
-            out = eng.sample(req.n_samples, req.key, resume=req.resume,
-                             stop_after_segments=req.stop_after_segments)
-            req.stats.update(eng.stats)
-            return out
-        finally:
-            # the store may be session-owned and serve further calls
-            eng.close(close_store=False)
+
+        def build() -> StreamingEngine:
+            return StreamingEngine(
+                store, semantics=plan.semantics, config=plan.sampler_config,
+                plan=StreamPlan(segment_len=plan.segment_len,
+                                scheme=engine_scheme,
+                                micro_batch=plan.micro_batch,
+                                checkpoint_every=plan.checkpoint_every),
+                mesh=req.mesh if engine_scheme != "inmem" else None,
+                pconfig=plan.pconfig,
+                chi_profile=plan.chi_profile,
+                runtime=req.runtime)
+
+        if req.engines is None:         # direct Backend use: walk and release
+            eng = build()
+            try:
+                out = eng.sample(req.n_samples, req.key, resume=req.resume,
+                                 stop_after_segments=req.stop_after_segments,
+                                 checkpoint_dir=req.checkpoint_dir)
+                req.stats.update(eng.stats)
+                return out
+            finally:
+                # the store may be session-owned and serve further calls
+                eng.close(close_store=False)
+
+        # session path: ONE engine per engine-identity, living as long as
+        # the session — repeated macro batches reuse its jit cache and
+        # prefetch pool (which is what lets the service gang-schedule batch
+        # b+1's first-segment fetch/broadcast behind batch b's tail
+        # compute).  The key is the engine's CONSTRUCTOR identity, not the
+        # whole plan: n_samples must not fragment the cache, or jobs that
+        # differ only in batch size would each pin an engine (and its pool
+        # thread) until session close
+        eng_key = (engine_scheme, plan.semantics, plan.segment_len,
+                   plan.micro_batch, plan.chi_profile, plan.checkpoint_every,
+                   plan.sampler_config, plan.pconfig)
+        eng = req.engines.get(eng_key)
+        if eng is None:
+            new = build()
+            eng = req.engines.setdefault(eng_key, new)  # lose the build race
+            if eng is not new:
+                new.close(close_store=False)
+        # stats snapshot under the engine's walk lock: a concurrent lane's
+        # next walk resets eng.stats in place
+        out, stats = eng.sample_with_stats(
+            req.n_samples, req.key, resume=req.resume,
+            stop_after_segments=req.stop_after_segments,
+            checkpoint_dir=req.checkpoint_dir, pipeline=req.pipeline)
+        req.stats.update(stats)
+        return out
 
 
 @register_backend("remote")
@@ -246,9 +300,15 @@ class RemoteBackend(Backend):
                              "checkpoint_dir (see resolve_plan) — remote "
                              "fault tolerance is per-macro-batch")
         # the store is the hand-off medium: an MPS source is materialized
-        # once (identity dtype) and only its *location* rides the payload
+        # once (identity dtype) and only its *location* rides the payload.
+        # The dispatch unit is the JOB BATCH: req.key is the job's base key
+        # and req.job its (job_id, batch_id, n_batches) identity — the
+        # worker folds the batch key itself (service.batch_key), so a
+        # service can fan a job's batches over many workers and every batch
+        # stays bit-identical to its local counterpart.
         store = req.store()
-        payload = build_payload(req.config, store, req.n_samples, req.key)
+        payload = build_payload(req.config, store, req.n_samples, req.key,
+                                job=req.job)
         # counters are monotonic on the runtime — stats report this call's
         # delta, matching the streamed engine's per-walk scoping
         before = dict(req.runtime.io_counters())

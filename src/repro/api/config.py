@@ -114,6 +114,14 @@ class SessionPlan:
     sampler_config: CoreSamplerConfig  # the kernel-level config
     pconfig: Optional[ParallelConfig]  # dp/tp placement, None for seq
 
+    @property
+    def cell(self) -> tuple[str, str, str, str, str]:
+        """The plan's config-cell identity (backend × runtime × scheme ×
+        semantics × kernels) — what the service layer coalesces jobs on:
+        two plans in one cell share compilation given equal shapes."""
+        return (self.backend, self.runtime, self.scheme, self.semantics,
+                self.kernels)
+
 
 def _mesh_sizes(mesh) -> tuple[int, int]:
     if mesh is None:

@@ -80,9 +80,17 @@ def config_from_dict(d: dict):
     return SamplerConfig(**d)
 
 
-def build_payload(config, store, n_samples: int, key) -> dict:
-    """The unit of dispatch: everything a worker needs to reproduce one
-    ``session.sample(n, key)`` bit-exactly, as plain JSON.
+def build_payload(config, store, n_samples: int, key, job=None) -> dict:
+    """The unit of dispatch: one JOB BATCH, as plain JSON.
+
+    Everything a worker needs to reproduce one macro batch bit-exactly:
+    the session config, the store location, the batch size, the *job base
+    key*, and (``job`` — a ``service.JobBatch``) the batch's identity
+    within its job.  The worker derives the batch key itself via
+    ``service.batch_key(key, batch_id, n_batches)`` — identical arithmetic
+    to the local path, so a service may scatter one job's batches over
+    many workers and reassemble a bit-identical result.  ``job=None``
+    degrades to the v1 whole-run payload (a 1-batch job in disguise).
 
     The inner config re-resolves on the worker: ``backend=AUTO`` picks the
     streamed data plane from the store path, ``runtime="local"`` because
@@ -95,8 +103,8 @@ def build_payload(config, store, n_samples: int, key) -> dict:
     from repro.api.runtime import AUTO
     inner = dataclasses.replace(config, backend=AUTO, runtime="local",
                                 store_root=None, checkpoint_dir=None)
-    return {
-        "version": 1,
+    out = {
+        "version": 2,
         "config": config_to_dict(inner),
         "store_root": str(store.root),
         "storage_dtype": np.dtype(store.storage_dtype).name,
@@ -105,25 +113,39 @@ def build_payload(config, store, n_samples: int, key) -> dict:
         "key_data": np.asarray(jax.random.key_data(key)).tolist(),
         "enable_x64": bool(jax.config.jax_enable_x64),
     }
+    if job is not None:
+        out["job"] = {"job_id": int(job.job_id),
+                      "batch_id": int(job.batch_id),
+                      "n_batches": int(job.n_batches)}
+    return out
 
 
 def execute_payload(payload: dict) -> np.ndarray:
     """Run one payload to completion — the worker half of the dispatch.
 
     Called in-process by ``LocalRuntime.submit`` and as ``__main__`` by
-    :class:`RemoteRuntime`'s spawned interpreter."""
+    :class:`RemoteRuntime`'s spawned interpreter.  Accepts v1 (whole-run)
+    and v2 (job-batch) payloads; a v2 payload's ``job`` entry selects the
+    batch key exactly as the local scheduler would."""
     import jax
 
+    version = int(payload.get("version", 1))
+    if version not in (1, 2):
+        raise ValueError(f"unknown payload version {version}")
     if payload.get("enable_x64"):
         jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
 
+    from repro.api.service import batch_key
     from repro.api.session import SamplingSession
     from repro.data.gamma_store import GammaStore
 
     config = config_from_dict(payload["config"])
     key = jax.random.wrap_key_data(
         jnp.asarray(payload["key_data"], dtype=jnp.uint32))
+    job = payload.get("job")
+    if job is not None:
+        key = batch_key(key, int(job["batch_id"]), int(job["n_batches"]))
     with GammaStore(payload["store_root"],
                     storage_dtype=_dtype_from_name(payload["storage_dtype"]),
                     compute_dtype=_dtype_from_name(payload["compute_dtype"])

@@ -211,10 +211,12 @@ class LocalRuntime(ClusterRuntime):
 
     def __init__(self):
         self._dispatch_bytes = 0
+        self._dispatches = 0
 
     def io_counters(self) -> dict:
         out = super().io_counters()
-        out["dispatch_bytes"] = self._dispatch_bytes
+        out.update(dispatch_bytes=self._dispatch_bytes,
+                   dispatches=self._dispatches)
         return out
 
     def submit(self, payload: dict) -> np.ndarray:
@@ -222,6 +224,7 @@ class LocalRuntime(ClusterRuntime):
 
         from repro.api.remote import execute_payload
         self._dispatch_bytes += len(json.dumps(payload).encode())
+        self._dispatches += 1
         return execute_payload(payload)
 
 

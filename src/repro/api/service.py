@@ -1,0 +1,557 @@
+"""`SamplingService` — the async job front door over `SamplingSession`.
+
+The paper's central property — every macro batch is an independent,
+restart-exact unit of work (batch = f(seed, id)) — is exactly what a
+serving system needs, so this module turns sampling into *jobs*:
+
+    with api.SamplingService(workers=2) as svc:
+        h = svc.submit(store_path, cfg, n_samples=4096,
+                       key=jax.random.key(0), macro_batches=4)
+        for batch_id, block in h.stream():      # blocks as they complete
+            persist(batch_id, block)
+        # or: samples = h.result()              # blocking concatenation
+
+A job is decomposed into its N₁ macro batches and fed through an elastic
+:class:`repro.runtime.elastic.WorkQueue`; the service's **workers** are
+runtime submit lanes (threads driving the session's data plane — or, for
+``backend="remote"``, dispatching one serialized job batch each through
+``ClusterRuntime.submit``).  The queue's guarantees hold verbatim:
+
+* batches rebalance on worker loss (:meth:`SamplingService.remove_worker`
+  requeues the victim's in-flight batches; a late result from the removed
+  worker is discarded by the queue's ownership check — the recomputation
+  is bit-identical anyway),
+* completed work is never recomputed,
+* results are owner- and order-independent.
+
+**Scheduling.**  Jobs are served in priority order (higher
+``priority`` first, FIFO within a priority); requeued batches are
+re-offered before fresh ones (``WorkQueue`` fairness).  Same-(source,
+config)-cell jobs **coalesce onto one session** — one resolved plan, one
+jit cache, one streamed engine — so a burst of small requests against one
+store never recompiles.  Multi-batch streamed jobs run **gang-scheduled**:
+the engine prefetches macro batch b+1's first Γ segment (local read or
+§3.1 broadcast) while batch b's tail still computes.
+
+**Key schedule** (:func:`batch_key`): a single-batch job draws with the
+job key itself — so ``SamplingSession.sample`` (reimplemented as a
+one-job synchronous wrapper over this service) stays bit-identical to
+every pre-service release; a k-batch job draws batch b with
+``fold_in(key, b)`` — the ``run_queue`` schedule, so streamed blocks are
+bit-identical per seed to one-shot ``session.sample`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import threading
+from typing import Any, Iterable, Iterator, Optional, Union
+
+import numpy as np
+
+from repro.runtime.elastic import WorkQueue
+
+# job lifecycle states (JobHandle.status())
+PENDING, RUNNING, DONE, FAILED, CANCELLED = (
+    "pending", "running", "done", "failed", "cancelled")
+
+
+class JobCancelled(RuntimeError):
+    """Raised by ``result()``/``stream()`` of a cancelled job."""
+
+
+def batch_key(key, batch_id: int, n_batches: int):
+    """The job → macro-batch PRNG schedule (one definition, used by the
+    local execution path and by the remote worker decoding a job payload).
+
+    A 1-batch job IS the one-shot call — its key passes through untouched,
+    which is what keeps ``session.sample(n, key)`` bit-identical across
+    the service redesign.  A k-batch job derives batch b's key as
+    ``fold_in(key, b)``, the established macro-batch schedule
+    (``run_queue``, ``launch/sample.py``), so batch = f(seed, id)."""
+    import jax
+
+    if n_batches == 1:
+        return key
+    return jax.random.fold_in(key, batch_id)
+
+
+def batch_checkpoint_dir(root: str, batch_id: int) -> str:
+    """The per-batch checkpoint subdirectory convention — ONE definition
+    shared by the service scheduler and ``session.run_queue`` so their
+    mid-chain restarts interoperate."""
+    return os.path.join(root, f"batch_{batch_id:05d}")
+
+
+def has_chain_checkpoint(ck_dir: str) -> bool:
+    """Whether a per-batch checkpoint dir holds a resumable mid-chain
+    state (the engine's ``site_*`` files)."""
+    return any(f.startswith("site_") for f in os.listdir(ck_dir))
+
+
+@dataclasses.dataclass(frozen=True)
+class JobBatch:
+    """Identity of one macro batch of one job — the unit a worker executes
+    and (for ``backend="remote"``) the unit ``ClusterRuntime.submit``
+    dispatches (see ``repro.api.remote.build_payload``)."""
+    job_id: int
+    batch_id: int
+    n_batches: int
+
+
+@dataclasses.dataclass
+class _Job:
+    job_id: int
+    session: Any                       # the (possibly coalesced) SamplingSession
+    n_samples: int                     # total over all batches
+    per_batch: int
+    n_batches: int
+    key: Any
+    priority: int
+    queue: WorkQueue
+    skip: frozenset
+    state: str = PENDING
+    error: Optional[BaseException] = None
+    blocks: dict = dataclasses.field(default_factory=dict)
+    batch_stats: dict = dataclasses.field(default_factory=dict)
+    # single-batch session.sample passthroughs
+    resume: bool = False
+    checkpoint_dir: Optional[str] = None
+    stop_after_segments: Optional[int] = None
+    # multi-batch fault tolerance: per-batch checkpoint subdirs + auto-resume
+    checkpoint_root: Optional[str] = None
+
+    @property
+    def expected(self) -> list[int]:
+        return [b for b in range(self.n_batches) if b not in self.skip]
+
+
+class JobHandle:
+    """The caller's view of one submitted job."""
+
+    def __init__(self, service: "SamplingService", job: _Job):
+        self._service = service
+        self._job = job
+
+    @property
+    def job_id(self) -> int:
+        return self._job.job_id
+
+    def status(self) -> str:
+        """One of pending | running | done | failed | cancelled."""
+        with self._service._cond:
+            return self._job.state
+
+    @property
+    def progress(self) -> dict:
+        """Snapshot: batch counts + the underlying ``WorkQueue.stats()``."""
+        with self._service._cond:
+            out = self._job.queue.stats()
+            out.update(state=self._job.state,
+                       skipped=len(self._job.skip),
+                       blocks=len(self._job.blocks))
+            return out
+
+    def cancel(self) -> bool:
+        """Stop scheduling this job's remaining batches.  Returns whether
+        the cancel landed (a finished/failed job reports False).  An
+        in-flight batch is not interrupted; its result is discarded."""
+        svc = self._service
+        with svc._cond:
+            if self._job.state in (DONE, FAILED, CANCELLED):
+                return self._job.state == CANCELLED
+            self._job.state = CANCELLED
+            svc._cond.notify_all()
+            return True
+
+    def stream(self, timeout: Optional[float] = None
+               ) -> Iterator[tuple[int, np.ndarray]]:
+        """Yield ``(batch_id, samples)`` per macro batch, in batch order, as
+        batches complete.  The concatenation of the yielded blocks is
+        bit-identical per seed to the one-shot path (see :func:`batch_key`).
+        ``timeout`` is a per-batch deadline (a busy service notifies the
+        condition constantly; the clock must not re-arm on every wake).
+        Raises the job's error / :class:`JobCancelled` mid-iteration."""
+        import time as _time
+
+        svc = self._service
+        job = self._job
+        for b in job.expected:
+            deadline = (None if timeout is None
+                        else _time.monotonic() + timeout)
+            with svc._cond:
+                while b not in job.blocks:
+                    if job.state == FAILED:
+                        raise job.error
+                    if job.state == CANCELLED:
+                        raise JobCancelled(
+                            f"job {job.job_id} cancelled after "
+                            f"{len(job.blocks)}/{len(job.expected)} batches")
+                    remaining = (None if deadline is None
+                                 else deadline - _time.monotonic())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(
+                            f"job {job.job_id}: batch {b} not done within "
+                            f"{timeout}s")
+                    svc._cond.wait(timeout=remaining)
+                block = job.blocks[b]
+            yield b, block
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block until the job finishes; returns the (N, M) concatenation
+        of its macro-batch blocks in batch order."""
+        blocks = [blk for _, blk in self.stream(timeout=timeout)]
+        if not blocks:
+            raise ValueError(f"job {self.job_id} has no batches to run "
+                             f"(all {len(self._job.skip)} skipped)")
+        return np.concatenate(blocks, axis=0)
+
+    @property
+    def stats(self) -> dict:
+        """Per-batch engine/runtime statistics (batch_id → stats dict)."""
+        with self._service._cond:
+            return {b: dict(s) for b, s in self._job.batch_stats.items()}
+
+
+class SamplingService:
+    """Job scheduler over the session registries; see module docstring."""
+
+    def __init__(self, *, workers: int = 1):
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._jobs: dict[int, _Job] = {}
+        self._order: list[int] = []            # job ids, (-priority, id) order
+        self._sessions: dict = {}              # coalescing cache (owned)
+        self._threads: dict[str, threading.Thread] = {}
+        self._removed: set[str] = set()
+        self._closing = False
+        self._seq = itertools.count()
+        self._worker_seq = itertools.count()
+        self._coalesced = 0
+        # test/ops hook: called as hook(job, batch_id, worker) right after a
+        # worker claims a batch, before it executes — failure-injection
+        # (tests), progress taps, tracing
+        self.batch_hook = None
+        for _ in range(workers):
+            self.add_worker()
+
+    # -- membership (elastic worker lanes) -----------------------------------
+    def add_worker(self, name: Optional[str] = None) -> str:
+        """Add one submit lane (scale-up is claim eligibility, nothing else)."""
+        with self._cond:
+            if self._closing:
+                raise RuntimeError("service is closed")
+            if len(self.workers()) >= 1:
+                # the same invariant submit() enforces, from the other side:
+                # a multi-process runtime's broadcast schedule must stay
+                # deterministic, so its jobs own the single lane exclusively
+                for jid in self._order:
+                    job = self._jobs[jid]
+                    if (job.state in (PENDING, RUNNING)
+                            and job.session.runtime.process_count > 1):
+                        raise ValueError(
+                            f"job {job.job_id} runs on the multi-process "
+                            f"runtime {job.session.runtime.name!r} — scale-"
+                            f"up would interleave its broadcast collectives "
+                            f"across lanes; wait for it to finish")
+            name = name or f"lane-{next(self._worker_seq)}"
+            old = self._threads.get(name)
+            if old is not None:
+                # a removed-and-exited lane may be revived under its stable
+                # ops name; a live one (even mid-drain) may not — two
+                # threads must never share a lane identity
+                if name in self._removed and not old.is_alive():
+                    del self._threads[name]
+                    self._removed.discard(name)
+                else:
+                    raise ValueError(f"worker {name!r} already exists")
+            t = threading.Thread(target=self._worker_loop, args=(name,),
+                                 name=f"sampling-service-{name}", daemon=True)
+            self._threads[name] = t
+            t.start()
+            return name
+
+    def remove_worker(self, name: str) -> None:
+        """Drop a lane; its claimed batches requeue immediately (the queue
+        re-offers them before fresh work) and any result it still produces
+        is discarded by the ownership check — elasticity is exact because
+        batches are idempotent."""
+        with self._cond:
+            self._removed.add(name)
+            for jid in self._order:
+                job = self._jobs[jid]
+                if job.state in (PENDING, RUNNING):
+                    job.queue.remove_worker(name)
+            self._cond.notify_all()
+
+    def workers(self) -> list[str]:
+        with self._cond:
+            return [n for n in self._threads if n not in self._removed]
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, source, config=None, *, n_samples: int, key,
+               mesh=None, macro_batches: int = 1, priority: int = 0,
+               skip_batches: Iterable[int] = (),
+               resume: bool = False, checkpoint_dir: Optional[str] = None,
+               stop_after_segments: Optional[int] = None,
+               checkpoint_root: Optional[str] = None) -> JobHandle:
+        """Queue one sampling job; returns immediately with a handle.
+
+        ``source`` is anything a :class:`SamplingSession` accepts (MPS,
+        GammaStore, store path) — jobs with an equal (source, config, mesh)
+        triple coalesce onto one service-owned session, i.e. one resolved
+        plan/jit cache — or an existing session (``config``/``mesh`` must
+        then be None; the caller keeps ownership).
+
+        ``n_samples`` is the job total; it divides over ``macro_batches``
+        (paper N₁), each a restart-exact work item keyed by
+        ``batch_key(key, b, macro_batches)``.  ``skip_batches`` marks batch
+        ids already done elsewhere (idempotent restart: the driver skips
+        batches whose output files exist).  ``priority``: higher runs
+        first.  ``resume``/``checkpoint_dir``/``stop_after_segments`` are
+        the single-batch session passthroughs; ``checkpoint_root`` gives a
+        multi-batch streamed job per-batch checkpoint subdirs with
+        automatic mid-chain resume (the ``run_queue`` contract).
+        """
+        from repro.api.session import SamplingSession
+
+        if macro_batches < 1:
+            raise ValueError(f"macro_batches must be ≥ 1, got {macro_batches}")
+        if n_samples % macro_batches:
+            raise ValueError(f"n_samples={n_samples} must divide over "
+                             f"{macro_batches} macro batches")
+        skip = frozenset(int(b) for b in skip_batches)
+        if any(b < 0 or b >= macro_batches for b in skip):
+            raise ValueError(f"skip_batches {sorted(skip)} outside "
+                             f"[0, {macro_batches})")
+        if macro_batches > 1 and (resume or checkpoint_dir
+                                  or stop_after_segments is not None):
+            raise ValueError(
+                "resume/checkpoint_dir/stop_after_segments address ONE "
+                "chain walk — for a multi-batch job use checkpoint_root "
+                "(per-batch subdirs, automatic resume)")
+        if checkpoint_root and (resume or checkpoint_dir):
+            raise ValueError(
+                "checkpoint_root manages per-batch checkpoint dirs and "
+                "resume automatically — don't combine it with "
+                "resume/checkpoint_dir")
+
+        if isinstance(source, SamplingSession):
+            if config is not None or mesh is not None:
+                raise ValueError("submitting an existing session: config/"
+                                 "mesh are the session's — pass None")
+            session = source
+        else:
+            session = self._coalesce_session(source, config, mesh)
+        per_batch = n_samples // macro_batches
+        # resolve (and validate) the plan up front: config errors surface at
+        # submit time on the caller's thread, never as a failed job
+        session.plan(per_batch)
+        if session.runtime.process_count > 1 and len(self.workers()) > 1:
+            # every process of a multi-process runtime must issue its
+            # broadcast collectives in the same order; one lane walking
+            # jobs in the deterministic (-priority, id) order guarantees
+            # that — concurrent lanes would interleave per thread timing
+            # and desync (or deadlock) the cluster
+            raise ValueError(
+                f"runtime {session.runtime.name!r} spans "
+                f"{session.runtime.process_count} processes — drive it "
+                f"from a single-lane service (workers=1), not "
+                f"{len(self.workers())} lanes, so the broadcast schedule "
+                f"stays deterministic across processes")
+
+        with self._cond:
+            if self._closing:
+                raise RuntimeError("service is closed")
+            job = _Job(job_id=next(self._seq), session=session,
+                       n_samples=n_samples, per_batch=per_batch,
+                       n_batches=macro_batches, key=key, priority=priority,
+                       queue=WorkQueue(macro_batches), skip=skip,
+                       resume=resume, checkpoint_dir=checkpoint_dir,
+                       stop_after_segments=stop_after_segments,
+                       checkpoint_root=checkpoint_root)
+            for b in skip:
+                job.queue.complete(b)
+            if job.queue.finished:
+                job.state = DONE
+            self._jobs[job.job_id] = job
+            self._order.append(job.job_id)
+            self._order.sort(key=lambda j: (-self._jobs[j].priority, j))
+            self._cond.notify_all()
+        return JobHandle(self, job)
+
+    def _coalesce_session(self, source, config, mesh):
+        """One session (→ one compiled plan / streamed engine) per
+        (source, config, mesh) cell, owned by the service."""
+        from repro.api.session import SamplingSession
+        from repro.data.gamma_store import GammaStore
+
+        if isinstance(source, GammaStore):
+            # dtypes are per-open constructor state, not recoverable from
+            # the root — two handles on one root with different precision
+            # must NOT share a session (bit-identity per handle)
+            token = ("store", os.path.realpath(str(source.root)),
+                     np.dtype(source.storage_dtype).name,
+                     np.dtype(source.compute_dtype).name)
+        elif isinstance(source, (str, os.PathLike)):
+            token = ("store-path", os.path.realpath(str(source)))
+        else:
+            token = ("obj", id(source))
+        cell = (token, config, mesh)
+        with self._cond:
+            sess = self._sessions.get(cell)
+            if sess is not None:
+                self._coalesced += 1
+                return sess
+        # build outside the lock (store probing does I/O)
+        sess = SamplingSession(source, config, mesh=mesh)
+        with self._cond:
+            race = self._sessions.get(cell)
+            if race is not None:
+                self._coalesced += 1
+                sess.close()
+                return race
+            self._sessions[cell] = sess
+            return sess
+
+    # -- scheduling ----------------------------------------------------------
+    def _next_task(self, worker: str) -> Optional[tuple[_Job, int]]:
+        """Highest-priority claimable batch (requeued before fresh within a
+        job, courtesy of the WorkQueue).  Caller holds the lock."""
+        for jid in self._order:
+            job = self._jobs[jid]
+            if job.state not in (PENDING, RUNNING):
+                continue
+            b = job.queue.claim(worker)
+            if b is not None:
+                job.state = RUNNING
+                return job, b
+        return None
+
+    def _worker_loop(self, name: str) -> None:
+        while True:
+            with self._cond:
+                task = None
+                while task is None:
+                    if self._closing or name in self._removed:
+                        return
+                    task = self._next_task(name)
+                    if task is None:
+                        self._cond.wait()
+            self._run_batch(*task, worker=name)
+
+    def _batch_checkpoint(self, job: _Job, b: int) -> tuple[Optional[str], bool]:
+        """Per-batch checkpoint dir + whether to resume (run_queue contract:
+        durable batch output supersedes the chain checkpoint).
+        ``checkpoint_root`` applies to 1-batch jobs too, so the driver's
+        ``--service --macro-batches 1`` keeps the synchronous path's
+        mid-chain fault tolerance."""
+        if job.checkpoint_root:
+            if job.session.plan(job.per_batch).backend != "streamed":
+                return None, False
+            ck = batch_checkpoint_dir(job.checkpoint_root, b)
+            os.makedirs(ck, exist_ok=True)
+            return ck, has_chain_checkpoint(ck)
+        return job.checkpoint_dir, job.resume
+
+    def _run_batch(self, job: _Job, b: int, worker: str) -> None:
+        hook = self.batch_hook
+        if hook is not None:
+            hook(job, b, worker)       # may remove this worker / cancel
+        with self._cond:
+            if job.state != RUNNING or worker in self._removed:
+                return                 # cancelled/failed meanwhile, or killed
+            # gang-scheduling: keep the streamed engine's prefetch pool warm
+            # across the batch boundary only while SOMEONE still has a later
+            # walk to run — the job's last batch must not pin a speculative
+            # segment (pending includes this batch; a concurrent finisher
+            # only costs one extra prefetch, the pre-fix behaviour)
+            pipeline = job.queue.stats()["pending"] > 1
+        ck = None
+        try:
+            ck, resume = self._batch_checkpoint(job, b)
+            out, stats = job.session._execute_batch(
+                job.per_batch, job.key,
+                job=JobBatch(job.job_id, b, job.n_batches),
+                resume=resume, checkpoint_dir=ck,
+                stop_after_segments=job.stop_after_segments,
+                pipeline=pipeline)
+        except BaseException as e:     # noqa: BLE001 — reported via the job
+            with self._cond:
+                if job.queue.records[b].owner == worker:
+                    job.state = FAILED
+                    job.error = e
+                self._cond.notify_all()
+            return
+        with self._cond:
+            if not job.queue.complete(b, worker=worker):
+                return                 # ownership lost mid-compute: discard —
+                                       # the requeued batch recomputes the
+                                       # exact same block (batch = f(seed, id))
+            if job.state == CANCELLED:
+                return
+            job.blocks[b] = np.asarray(out)
+            job.batch_stats[b] = stats
+            if job.queue.finished and job.state == RUNNING:
+                job.state = DONE
+            self._cond.notify_all()
+        if ck is not None and job.checkpoint_root:
+            import shutil
+            shutil.rmtree(ck, ignore_errors=True)   # batch output is durable
+
+    # -- introspection -------------------------------------------------------
+    def stats(self) -> dict:
+        """Service-wide snapshot: job states, coalescing, lanes."""
+        with self._cond:
+            states: dict[str, int] = {}
+            for job in self._jobs.values():
+                states[job.state] = states.get(job.state, 0) + 1
+            return {"jobs": states, "sessions": len(self._sessions),
+                    "coalesced_jobs": self._coalesced,
+                    "workers": len(self.workers())}
+
+    def purge(self) -> int:
+        """Drop finished (done/failed/cancelled) jobs from the service
+        table; returns how many were dropped.  A long-lived serving process
+        calls this periodically so consumed jobs' sample blocks don't
+        accumulate for the service's lifetime.  Handles the caller still
+        holds keep answering (each handle owns its job record) — the blocks'
+        memory is reclaimed once those handles go away.  The service never
+        purges on its own: dropping results the caller hasn't consumed is
+        the caller's decision."""
+        with self._cond:
+            dead = [j for j, job in self._jobs.items()
+                    if job.state in (DONE, FAILED, CANCELLED)]
+            for j in dead:
+                del self._jobs[j]
+            self._order = [j for j in self._order if j in self._jobs]
+            return len(dead)
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Stop the lanes (running batches finish; pending jobs that never
+        completed report cancelled) and close service-owned sessions."""
+        with self._cond:
+            if self._closing:
+                return
+            self._closing = True
+            for job in self._jobs.values():
+                if job.state in (PENDING, RUNNING):
+                    job.state = CANCELLED
+            self._cond.notify_all()
+        for t in self._threads.values():
+            t.join(timeout=300)
+        for sess in self._sessions.values():
+            sess.close()
+        self._sessions.clear()
+
+    def __enter__(self) -> "SamplingService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = ["CANCELLED", "DONE", "FAILED", "JobBatch", "JobCancelled",
+           "JobHandle", "PENDING", "RUNNING", "SamplingService", "batch_key"]

@@ -159,6 +159,12 @@ class StreamingEngine:
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._live_lock = threading.Lock()
         self._live = 0
+        # one walk at a time: the engine is cached per plan by the session
+        # and service lanes may hand it consecutive macro batches
+        self._walk_lock = threading.Lock()
+        # gang-scheduling slot: ((start, stop, χ), Future) for the NEXT
+        # walk's first segment, fetched behind this walk's tail compute
+        self._warm: Optional[tuple] = None
         # store I/O is counted relative to engine creation so a shared
         # (session-owned) store can serve many engines without the hidden-
         # I/O ratio mixing scopes
@@ -267,34 +273,106 @@ class StreamingEngine:
                                  self.pconfig, self.config,
                                  log_scale=log_scale)
 
-    def _load_sample_blocks(self, up_to_site: int) -> list[np.ndarray]:
+    def _load_sample_blocks(self, up_to_site: int,
+                            ckpt_dir: str) -> list[np.ndarray]:
         """Read back the per-segment sample blocks covering [0, up_to_site)."""
         blocks, cursor = [], 0
-        names = sorted(f for f in os.listdir(self.checkpoint_dir)
+        names = sorted(f for f in os.listdir(ckpt_dir)
                        if f.startswith("samples_") and f.endswith(".npy"))
         for fn in names:
             offset = int(fn[len("samples_"):-len(".npy")])
             if offset >= up_to_site:
                 break
             assert offset == cursor, (offset, cursor)   # contiguous prefix
-            blk = np.load(os.path.join(self.checkpoint_dir, fn))
+            blk = np.load(os.path.join(ckpt_dir, fn))
             blocks.append(blk)
             cursor += blk.shape[0]
         assert cursor == up_to_site, (cursor, up_to_site)
         return blocks
 
+    # -- per-walk bookkeeping ------------------------------------------------
+    def _begin_walk(self) -> None:
+        """Re-anchor the I/O deltas and zero the per-walk stats: a cached
+        engine serves many macro batches, but ``stats`` always describes
+        the most recent walk (the pre-cache contract)."""
+        self._store_io0 = (self.store.io_seconds, self.store.io_bytes)
+        self._runtime_io0 = dict(self.runtime.io_counters())
+        with self._live_lock:
+            live = self._live           # a warm prefetched segment counts
+        self.stats.update(segments=0, io_wait_s=0.0, compute_s=0.0,
+                          max_live_segments=live, store_io_s=0.0,
+                          io_bytes=0, io_hidden_frac=0.0)
+        for k in self._runtime_io0:
+            self.stats[k] = 0
+
+    def _take_warm(self, seg_key) -> Optional[Future]:
+        """Claim the gang-scheduled first-segment fetch if it matches this
+        walk's opening segment; release a stale one."""
+        if self._warm is None:
+            return None
+        key, fut = self._warm
+        self._warm = None
+        if key == seg_key:
+            return fut
+        try:
+            gd, ld, _ = fut.result()    # schedule changed (e.g. resume):
+            self._release(gd, ld)       # drop the stale buffers
+        except Exception:
+            # a failed SPECULATIVE fetch must not fail a walk that never
+            # needed it (the matched case above surfaces its error when
+            # the walk consumes the future — that data was required)
+            pass
+        return None
+
     # -- driver --------------------------------------------------------------
+    _UNSET = object()
+
     def sample(self, n_samples: int, key: jax.Array, *, resume: bool = False,
-               stop_after_segments: Optional[int] = None) -> np.ndarray:
+               stop_after_segments: Optional[int] = None,
+               checkpoint_dir=_UNSET, pipeline: bool = False) -> np.ndarray:
         """Walk the whole chain; returns (N, M) int32 outcomes.
 
-        ``resume=True`` continues from the newest checkpoint in
-        ``checkpoint_dir`` (bit-identical to the uninterrupted run);
-        ``stop_after_segments`` simulates a mid-run kill for tests — the
-        engine checkpoints the boundary state and returns the partial
-        (N, sites_done) block.
+        ``resume=True`` continues from the newest checkpoint (bit-identical
+        to the uninterrupted run); ``checkpoint_dir`` overrides the
+        engine's per walk (a cached engine serves many macro batches, each
+        with its own checkpoint subdirectory); ``stop_after_segments``
+        simulates a mid-run kill for tests — the engine checkpoints the
+        boundary state and returns the partial (N, sites_done) block.
+        ``pipeline=True`` gang-schedules across walks: once this walk's
+        last segment is fetched, the prefetch pool immediately fetches (or,
+        multi-process, broadcasts) the *first* segment again, so the next
+        macro batch's Γ I/O hides behind this batch's tail compute.
         """
+        return self.sample_with_stats(
+            n_samples, key, resume=resume,
+            stop_after_segments=stop_after_segments,
+            checkpoint_dir=checkpoint_dir, pipeline=pipeline)[0]
+
+    def sample_with_stats(self, n_samples: int, key: jax.Array, *,
+                          resume: bool = False,
+                          stop_after_segments: Optional[int] = None,
+                          checkpoint_dir=_UNSET, pipeline: bool = False
+                          ) -> tuple[np.ndarray, dict]:
+        """:meth:`sample` plus a stats snapshot taken under the walk lock —
+        on a shared (session-cached) engine, reading ``self.stats`` after
+        the lock drops races the next walk's reset."""
+        with self._walk_lock:
+            out = self._sample_locked(n_samples, key, resume=resume,
+                                      stop_after_segments=stop_after_segments,
+                                      checkpoint_dir=checkpoint_dir,
+                                      pipeline=pipeline)
+            return out, dict(self.stats)
+
+    def _sample_locked(self, n_samples: int, key: jax.Array, *,
+                       resume: bool, stop_after_segments: Optional[int],
+                       checkpoint_dir, pipeline: bool) -> np.ndarray:
         from repro.core.dynamic_bond import fit_env
+
+        ckpt_dir = (self.checkpoint_dir if checkpoint_dir is self._UNSET
+                    else checkpoint_dir)
+        if ckpt_dir:
+            os.makedirs(ckpt_dir, exist_ok=True)
+        self._begin_walk()
 
         M_sites = self.n_sites
         if self.plan.micro_batch is not None:
@@ -327,9 +405,9 @@ class StreamingEngine:
         log_scale = jnp.zeros((n_samples,),
                               dtype=real_dtype_of(env.dtype))
         if resume:
-            if not self.checkpoint_dir:
+            if not ckpt_dir:
                 raise ValueError("resume=True needs a checkpoint_dir")
-            site, state, _ = load_sampler_state(self.checkpoint_dir)
+            site, state, _ = load_sampler_state(ckpt_dir)
             # the engine only checkpoints segment boundaries (or chain end)
             assert site in boundaries, (site, sorted(boundaries))
             # a mismatched key would silently produce a chimera batch
@@ -340,14 +418,16 @@ class StreamingEngine:
             env, key, log_scale = state.env, state.key, state.log_scale
             idx = next((i for i, (s, _, _) in enumerate(schedule)
                         if s == site), len(schedule))
-            done = self._load_sample_blocks(site)
+            done = self._load_sample_blocks(site, ckpt_dir)
             persisted = len(done)
 
         if idx >= len(schedule):          # resumed from a finished run
             self._finish_walk()
             return np.concatenate(done, axis=0).T.astype(np.int32)
 
-        fut: Future = self._pool.submit(self._fetch, *schedule[idx])
+        fut: Optional[Future] = self._take_warm(schedule[idx])
+        if fut is None:
+            fut = self._pool.submit(self._fetch, *schedule[idx])
         seg_idx = 0
         while idx < len(schedule):
             start, _, chi_s = schedule[idx]
@@ -356,6 +436,13 @@ class StreamingEngine:
             self.stats["io_wait_s"] += time.perf_counter() - t0
             if idx + 1 < len(schedule):   # double buffer: fetch k+1 now
                 fut = self._pool.submit(self._fetch, *schedule[idx + 1])
+            elif pipeline and stop_after_segments is None:
+                # gang-scheduling (paper §3.1 across macro batches): the
+                # pool is idle for the rest of this walk, so fetch — or on a
+                # multi-process runtime, broadcast — the next batch's FIRST
+                # segment now, behind this batch's tail compute
+                self._warm = (schedule[0],
+                              self._pool.submit(self._fetch, *schedule[0]))
 
             t0 = time.perf_counter()
             # the lock is a no-op except on the emulated cluster, where the
@@ -382,20 +469,20 @@ class StreamingEngine:
                         and idx < len(schedule))
             ckpt_due = (self.plan.checkpoint_every
                         and seg_idx % self.plan.checkpoint_every == 0)
-            if self.checkpoint_dir and (ckpt_due or stopping):
+            if ckpt_dir and (ckpt_due or stopping):
                 # samples live in per-segment block files written exactly
                 # once each — re-serializing the cumulative history every
                 # segment would make total checkpoint I/O quadratic in M
                 site_cursor = site_done - sum(b.shape[0]
                                               for b in done[persisted:])
                 for blk in done[persisted:]:
-                    np.save(os.path.join(self.checkpoint_dir,
+                    np.save(os.path.join(ckpt_dir,
                                          f"samples_{site_cursor:06d}.npy"),
                             blk)
                     site_cursor += blk.shape[0]
                 persisted = len(done)
                 save_sampler_state(
-                    self.checkpoint_dir, site_done,
+                    ckpt_dir, site_done,
                     S.SamplerState(env, key, log_scale),
                     np.zeros((0, n_samples), dtype=np.int32))
             if stopping:
@@ -430,13 +517,27 @@ class StreamingEngine:
         batches are never recomputed and results are owner-independent."""
         out: dict[int, np.ndarray] = {}
         while (b := queue.claim(worker)) is not None:
-            out[b] = self.sample(per_batch, jax.random.fold_in(base_key, b))
+            # consecutive batches share the walk schedule — gang-schedule
+            # the next batch's first segment behind this batch's tail
+            # (pending includes b itself: the final batch must not pin a
+            # speculative segment until close)
+            out[b] = self.sample(per_batch, jax.random.fold_in(base_key, b),
+                                 pipeline=len(queue.pending) > 1)
             queue.complete(b)
         return out
 
     def close(self, close_store: bool = True) -> None:
-        """Join the prefetch thread; ``close_store=False`` leaves the
-        (possibly shared) GammaStore alive for further engines/sessions."""
+        """Join the prefetch thread (releasing any gang-scheduled segment
+        still in its slot); ``close_store=False`` leaves the (possibly
+        shared) GammaStore alive for further engines/sessions."""
+        if self._warm is not None:
+            _, fut = self._warm
+            self._warm = None
+            try:
+                gd, ld, _ = fut.result()
+                self._release(gd, ld)
+            except Exception:           # fetch already failed — nothing live
+                pass
         self._pool.shutdown(wait=True)
         if close_store:
             self.store.close()

@@ -267,3 +267,82 @@ def warm_site_step(n: int, chi: int, d: int, dtype, *, semantics: str,
 
     autotune("site_step", n=n, chi_l=chi, chi_r=chi, d=d, dtype=dtype,
              planes=planes, probe=probe)
+
+
+def _env_dtype_of(gamma_dtype):
+    """The dtype the walk's environment carries (what the in-trace autotune
+    lookups are keyed on): Γ storage may be half-precision, environments
+    never are (§3.3.2 storage ≠ compute)."""
+    dt = jnp.dtype(gamma_dtype)
+    return jnp.float32 if dt in (jnp.bfloat16, jnp.float16) else dt
+
+
+def warm_tp_stages(n: int, chi: int, d: int, dtype, *, p2: int, scheme: str,
+                   measure_first: bool = False, compute_dtype=None) -> None:
+    """Populate the autotuner cache for the sharded TP stage shapes.
+
+    The TP schedules never run the fused ``site_step`` — their per-site
+    work is the dispatched ``contract_measure`` / ``measure`` / ``collapse``
+    stages over bond-sharded operands (χ/p₂ splits), so warming the
+    seq/dp site-step shape alone leaves every TP lookup a cold miss (and on
+    TPU the timed sweep cannot run inside the shard_map trace at all).
+    Shapes mirror ``core/parallel`` exactly:
+
+    * ``tp_single``        — contract_measure(env (N₂, χ/p₂), Γ (χ/p₂, χ, d))
+    * ``tp_single`` + tp-3 — measure(env (N₂, χ/p₂), W (χ/p₂, d)) and
+                             collapse(env (N₂, χ/p₂), Γ (χ/p₂, χ, d))
+    * ``tp_double``        — the odd half-site's (χ/p₂ → χ) contract_measure
+                             plus the even half-site's (χ → χ/p₂) one
+
+    Linear semantics only: the Born split-K TP cells keep their XLA
+    implementations by design (|Σ·|² ≠ Σ|·|²), so there is nothing to warm.
+    """
+    assert chi % p2 == 0, (chi, p2)
+    env_dt = _env_dtype_of(dtype)
+    chi_shard = chi // p2
+    itp = not on_tpu()
+
+    def _warm(stage, chi_l, chi_r, kern_probe):
+        probe = None
+        if on_tpu():
+            env = jnp.zeros((n, chi_l), dtype=env_dt)
+
+            def probe(cfg, _env=env, _chi_r=chi_r, _kp=kern_probe):
+                return lambda: _kp(_env, _chi_r, cfg)
+        autotune(stage, n=n, chi_l=chi_l, chi_r=chi_r, d=d, dtype=env_dt,
+                 planes=1, probe=probe)
+
+    def _cm(env, chi_r, cfg):
+        gamma = jnp.zeros((env.shape[1], chi_r, d), dtype=env_dt)
+        lam = jnp.zeros((chi_r,), dtype=env_dt)
+        e, g = env, gamma
+        if compute_dtype is not None:
+            e, g = env.astype(compute_dtype), gamma.astype(compute_dtype)
+        return CM.contract_measure(e, g, lam, bn=cfg.bn, br=cfg.br,
+                                   bl=cfg.bl, interpret=itp)
+
+    def _ms(env, chi_r, cfg):
+        w = jnp.zeros((env.shape[1], d), dtype=env_dt)
+        return SS.measure_probs(env, w, bn=cfg.bn, bl=cfg.bl,
+                                compute_dtype=compute_dtype, interpret=itp)
+
+    def _cl(env, chi_r, cfg):
+        gamma = jnp.zeros((env.shape[1], chi_r, d), dtype=env_dt)
+        samples = jnp.zeros((n,), dtype=jnp.int32)
+        e, g = env, gamma
+        if compute_dtype is not None:
+            e, g = env.astype(compute_dtype), gamma.astype(compute_dtype)
+        return CS.collapse_select(e, g, samples, bn=cfg.bn, br=cfg.br,
+                                  bl=cfg.bl, interpret=itp)
+
+    if scheme == "tp_single" and measure_first:
+        _warm("measure", chi_shard, chi_shard, _ms)
+        _warm("collapse", chi_shard, chi, _cl)
+    elif scheme == "tp_single":
+        _warm("contract_measure", chi_shard, chi, _cm)
+    elif scheme == "tp_double":
+        _warm("contract_measure", chi_shard, chi, _cm)   # odd half-site
+        _warm("contract_measure", chi, chi_shard, _cm)   # even half-site
+    else:
+        raise ValueError(f"warm_tp_stages covers the TP schemes, "
+                         f"got {scheme!r}")

@@ -20,6 +20,13 @@ Streaming mode (chains too big for device memory, paper §3.1/§3.3.2):
 Dynamic bond dimensions (§3.4.2) now compose with every mode:
   PYTHONPATH=src python -m repro.launch.sample --sites 512 --chi 64 \
       --samples 4096 --stream --dynamic-bond
+
+Service mode (async job API, `repro.api.service`): the whole run is one
+multi-batch job over elastic worker lanes — blocks persist and progress
+prints as batches complete, with the same batch files (same seed schedule)
+the synchronous path writes:
+  PYTHONPATH=src python -m repro.launch.sample --sites 64 --chi 64 \
+      --samples 4096 --macro-batches 8 --service --service-workers 2
 """
 from __future__ import annotations
 
@@ -66,6 +73,12 @@ def main() -> None:
     ap.add_argument("--precision", default="fp64",
                     choices=["fp64", "fp32", "mxu_bf16"])
     ap.add_argument("--out", default="/tmp/fastmps_out")
+    ap.add_argument("--service", action="store_true",
+                    help="run through the async SamplingService: the whole "
+                         "run is ONE multi-batch job, blocks stream back "
+                         "with progress as they complete")
+    ap.add_argument("--service-workers", type=int, default=1,
+                    help="service submit lanes (elastic worker threads)")
     ap.add_argument("--stream", action="store_true",
                     help="segment-streamed engine (Γ from --store, §3.1)")
     ap.add_argument("--store", default=None,
@@ -138,10 +151,11 @@ def main() -> None:
     per_batch = args.samples // n1
 
     # resume: macro batches already on disk are done (idempotent by id)
+    done = [b for b in range(n1)
+            if os.path.exists(os.path.join(args.out, f"batch_{b:05d}.npy"))]
     queue = WorkQueue(n1, seed=args.seed)
-    for b in range(n1):
-        if os.path.exists(os.path.join(args.out, f"batch_{b:05d}.npy")):
-            queue.complete(b)
+    for b in done:
+        queue.complete(b)
     print(f"pending macro batches: {queue.pending}")
 
     base = jax.random.key(args.seed + 1)
@@ -159,10 +173,32 @@ def main() -> None:
                     np.asarray(out).astype(np.int8))
             print(f"macro batch {b} done ({per_batch} samples)", flush=True)
 
-        session.run_queue(
-            queue, per_batch, base, worker="driver",
-            checkpoint_root=os.path.join(args.out, "chain_ckpt"),
-            on_batch=save_batch)
+        if args.service:
+            # the async front door: ONE job, its macro batches fed through
+            # the elastic WorkQueue across --service-workers lanes, blocks
+            # streamed back (and persisted) as they complete.  The batch
+            # files must be interchangeable with the synchronous mode's, so
+            # the key schedule must match run_queue's fold_in(base, b) for
+            # EVERY n1 — a 1-batch job passes its key through unfolded
+            # (service.batch_key), so fold batch 0's key here.
+            job_key = jax.random.fold_in(base, 0) if n1 == 1 else base
+            with api.SamplingService(workers=args.service_workers) as svc:
+                handle = svc.submit(
+                    session, n_samples=args.samples, key=job_key,
+                    macro_batches=n1, skip_batches=done,
+                    checkpoint_root=os.path.join(args.out, "chain_ckpt"))
+                for b, block in handle.stream():
+                    save_batch(b, block)
+                    p = handle.progress
+                    print(f"[service] {p['done']}/{p['total']} batches "
+                          f"(claims={p['claims']} requeues={p['requeues']} "
+                          f"lanes={p['workers']})", flush=True)
+                print("[service] final:", handle.status(), svc.stats())
+        else:
+            session.run_queue(
+                queue, per_batch, base, worker="driver",
+                checkpoint_root=os.path.join(args.out, "chain_ckpt"),
+                on_batch=save_batch)
         if session.stats:
             print("streaming stats:",
                   {k: (round(v, 4) if isinstance(v, float) else v)

@@ -35,41 +35,81 @@ class BatchRecord:
 class WorkQueue:
     """Idempotent macro-batch queue with failure/elasticity semantics.
 
-    * ``claim(worker)`` hands out the lowest unclaimed batch.
+    * ``claim(worker)`` re-offers requeued batches (FIFO) before handing out
+      the lowest fresh unclaimed batch — work orphaned by a worker loss is
+      never starved behind a long tail of fresh batches.
     * ``fail(worker)`` / ``remove_worker`` requeue everything the worker
       held (restart-exact: batch = f(seed, id)).
+    * ``complete(b, worker=...)`` with a worker is ownership-checked: a
+      removed worker's late completion of a batch that was requeued (and may
+      be recomputed elsewhere) is rejected instead of double-counted —
+      results are identical either way, but the queue's accounting must
+      attribute the batch to its current owner.
     * ``add_worker`` just makes the new worker eligible to claim.
     * ``reclaim_stale(timeout)`` is the straggler hook (see stragglers.py).
+    * ``stats()`` is the progress snapshot service layers surface.
     """
 
     def __init__(self, n_batches: int, seed: int = 0):
         self.seed = seed
         self.records = {b: BatchRecord(b) for b in range(n_batches)}
         self.workers: set[str] = set()
+        self._requeued: list[int] = []     # FIFO of re-offer-first batch ids
+        self._claims = 0
+        self._requeues = 0
 
     # -- membership ----------------------------------------------------------
     def add_worker(self, w: str) -> None:
         self.workers.add(w)
 
+    def _requeue(self, r: BatchRecord) -> None:
+        r.owner, r.started_at = None, None
+        if r.batch_id not in self._requeued:
+            self._requeued.append(r.batch_id)
+            self._requeues += 1
+
     def remove_worker(self, w: str) -> None:
         self.workers.discard(w)
         for r in self.records.values():
             if r.owner == w and not r.done:
-                r.owner, r.started_at = None, None
+                self._requeue(r)
 
     # -- work ----------------------------------------------------------------
+    def _hand_out(self, r: BatchRecord, w: str, now: Optional[float]) -> int:
+        r.owner = w
+        r.started_at = now if now is not None else time.monotonic()
+        self._claims += 1
+        return r.batch_id
+
     def claim(self, w: str, now: Optional[float] = None) -> Optional[int]:
         if w not in self.workers:
             self.add_worker(w)
+        while self._requeued:              # orphaned work first, FIFO
+            r = self.records[self._requeued[0]]
+            if r.owner is not None or r.done:   # raced/stale entry
+                self._requeued.pop(0)
+                continue
+            self._requeued.pop(0)
+            return self._hand_out(r, w, now)
         for b in sorted(self.records):
             r = self.records[b]
             if r.owner is None and not r.done:
-                r.owner, r.started_at = w, (now if now is not None else time.monotonic())
-                return b
+                return self._hand_out(r, w, now)
         return None
 
-    def complete(self, b: int) -> None:
-        self.records[b].done = True
+    def complete(self, b: int, worker: Optional[str] = None) -> bool:
+        """Mark batch ``b`` done; returns whether the completion counted.
+
+        With ``worker`` given, a completion from a worker that no longer
+        owns the batch (it was removed and the batch requeued) is rejected
+        — the caller should discard its result and let the current owner's
+        identical recomputation land instead."""
+        r = self.records[b]
+        if worker is not None and r.owner != worker:
+            return False
+        r.done = True
+        r.owner = None
+        return True
 
     def fail(self, w: str) -> None:
         self.remove_worker(w)
@@ -79,9 +119,21 @@ class WorkQueue:
         out = []
         for r in self.records.values():
             if r.owner is not None and not r.done and now - r.started_at > timeout:
-                r.owner, r.started_at = None, None
+                self._requeue(r)
                 out.append(r.batch_id)
         return out
+
+    def stats(self) -> dict:
+        """Progress snapshot: the counts a service's ``progress`` reports."""
+        done = sum(r.done for r in self.records.values())
+        claimed = sum(r.owner is not None and not r.done
+                      for r in self.records.values())
+        return {"total": len(self.records), "done": done, "claimed": claimed,
+                "requeued": len([b for b in self._requeued
+                                 if not self.records[b].done]),
+                "pending": len(self.records) - done,
+                "claims": self._claims, "requeues": self._requeues,
+                "workers": len(self.workers)}
 
     @property
     def pending(self) -> list[int]:

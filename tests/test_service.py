@@ -1,0 +1,629 @@
+"""`SamplingService` job semantics: submit / stream / cancel / elasticity.
+
+The service contract on top of the §4.1 seed-consistency guarantee:
+
+* a single-batch job IS the one-shot call (`batch_key` passes the key
+  through), so `session.sample` — now a synchronous wrapper over a
+  one-job service — stays bit-identical to every pre-service release;
+* a k-batch job's streamed blocks are bit-identical per seed to one-shot
+  `session.sample` calls (batch b ≡ sample(per, fold_in(key, b))),
+  across {inmem, streamed} × {seq, dp} — dp in an 8-device subprocess;
+* killing a worker mid-job requeues its batches and the survivors emit
+  the exact same samples (batch = f(seed, id) — owner-independent);
+* same-(source, config)-cell jobs coalesce onto ONE session (one resolved
+  plan, one streamed engine, one jit cache).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.api.service import JobCancelled, batch_key
+from repro.core import sampler as S
+from repro.data.gamma_store import GammaStore
+
+
+@pytest.fixture(scope="module")
+def chain(tmp_path_factory, linear_mps_10x6):
+    root = str(tmp_path_factory.mktemp("svc_gamma"))
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        store.write_mps(linear_mps_10x6)
+    return root, linear_mps_10x6
+
+
+# ---------------------------------------------------------------------------
+# Job lifecycle
+# ---------------------------------------------------------------------------
+
+def test_single_batch_job_is_the_one_shot_call(chain):
+    root, mps = chain
+    key = jax.random.key(3)
+    ref = np.asarray(S.sample(mps, 24, key))
+    with api.SamplingService() as svc:
+        h = svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=24, key=key)
+        assert np.array_equal(h.result(), ref)
+        assert h.status() == "done"
+        assert h.progress["done"] == 1 and h.progress["total"] == 1
+        # the session facade is the same job in synchronous clothing
+    with api.SamplingSession(root, api.SamplerConfig(segment_len=4)) as sess:
+        assert np.array_equal(sess.sample(24, key), ref)
+
+
+@pytest.mark.parametrize("backend", ["inmem", "streamed"])
+def test_stream_blocks_bitidentical_per_seed_seq(chain, backend):
+    """Acceptance (seq cells): the concatenation of a job's streamed
+    macro-batch blocks equals the per-seed one-shot `session.sample`
+    results — and each block lands exactly once, in batch order."""
+    root, mps = chain
+    key = jax.random.key(7)
+    n, k = 32, 4
+    src = mps if backend == "inmem" else root
+    cfg = api.SamplerConfig(backend=backend, segment_len=4)
+    refs = [np.asarray(S.sample(mps, n // k, batch_key(key, b, k)))
+            for b in range(k)]
+    with api.SamplingService(workers=2) as svc:
+        h = svc.submit(src, cfg, n_samples=n, key=key, macro_batches=k)
+        seen = []
+        for b, block in h.stream(timeout=300):
+            seen.append(b)
+            assert np.array_equal(block, refs[b])
+        assert seen == list(range(k))
+        assert np.array_equal(h.result(), np.concatenate(refs, axis=0))
+        assert h.progress["claims"] == k and h.progress["requeues"] == 0
+
+
+def test_skip_batches_resume_by_id(chain):
+    """Idempotent restart: batches already durable elsewhere are skipped;
+    the stream yields only the remaining ids with unchanged keys."""
+    root, mps = chain
+    key = jax.random.key(11)
+    with api.SamplingService() as svc:
+        h = svc.submit(root, api.SamplerConfig(segment_len=4), n_samples=24,
+                       key=key, macro_batches=3, skip_batches=[1])
+        got = dict(h.stream(timeout=300))
+        assert sorted(got) == [0, 2]
+        for b in got:
+            assert np.array_equal(
+                got[b], np.asarray(S.sample(mps, 8, batch_key(key, b, 3))))
+
+
+def test_cancel_pending_job_and_elastic_scale_up(chain):
+    root, _ = chain
+    key = jax.random.key(13)
+    with api.SamplingService(workers=0) as svc:       # no lanes: nothing runs
+        h = svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=16, key=key, macro_batches=2)
+        assert h.status() == "pending"
+        assert h.cancel()
+        assert h.status() == "cancelled"
+        with pytest.raises(JobCancelled):
+            h.result(timeout=30)
+        # scale-up: a fresh lane picks up later work
+        h2 = svc.submit(root, api.SamplerConfig(segment_len=4),
+                        n_samples=8, key=key)
+        svc.add_worker()
+        assert h2.result(timeout=300).shape == (8, 10)
+
+
+def test_cancel_mid_job_stops_remaining_batches(chain):
+    root, mps = chain
+    key = jax.random.key(17)
+
+    with api.SamplingService(workers=0) as svc:
+        h = None
+
+        def hook(job, b, worker):
+            if b == 1:
+                h.cancel()            # in-flight batch 1 gets discarded
+
+        svc.batch_hook = hook
+        h = svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=32, key=key, macro_batches=4)
+        svc.add_worker()
+        stream = h.stream(timeout=300)
+        b0, block0 = next(stream)
+        assert b0 == 0 and np.array_equal(
+            block0, np.asarray(S.sample(mps, 8, batch_key(key, 0, 4))))
+        with pytest.raises(JobCancelled):
+            list(stream)
+        assert h.status() == "cancelled"
+        assert h.progress["blocks"] == 1          # nothing ran after cancel
+
+
+def test_purge_drops_finished_jobs_but_handles_keep_answering(chain):
+    root, mps = chain
+    key = jax.random.key(53)
+    ref = np.asarray(S.sample(mps, 8, key))
+    with api.SamplingService() as svc:
+        h = svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=8, key=key)
+        assert np.array_equal(h.result(timeout=300), ref)
+        assert svc.purge() == 1
+        assert svc.stats()["jobs"] == {}           # table forgot the job
+        assert h.status() == "done"                # the handle did not
+        assert np.array_equal(h.result(), ref)
+
+
+def test_multihost_runtime_rejects_multi_lane_service(chain):
+    """Concurrent lanes on a shared multi-process runtime would interleave
+    broadcast collectives in thread order — rejected at submit time."""
+    root, _ = chain
+    rt = api.emulated_cluster(2)[0]
+    cfg = api.SamplerConfig(runtime=rt, backend="streamed", segment_len=4)
+    with api.SamplingSession(root, cfg) as sess:
+        with api.SamplingService(workers=2) as svc:
+            with pytest.raises(ValueError, match="single-lane"):
+                svc.submit(sess, n_samples=8, key=jax.random.key(0))
+
+
+def test_stream_timeout_is_a_real_deadline(chain):
+    """The per-batch timeout must not re-arm on unrelated notifies (every
+    submit/completion broadcasts the condition)."""
+    root, _ = chain
+    with api.SamplingService(workers=0) as svc:     # job can never run
+        h = svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=8, key=jax.random.key(0))
+
+        def churn():                                # constant notifies
+            for _ in range(50):
+                with svc._cond:
+                    svc._cond.notify_all()
+                import time
+                time.sleep(0.01)
+
+        t = threading.Thread(target=churn)
+        t.start()
+        with pytest.raises(TimeoutError):
+            h.result(timeout=0.2)
+        t.join()
+
+
+def test_removed_worker_name_can_be_revived(chain):
+    root, _ = chain
+    key = jax.random.key(59)
+    with api.SamplingService(workers=0) as svc:
+        svc.add_worker("gpu-lane")
+        h1 = svc.submit(root, api.SamplerConfig(segment_len=4),
+                        n_samples=8, key=key)
+        h1.result(timeout=300)
+        svc.remove_worker("gpu-lane")
+        svc._threads["gpu-lane"].join(timeout=60)   # lane drains and exits
+        svc.add_worker("gpu-lane")                  # stable ops name revives
+        h2 = svc.submit(root, api.SamplerConfig(segment_len=4),
+                        n_samples=8, key=key)
+        assert np.array_equal(h2.result(timeout=300), h1.result())
+
+
+def test_single_batch_job_honours_checkpoint_root(chain, tmp_path):
+    """--service --macro-batches 1 keeps the sync path's mid-chain fault
+    tolerance: checkpoint_root applies to 1-batch jobs too, with the
+    shared per-batch dir convention."""
+    from repro.api.service import batch_checkpoint_dir
+    root, mps = chain
+    key = jax.random.key(61)
+    ref = np.asarray(S.sample(mps, 16, key))
+    ck_root = str(tmp_path)
+    # seed a mid-chain checkpoint via the engine-level kill hook
+    cfg = api.SamplerConfig(segment_len=4, checkpoint_every=1)
+    ck = batch_checkpoint_dir(ck_root, 0)
+    os.makedirs(ck, exist_ok=True)
+    with api.SamplingSession(root, cfg) as sess:
+        part = sess.sample(16, key, checkpoint_dir=ck, stop_after_segments=2)
+        assert np.array_equal(part, ref[:, :8])
+    with api.SamplingService() as svc:
+        h = svc.submit(root, cfg, n_samples=16, key=key,
+                       checkpoint_root=ck_root)
+        out = h.result(timeout=300)
+        # resumed from site 8: only the remaining segments walked
+        assert h.stats[0]["segments"] == 1
+    assert np.array_equal(out, ref)
+    assert not os.path.exists(ck)          # durable output → dir cleaned
+    with api.SamplingService(workers=0) as svc:
+        with pytest.raises(ValueError, match="checkpoint_root"):
+            svc.submit(root, cfg, n_samples=16, key=key,
+                       checkpoint_root=ck_root, resume=True)
+
+
+def test_store_handles_with_different_dtypes_do_not_coalesce(chain):
+    """Two GammaStore handles on one root with different compute dtypes
+    must get separate sessions — precision is per-open state."""
+    root, _ = chain
+    key = jax.random.key(67)
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as s64, \
+         GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float32) as s32, \
+         api.SamplingService() as svc:
+        cfg = api.SamplerConfig(segment_len=4)
+        svc.submit(s64, cfg, n_samples=8, key=key).result(timeout=300)
+        svc.submit(s32, cfg, n_samples=8, key=key).result(timeout=300)
+        assert svc.stats()["sessions"] == 2        # no silent precision mix
+
+
+def test_priority_ordering(chain):
+    """Higher-priority jobs are served first once a lane appears."""
+    root, _ = chain
+    key = jax.random.key(19)
+    order = []
+    with api.SamplingService(workers=0) as svc:
+        svc.batch_hook = lambda job, b, w: order.append(job.job_id)
+        lo = svc.submit(root, api.SamplerConfig(segment_len=4),
+                        n_samples=8, key=key, priority=0)
+        hi = svc.submit(root, api.SamplerConfig(segment_len=4),
+                        n_samples=8, key=key, priority=5)
+        svc.add_worker()
+        lo.result(timeout=300), hi.result(timeout=300)
+    assert order == [hi.job_id, lo.job_id]
+
+
+def test_failed_job_reraises_original_error(chain):
+    root, _ = chain
+    with api.SamplingSession(root, api.SamplerConfig(segment_len=4)) as sess:
+        # resume without a checkpoint_dir fails inside the engine — the
+        # worker's exception must surface type-intact from result()
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            sess.sample(8, jax.random.key(0), resume=True)
+
+
+def test_submit_validation(chain):
+    root, _ = chain
+    key = jax.random.key(0)
+    with api.SamplingService(workers=0) as svc:
+        with pytest.raises(ValueError, match="divide"):
+            svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=10, key=key, macro_batches=3)
+        with pytest.raises(ValueError, match="skip_batches"):
+            svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=8, key=key, macro_batches=2,
+                       skip_batches=[2])
+        with pytest.raises(ValueError, match="checkpoint_root"):
+            svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=8, key=key, macro_batches=2, resume=True)
+        # config errors surface at submit time, on the caller's thread
+        with pytest.raises(ValueError, match="needs a mesh"):
+            svc.submit(root, api.SamplerConfig(scheme="dp", segment_len=4),
+                       n_samples=8, key=key)
+
+
+# ---------------------------------------------------------------------------
+# Elasticity: worker kill → requeue → identical samples
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["inmem", "streamed"])
+def test_worker_kill_requeues_and_samples_identical(chain, backend):
+    root, mps = chain
+    key = jax.random.key(23)
+    n, k = 32, 4
+    src = mps if backend == "inmem" else root
+    refs = [np.asarray(S.sample(mps, n // k, batch_key(key, b, k)))
+            for b in range(k)]
+    killed = []
+
+    with api.SamplingService(workers=2) as svc:
+        def hook(job, b, worker):
+            if b == 2 and not killed:          # first claimant of batch 2
+                killed.append(worker)
+                svc.remove_worker(worker)      # its claims requeue at once
+
+        svc.batch_hook = hook
+        h = svc.submit(src, api.SamplerConfig(backend=backend, segment_len=4),
+                       n_samples=n, key=key, macro_batches=k)
+        out = h.result(timeout=300)
+    assert killed, "the kill hook never fired"
+    assert np.array_equal(out, np.concatenate(refs, axis=0))
+    p = h.progress
+    assert p["requeues"] >= 1 and p["done"] == k
+
+
+def test_late_completion_from_removed_worker_is_discarded():
+    """WorkQueue ownership check (unit): a removed worker's completion of a
+    requeued batch does not count; the new owner's does."""
+    from repro.runtime.elastic import WorkQueue
+    q = WorkQueue(2)
+    assert q.claim("a", now=0.0) == 0
+    q.remove_worker("a")
+    assert not q.complete(0, worker="a")       # late result: discarded
+    assert q.claim("b", now=1.0) == 0          # requeued, re-offered first
+    assert q.complete(0, worker="b")
+    assert q.stats()["requeues"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Plan coalescing
+# ---------------------------------------------------------------------------
+
+def test_same_cell_jobs_coalesce_onto_one_session(chain):
+    """Two jobs with equal (source, config, mesh) share one session —
+    hence one resolved plan and ONE streamed engine (the jit cache and
+    prefetch pool compile/warm once for both)."""
+    root, mps = chain
+    key = jax.random.key(29)
+    cfg_a = api.SamplerConfig(segment_len=4)
+    cfg_b = api.SamplerConfig(segment_len=4)    # equal value, distinct object
+    ref = np.asarray(S.sample(mps, 16, key))
+    with api.SamplingService() as svc:
+        h1 = svc.submit(root, cfg_a, n_samples=16, key=key)
+        h2 = svc.submit(root, cfg_b, n_samples=16, key=key)
+        assert np.array_equal(h1.result(timeout=300), ref)
+        assert np.array_equal(h2.result(timeout=300), ref)
+        st = svc.stats()
+        assert st["sessions"] == 1 and st["coalesced_jobs"] == 1
+        # one session ⇒ one cached streamed engine serves both jobs
+        (sess,) = svc._sessions.values()
+        assert len(sess._engines) == 1
+    # plans in one cell share compilation given equal shapes (plan.cell is
+    # the coalescing identity the service reports)
+    with api.SamplingSession(root, cfg_a) as sess:
+        assert sess.plan(16).cell == ("streamed", "local", "seq",
+                                      "linear", "xla")
+
+
+def test_streamed_engine_cached_per_engine_identity(chain):
+    """The session keeps one engine per engine identity: sample() calls
+    that differ only in batch size share it (jit is per shape inside), so
+    a service handling varied job sizes never accumulates engines."""
+    root, mps = chain
+    key = jax.random.key(31)
+    with api.SamplingSession(root, api.SamplerConfig(segment_len=4)) as sess:
+        sess.sample(16, key)
+        assert len(sess._engines) == 1
+        sess.sample(16, jax.random.key(99))
+        assert len(sess._engines) == 1          # same identity → same engine
+        out8 = sess.sample(8, key)              # different n → SAME engine
+        assert len(sess._engines) == 1
+        assert np.array_equal(out8, np.asarray(S.sample(mps, 8, key)))
+
+
+def test_multibatch_job_never_falls_back_to_config_checkpoint_dir(
+        chain, tmp_path):
+    """submit() rejects per-walk checkpoint_dir for multi-batch jobs; the
+    config-level one must not sneak back in through the fallback, or every
+    batch would overwrite one directory's site_*/samples_* files."""
+    root, mps = chain
+    key = jax.random.key(71)
+    cfg = api.SamplerConfig(segment_len=4, checkpoint_dir=str(tmp_path),
+                            checkpoint_every=1)
+    with api.SamplingService() as svc:
+        h = svc.submit(root, cfg, n_samples=16, key=key, macro_batches=2)
+        got = dict(h.stream(timeout=300))
+    for b in range(2):
+        assert np.array_equal(
+            got[b], np.asarray(S.sample(mps, 8, batch_key(key, b, 2))))
+    assert os.listdir(str(tmp_path)) == []      # no shared-dir checkpoints
+
+
+def test_add_worker_rejected_while_multiprocess_job_active(chain):
+    """Scale-up must honour the same single-lane invariant submit() does:
+    a running multi-process job owns the lane exclusively."""
+    root, _ = chain
+    rt = api.emulated_cluster(2)[0]
+    cfg = api.SamplerConfig(runtime=rt, backend="streamed", segment_len=4)
+    claimed, release = threading.Event(), threading.Event()
+    with api.SamplingSession(root, cfg) as sess:
+        with api.SamplingService(workers=0) as svc:
+            # park the lane in the pre-compute hook so the job is RUNNING
+            # without ever touching the (un-driven) peer's collectives
+            def hook(job, b, worker):
+                claimed.set()
+                release.wait(timeout=60)
+
+            svc.batch_hook = hook
+            h = svc.submit(sess, n_samples=8, key=jax.random.key(0))
+            svc.add_worker()                    # the single allowed lane
+            assert claimed.wait(timeout=60)
+            with pytest.raises(ValueError, match="multi-process"):
+                svc.add_worker()
+            h.cancel()                          # lane drops the batch
+            release.set()
+
+
+# ---------------------------------------------------------------------------
+# Gang-scheduled multi-batch pipelining (streamed)
+# ---------------------------------------------------------------------------
+
+def test_pipelined_batches_bitidentical_and_prefetch_reused(chain):
+    """A multi-batch streamed job gang-schedules batch b+1's first segment
+    behind batch b's tail compute: samples stay bit-identical and the
+    engine's live-segment bound (≤ 2) holds throughout."""
+    root, mps = chain
+    key = jax.random.key(37)
+    refs = [np.asarray(S.sample(mps, 8, batch_key(key, b, 3)))
+            for b in range(3)]
+    with api.SamplingService() as svc:
+        h = svc.submit(root, api.SamplerConfig(segment_len=4),
+                       n_samples=24, key=key, macro_batches=3)
+        got = dict(h.stream(timeout=300))
+        for b in range(3):
+            assert np.array_equal(got[b], refs[b])
+        stats = h.stats
+        assert all(s["max_live_segments"] <= 2 for s in stats.values())
+
+
+def test_run_queue_still_splits_work_across_sessions(chain):
+    """run_queue keeps its external-queue contract (shared restart state)
+    while routing execution through the service path."""
+    from repro.runtime.elastic import WorkQueue
+    root, mps = chain
+    key = jax.random.key(41)
+    q = WorkQueue(4)
+    with api.SamplingSession(root, api.SamplerConfig(segment_len=4)) as sess:
+        out = sess.run_queue(q, 8, key, worker="w0")
+    assert sorted(out) == [0, 1, 2, 3] and q.finished
+    for b, blk in out.items():
+        assert np.array_equal(
+            blk, np.asarray(S.sample(mps, 8, jax.random.fold_in(key, b))))
+
+
+# ---------------------------------------------------------------------------
+# Job batches as the remote dispatch unit
+# ---------------------------------------------------------------------------
+
+def test_remote_payload_carries_job_batch_unit(chain):
+    """backend='remote': the payload `ClusterRuntime.submit` dispatches is
+    one JOB BATCH (base key + batch identity; the worker folds the batch
+    key itself) — blocks come back bit-identical to the local schedule."""
+    root, mps = chain
+    key = jax.random.key(43)
+    refs = [np.asarray(S.sample(mps, 8, batch_key(key, b, 2)))
+            for b in range(2)]
+    cfg = api.SamplerConfig(backend="remote", segment_len=4)
+    with api.SamplingService() as svc:
+        h = svc.submit(root, cfg, n_samples=16, key=key, macro_batches=2)
+        got = dict(h.stream(timeout=300))
+    for b in range(2):
+        assert np.array_equal(got[b], refs[b])
+
+    # schema: v2 payload carries the job identity; the v1 (job-less)
+    # payload still executes — one worker entry point for both
+    from repro.api.remote import build_payload, execute_payload
+    from repro.api.service import JobBatch
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        p = build_payload(cfg, store, 8, key, job=JobBatch(0, 1, 2))
+        assert p["version"] == 2 and p["job"]["batch_id"] == 1
+        assert json.loads(json.dumps(p)) == p          # plain JSON
+        out = execute_payload(json.loads(json.dumps(p)))
+        assert np.array_equal(np.asarray(out), refs[1])
+        p1 = build_payload(cfg, store, 8, key)
+        assert "job" not in p1
+        out1 = execute_payload(p1)
+        assert np.array_equal(np.asarray(out1),
+                              np.asarray(S.sample(mps, 8, key)))
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue fairness (satellite)
+# ---------------------------------------------------------------------------
+
+def test_workqueue_requeued_before_fresh_and_stats():
+    from repro.runtime.elastic import WorkQueue
+    q = WorkQueue(5)
+    assert q.claim("a", now=0.0) == 0
+    assert q.claim("a", now=0.0) == 1
+    assert q.claim("b", now=0.0) == 2
+    q.complete(0)
+    q.remove_worker("a")                 # batch 1 orphaned → requeue FIFO
+    s = q.stats()
+    assert s == {"total": 5, "done": 1, "claimed": 1, "requeued": 1,
+                 "pending": 4, "claims": 3, "requeues": 1, "workers": 1}
+    assert q.claim("c", now=1.0) == 1    # re-offered before fresh 3, 4
+    assert q.claim("c", now=1.0) == 3
+
+
+# ---------------------------------------------------------------------------
+# DP cells + kill (8 forced host devices, subprocess) and multihost pipeline
+# ---------------------------------------------------------------------------
+
+_DP_CHILD = textwrap.dedent("""
+    import json, os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import api
+    from repro.api.service import batch_key
+    from repro.core import mps as M, parallel as PP
+    from repro.data.gamma_store import GammaStore
+    from repro.launch.mesh import make_host_mesh
+
+    m = M.random_linear_mps(jax.random.key(0), 8, 8, 3)
+    mesh = make_host_mesh(model=1)                 # 8-way data parallel
+    key = jax.random.key(7)
+    root = tempfile.mkdtemp()
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as st:
+        st.write_mps(m)
+
+    # per-seed one-shot references from the internal segment runner
+    def ref(n, k):
+        return np.asarray(PP._multilevel_sample(mesh, m, n, k,
+                                                PP.ParallelConfig("dp")))
+    refs = [ref(32, batch_key(key, b, 2)) for b in range(2)]
+
+    out = {}
+    for backend, src in (("inmem", m), ("streamed", root)):
+        cfg = api.SamplerConfig(backend=backend, scheme="dp", segment_len=2)
+        killed = []
+        with api.SamplingService(workers=2) as svc:
+            def hook(job, b, worker, svc=svc, killed=killed):
+                if b == 1 and not killed:
+                    killed.append(worker)
+                    svc.remove_worker(worker)
+            svc.batch_hook = hook
+            h = svc.submit(src, cfg, mesh=mesh, n_samples=64, key=key,
+                           macro_batches=2)
+            blocks = dict(h.stream(timeout=500))
+            out[backend + "_dp_blocks"] = bool(
+                all(np.array_equal(blocks[b], refs[b]) for b in range(2)))
+            out[backend + "_dp_killed"] = bool(
+                killed and h.progress["requeues"] >= 1)
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def dp_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _DP_CHILD], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cell", [
+    f"{b}_dp_{w}" for b in ("inmem", "streamed")
+    for w in ("blocks", "killed")])
+def test_service_dp_matrix(dp_results, cell):
+    """Acceptance (dp cells): streamed job blocks bit-identical per seed to
+    the one-shot dp schedule on {inmem, streamed}, with a mid-job worker
+    kill → requeue → identical samples."""
+    assert dp_results[cell]
+
+
+@pytest.mark.slow
+def test_multihost_pipelined_job_bitidentical(chain):
+    """Gang-scheduling on the emulated 2-process cluster: each process runs
+    the same 2-batch job; batch b+1's first-segment broadcast rides the
+    prefetch pool behind batch b's tail compute, and every process emits
+    the local per-seed blocks."""
+    root, mps = chain
+    key = jax.random.key(47)
+    refs = [np.asarray(S.sample(mps, 8, batch_key(key, b, 2)))
+            for b in range(2)]
+    runtimes = api.emulated_cluster(2)
+    outs, errs = {}, []
+
+    def run(rt):
+        try:
+            cfg = api.SamplerConfig(runtime=rt, backend="streamed",
+                                    segment_len=4)
+            with api.SamplingSession(root, cfg) as sess:
+                with api.SamplingService() as svc:
+                    h = svc.submit(sess, n_samples=16, key=key,
+                                   macro_batches=2)
+                    outs[rt.process_index] = dict(h.stream(timeout=300))
+        except Exception as e:              # pragma: no cover - shown below
+            errs.append(repr(e))
+
+    threads = [threading.Thread(target=run, args=(rt,)) for rt in runtimes]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600)
+    assert not errs, errs
+    for p in (0, 1):
+        for b in range(2):
+            assert np.array_equal(outs[p][b], refs[b])
