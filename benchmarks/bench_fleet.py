@@ -1,0 +1,143 @@
+"""Fleet bench: persistent worker processes vs subprocess-per-batch.
+
+What the PR's transport buys, measured:
+
+* **baseline** — the PR 5 dispatch story: ``RemoteRuntime(persistent=
+  False)`` forks one fresh interpreter per macro batch, so every batch
+  pays a full jax import + cold jit cache before it computes anything.
+* **fleet @ 1/2/4 workers** — ``SamplingService(pool=True)``: each lane
+  owns a long-lived ``repro.runtime.transport`` worker; after the lane's
+  first batch the worker is warm (cached session, warm jit cache), so a
+  batch pays dispatch + compute only, and lanes scale the job table
+  horizontally.
+
+Rows (common.emit): `oneshot_batches` (the baseline), then per worker
+count `fleet_burst_w{N}` (single-batch job burst, jobs/s derived) and
+`fleet_ttfb_w{N}` (time-to-first-block of one multi-batch job).  Each
+full run appends a `fleet` record to the BENCH trajectory
+(``benchmarks/BENCH.json``); CI smoke passes ``--json ""`` so ephemeral
+runners never mutate the tracked history.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_fleet.py [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+import common
+from repro import api
+from repro.core import mps as M
+from repro.data.gamma_store import GammaStore
+
+
+def _build_store(sites: int, chi: int, d: int) -> str:
+    root = tempfile.mkdtemp(prefix="fastmps_bench_fleet_")
+    mps = M.gbs_like_mps(jax.random.key(0), sites, chi, d,
+                         dtype=jnp.float64)
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        store.write_mps(mps)
+    return root
+
+
+def bench_oneshot_baseline(root: str, n: int, k: int) -> float:
+    """PR 5: one k-batch job where every batch is a fresh subprocess
+    (``persistent=False``) — interpreter + jax import + compile, k times.
+    Returns wall seconds for the job."""
+    rt = api.RemoteRuntime(persistent=False)
+    cfg = api.SamplerConfig(backend="remote", runtime=rt)
+    with api.SamplingService(workers=1) as svc:
+        t0 = time.perf_counter()
+        svc.submit(root, cfg, n_samples=n * k, key=jax.random.key(1),
+                   macro_batches=k).result()
+        return time.perf_counter() - t0
+
+
+def bench_fleet(root: str, n: int, k: int, jobs: int, workers: int
+                ) -> tuple[float, float, float]:
+    """(burst wall seconds for `jobs` single-batch jobs, time-to-first-
+    block of one k-batch job, its full wall) at `workers` worker
+    processes."""
+    with api.SamplingService(workers=workers, pool=True) as svc:
+        # warm every lane: a k=2·w batch job spreads over the lanes, so
+        # each worker pays its one-time import/compile outside the clock
+        svc.submit(root, n_samples=n * 2 * workers,
+                   key=jax.random.key(97),
+                   macro_batches=2 * workers).result()
+        t0 = time.perf_counter()
+        handles = [svc.submit(root, n_samples=n, key=jax.random.key(j))
+                   for j in range(jobs)]
+        for h in handles:
+            h.result()
+        burst = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        h = svc.submit(root, n_samples=n * k, key=jax.random.key(1),
+                       macro_batches=k)
+        stream = h.stream()
+        next(stream)
+        ttfb = time.perf_counter() - t0
+        for _ in stream:
+            pass
+        full = time.perf_counter() - t0
+    return burst, ttfb, full
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=common.BENCH_JSON,
+                    help='BENCH trajectory path ("" disables the append)')
+    args = ap.parse_args()
+
+    # per-batch compute is kept modest on purpose: this bench measures the
+    # DISPATCH story (cold interpreter vs warm worker), which is exactly
+    # where subprocess-per-batch loses — at large χ both modes converge on
+    # compute and the transport stops mattering
+    sites, chi, d = (16, 8, 3) if args.smoke else (32, 24, 3)
+    n = 128 if args.smoke else 1024            # samples per batch
+    k = 3 if args.smoke else 6                 # batches of the ttfb job
+    jobs = 3 if args.smoke else 8              # burst size
+    worker_counts = [1, 2] if args.smoke else [1, 2, 4]
+    root = _build_store(sites, chi, d)
+
+    try:
+        common.header()
+        base_s = bench_oneshot_baseline(root, n, k)
+        common.emit("oneshot_batches", base_s / k,
+                    f"{k / base_s:.3f} batches/s (PR5 baseline)")
+        fleet = {}
+        for w in worker_counts:
+            burst, ttfb, full = bench_fleet(root, n, k, jobs, w)
+            fleet[w] = {"jobs_per_s": jobs / burst,
+                        "time_to_first_block_s": ttfb,
+                        "job_wall_s": full,
+                        "batches_per_s": k / full}
+            common.emit(f"fleet_burst_w{w}", burst / jobs,
+                        f"{jobs / burst:.2f} jobs/s")
+            common.emit(f"fleet_ttfb_w{w}", ttfb,
+                        f"{(base_s / k) / ttfb:.2f}x vs oneshot batch")
+
+        common.append_bench_record(
+            args.json, "fleet",
+            {"sites": sites, "chi": chi, "d": d, "n_per_batch": n,
+             "macro_batches": k, "burst_jobs": jobs,
+             "worker_counts": worker_counts, "smoke": bool(args.smoke)},
+            oneshot_job_wall_s=base_s,
+            oneshot_batches_per_s=k / base_s,
+            fleet={str(w): v for w, v in fleet.items()},
+            best_speedup_vs_oneshot=max(
+                v["batches_per_s"] for v in fleet.values()) / (k / base_s))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

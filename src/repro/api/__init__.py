@@ -42,12 +42,14 @@ from repro.api.runtime import (ClusterRuntime, LocalRuntime,
 from repro.api.service import (JobBatch, JobCancelled, JobHandle,
                                SamplingService, batch_key)
 from repro.api.session import SamplingSession
+from repro.runtime.transport import TransportError, WorkerPool
 
 __all__ = [
     "AUTO", "Backend", "ClusterRuntime", "JobBatch", "JobCancelled",
     "JobHandle", "LocalRuntime", "MultiHostRuntime", "RemoteRuntime",
     "SampleRequest", "SamplerConfig", "SamplingService", "SamplingSession",
-    "SessionPlan", "available_backends", "available_runtimes", "batch_key",
-    "get_backend", "get_runtime", "emulated_cluster", "register_backend",
-    "register_runtime", "resolve_plan", "resolve_runtime",
+    "SessionPlan", "TransportError", "WorkerPool", "available_backends",
+    "available_runtimes", "batch_key", "get_backend", "get_runtime",
+    "emulated_cluster", "register_backend", "register_runtime",
+    "resolve_plan", "resolve_runtime",
 ]

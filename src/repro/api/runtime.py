@@ -198,6 +198,12 @@ class ClusterRuntime:
         raise NotImplementedError(f"runtime {self.name!r} has no dispatch "
                                   f"transport")
 
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        """Release transport state (persistent workers, sockets).  A no-op
+        for runtimes that hold none; sessions call it on runtimes they
+        resolved from a *name* (instances passed in stay the caller's)."""
+
 
 @register_runtime("local")
 class LocalRuntime(ClusterRuntime):

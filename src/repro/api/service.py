@@ -12,10 +12,21 @@ serving system needs, so this module turns sampling into *jobs*:
         # or: samples = h.result()              # blocking concatenation
 
 A job is decomposed into its N₁ macro batches and fed through an elastic
-:class:`repro.runtime.elastic.WorkQueue`; the service's **workers** are
-runtime submit lanes (threads driving the session's data plane — or, for
-``backend="remote"``, dispatching one serialized job batch each through
-``ClusterRuntime.submit``).  The queue's guarantees hold verbatim:
+:class:`repro.runtime.elastic.WorkQueue` — ONE job/batch table that every
+lane, local or remote, claims from.  A **lane** comes in two kinds:
+
+* **thread lanes** (default): threads driving the session's data plane in
+  this process — PR 5's behaviour;
+* **fleet lanes** (``pool=``): each lane owns one *persistent worker
+  process* in a :class:`repro.runtime.transport.WorkerPool`; a claimed
+  batch is serialized as the v2 job-batch payload (``repro.api.remote``)
+  and dispatched over the framed-pipe RPC, and the worker — alive across
+  batches, warm jit cache and cached sessions — streams the block back.
+  A transport fault (worker death, dropped result, deadline) is a *lane*
+  fault, never a job fault: the batch requeues, the worker respawns, and
+  the recomputation is bit-identical.
+
+The queue's guarantees hold verbatim either way:
 
 * batches rebalance on worker loss (:meth:`SamplingService.remove_worker`
   requeues the victim's in-flight batches; a late result from the removed
@@ -24,14 +35,30 @@ runtime submit lanes (threads driving the session's data plane — or, for
 * completed work is never recomputed,
 * results are owner- and order-independent.
 
-**Scheduling.**  Jobs are served in priority order (higher
-``priority`` first, FIFO within a priority); requeued batches are
-re-offered before fresh ones (``WorkQueue`` fairness).  Same-(source,
-config)-cell jobs **coalesce onto one session** — one resolved plan, one
-jit cache, one streamed engine — so a burst of small requests against one
-store never recompiles.  Multi-batch streamed jobs run **gang-scheduled**:
-the engine prefetches macro batch b+1's first Γ segment (local read or
-§3.1 broadcast) while batch b's tail still computes.
+**Scheduling.**  Jobs are served in priority order (higher ``priority``
+first, FIFO within a priority); requeued batches are re-offered before
+fresh ones (``WorkQueue`` fairness).  Same-(source, config)-cell jobs
+**coalesce onto one session** — one resolved plan, one jit cache, one
+streamed engine — so a burst of small requests against one store never
+recompiles.  Multi-batch streamed jobs run **gang-scheduled**: the engine
+prefetches macro batch b+1's first Γ segment (local read or §3.1
+broadcast) while batch b's tail still computes.
+
+**Straggler mitigation** (``runtime/stragglers``): each job tracks an
+EWMA of its batch completion times; when a lane finds nothing fresh to
+claim, a batch whose owner has exceeded ``straggler_k × EWMA`` is
+*reclaimed* and re-issued to the idle lane (Eq. 1's ``N·(max−mean)`` tail,
+statistically removed).  The late original's completion is rejected by the
+ownership check — idempotent batches make the duplicate harmless, and the
+bits are identical whichever copy lands.
+
+**Admission control.**  ``max_active_bytes`` caps the *modeled* resident
+footprint (perfmodel Eq. 3 — plans already carry the FLOP/byte numbers)
+of concurrently-running jobs: a burst of large jobs queues in priority
+order instead of thrashing one device budget, with the backpressure
+surfaced in :meth:`stats` (``admission``: queued vs admitted jobs, active
+model bytes).  One job is always admitted, so a job larger than the
+budget still runs — alone.
 
 **Key schedule** (:func:`batch_key`): a single-batch job draws with the
 job key itself — so ``SamplingSession.sample`` (reimplemented as a
@@ -46,11 +73,13 @@ import dataclasses
 import itertools
 import os
 import threading
+import time
 from typing import Any, Iterable, Iterator, Optional, Union
 
 import numpy as np
 
 from repro.runtime.elastic import WorkQueue
+from repro.runtime.stragglers import StragglerMitigator
 
 # job lifecycle states (JobHandle.status())
 PENDING, RUNNING, DONE, FAILED, CANCELLED = (
@@ -93,7 +122,7 @@ def has_chain_checkpoint(ck_dir: str) -> bool:
 @dataclasses.dataclass(frozen=True)
 class JobBatch:
     """Identity of one macro batch of one job — the unit a worker executes
-    and (for ``backend="remote"``) the unit ``ClusterRuntime.submit``
+    and (fleet lanes / ``backend="remote"``) the unit the transport
     dispatches (see ``repro.api.remote.build_payload``)."""
     job_id: int
     batch_id: int
@@ -110,11 +139,16 @@ class _Job:
     key: Any
     priority: int
     queue: WorkQueue
+    straggler: StragglerMitigator
     skip: frozenset
     state: str = PENDING
     error: Optional[BaseException] = None
     blocks: dict = dataclasses.field(default_factory=dict)
     batch_stats: dict = dataclasses.field(default_factory=dict)
+    # perfmodel admission numbers (Eq. 3 resident bytes of one active
+    # batch; total modeled compute seconds over the job's batches)
+    model_bytes: float = 0.0
+    model_compute_s: float = 0.0
     # single-batch session.sample passthroughs
     resume: bool = False
     checkpoint_dir: Optional[str] = None
@@ -145,12 +179,16 @@ class JobHandle:
 
     @property
     def progress(self) -> dict:
-        """Snapshot: batch counts + the underlying ``WorkQueue.stats()``."""
+        """Snapshot: batch counts + the underlying ``WorkQueue.stats()`` +
+        straggler/admission numbers."""
         with self._service._cond:
             out = self._job.queue.stats()
             out.update(state=self._job.state,
                        skipped=len(self._job.skip),
-                       blocks=len(self._job.blocks))
+                       blocks=len(self._job.blocks),
+                       model_bytes=self._job.model_bytes,
+                       model_compute_s=self._job.model_compute_s)
+            out.update(self._job.straggler.stats())
             return out
 
     def cancel(self) -> bool:
@@ -215,9 +253,22 @@ class JobHandle:
 
 
 class SamplingService:
-    """Job scheduler over the session registries; see module docstring."""
+    """Job scheduler over the session registries; see module docstring.
 
-    def __init__(self, *, workers: int = 1):
+    ``workers`` — initial lane count.  ``pool`` — fleet mode: ``True``
+    builds a service-owned :class:`~repro.runtime.transport.WorkerPool`,
+    or pass a configured pool; every lane then drives one persistent
+    worker process.  ``straggler_k`` — the EWMA deadline multiplier for
+    straggler reclaim (``None`` disables stealing; completions are still
+    observed).  ``max_active_bytes`` — perfmodel admission budget
+    (``None`` = unlimited).  ``steal_poll_s`` — how often an idle lane
+    re-checks for stale batches when everything is claimed.
+    """
+
+    def __init__(self, *, workers: int = 1, pool=None,
+                 straggler_k: Optional[float] = 3.0,
+                 steal_poll_s: float = 0.05,
+                 max_active_bytes: Optional[float] = None):
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._jobs: dict[int, _Job] = {}
@@ -229,6 +280,18 @@ class SamplingService:
         self._seq = itertools.count()
         self._worker_seq = itertools.count()
         self._coalesced = 0
+        self.straggler_k = straggler_k
+        self.steal_poll_s = steal_poll_s
+        self.max_active_bytes = max_active_bytes
+        self._owns_pool = pool is True
+        if pool is True:
+            from repro.runtime.transport import WorkerPool
+            pool = WorkerPool()
+        self._pool = pool
+        self._lane_batches: dict[str, int] = {}
+        self._steals = 0                       # straggler re-issues handed out
+        self._rejected_results = 0             # late completions discarded
+        self._transport_faults = 0             # lane faults absorbed
         # test/ops hook: called as hook(job, batch_id, worker) right after a
         # worker claims a batch, before it executes — failure-injection
         # (tests), progress taps, tracing
@@ -238,7 +301,8 @@ class SamplingService:
 
     # -- membership (elastic worker lanes) -----------------------------------
     def add_worker(self, name: Optional[str] = None) -> str:
-        """Add one submit lane (scale-up is claim eligibility, nothing else)."""
+        """Add one lane (scale-up is claim eligibility, nothing else); in
+        fleet mode this also spawns the lane's persistent worker process."""
         with self._cond:
             if self._closing:
                 raise RuntimeError("service is closed")
@@ -266,6 +330,10 @@ class SamplingService:
                     self._removed.discard(name)
                 else:
                     raise ValueError(f"worker {name!r} already exists")
+            if self._pool is not None:
+                w = self._pool.workers.get(name)
+                if w is None or not w.alive:
+                    self._pool.respawn(name)
             t = threading.Thread(target=self._worker_loop, args=(name,),
                                  name=f"sampling-service-{name}", daemon=True)
             self._threads[name] = t
@@ -276,13 +344,16 @@ class SamplingService:
         """Drop a lane; its claimed batches requeue immediately (the queue
         re-offers them before fresh work) and any result it still produces
         is discarded by the ownership check — elasticity is exact because
-        batches are idempotent."""
+        batches are idempotent.  A fleet lane's worker process is killed
+        (its in-flight call fails over to the requeue path)."""
         with self._cond:
             self._removed.add(name)
             for jid in self._order:
                 job = self._jobs[jid]
                 if job.state in (PENDING, RUNNING):
                     job.queue.remove_worker(name)
+            if self._pool is not None:
+                self._pool.reap(name, kill=True)
             self._cond.notify_all()
 
     def workers(self) -> list[str]:
@@ -315,6 +386,7 @@ class SamplingService:
         automatic mid-chain resume (the ``run_queue`` contract).
         """
         from repro.api.session import SamplingSession
+        from repro.core.perfmodel import Workload, job_admission_cost
 
         if macro_batches < 1:
             raise ValueError(f"macro_batches must be ≥ 1, got {macro_batches}")
@@ -347,7 +419,7 @@ class SamplingService:
         per_batch = n_samples // macro_batches
         # resolve (and validate) the plan up front: config errors surface at
         # submit time on the caller's thread, never as a failed job
-        session.plan(per_batch)
+        plan = session.plan(per_batch)
         if session.runtime.process_count > 1 and len(self.workers()) > 1:
             # every process of a multi-process runtime must issue its
             # broadcast collectives in the same order; one lane walking
@@ -360,14 +432,48 @@ class SamplingService:
                 f"from a single-lane service (workers=1), not "
                 f"{len(self.workers())} lanes, so the broadcast schedule "
                 f"stays deterministic across processes")
+        if self._pool is not None:
+            # fleet lanes ship the v2 job-batch payload; the session side
+            # must stay dispatchable (local single-process resolution, no
+            # local chain-walk state — per-batch idempotence IS the remote
+            # fault tolerance, exactly the backend="remote" contract)
+            if (session.runtime.process_count > 1
+                    or session.runtime.name not in ("local", "remote")):
+                raise ValueError(
+                    f"fleet lanes dispatch serialized job batches — the "
+                    f"submitting session must resolve on a single-process "
+                    f"local runtime, not {session.runtime.name!r}")
+            if plan.scheme != "seq":
+                raise ValueError(
+                    f"fleet lanes resolve placement on the worker — submit "
+                    f"with scheme AUTO/'seq', not {plan.scheme!r}")
+            if (resume or checkpoint_dir or checkpoint_root
+                    or stop_after_segments is not None):
+                raise ValueError(
+                    "fleet lanes have no local chain walk: per-batch "
+                    "idempotence is the fault-tolerance story — restart "
+                    "with skip_batches instead of resume/checkpoint options")
+
+        w = Workload(n_samples=per_batch, n_sites=session.n_sites,
+                     chi=session.chi, d=session.d, macro_batch=per_batch,
+                     micro_batch=(plan.micro_batch or per_batch),
+                     bytes_per_elt=session._elt_bytes)
+        cost = job_admission_cost(w, session.config.hardware,
+                                  n_batches=macro_batches - len(skip))
 
         with self._cond:
             if self._closing:
                 raise RuntimeError("service is closed")
+            queue = WorkQueue(macro_batches)
             job = _Job(job_id=next(self._seq), session=session,
                        n_samples=n_samples, per_batch=per_batch,
                        n_batches=macro_batches, key=key, priority=priority,
-                       queue=WorkQueue(macro_batches), skip=skip,
+                       queue=queue,
+                       straggler=StragglerMitigator(
+                           queue, k=(self.straggler_k or 3.0)),
+                       skip=skip,
+                       model_bytes=cost["resident_bytes"],
+                       model_compute_s=cost["compute_s"],
                        resume=resume, checkpoint_dir=checkpoint_dir,
                        stop_after_segments=stop_after_segments,
                        checkpoint_root=checkpoint_root)
@@ -416,10 +522,44 @@ class SamplingService:
             return sess
 
     # -- scheduling ----------------------------------------------------------
-    def _next_task(self, worker: str) -> Optional[tuple[_Job, int]]:
-        """Highest-priority claimable batch (requeued before fresh within a
-        job, courtesy of the WorkQueue).  Caller holds the lock."""
+    def _admission_view(self) -> tuple[list[int], list[int], float]:
+        """(admitted job ids in schedule order, jobs queued by admission,
+        modeled active bytes).  Caller holds the lock.  RUNNING jobs are
+        grandfathered; PENDING jobs are admitted in priority order while
+        the modeled footprint fits — and one job is always admitted, so a
+        job bigger than the whole budget still runs, alone."""
+        budget = self.max_active_bytes
+        admitted: list[int] = []
+        waiting: list[int] = []
+        active = 0.0
         for jid in self._order:
+            job = self._jobs[jid]
+            if job.state == RUNNING:
+                active += job.model_bytes
+                admitted.append(jid)
+        for jid in self._order:
+            job = self._jobs[jid]
+            if job.state != PENDING:
+                continue
+            if (budget is None or not admitted
+                    or active + job.model_bytes <= budget):
+                active += job.model_bytes
+                admitted.append(jid)
+            else:
+                waiting.append(jid)
+        return admitted, waiting, active
+
+    def _next_task(self, worker: str) -> Optional[tuple[_Job, int]]:
+        """Highest-priority claimable batch among *admitted* jobs (requeued
+        before fresh within a job, courtesy of the WorkQueue); when nothing
+        is claimable, a batch whose owner blew the EWMA deadline is stolen
+        (straggler reclaim — last resort, it duplicates compute).  Caller
+        holds the lock."""
+        admitted, _, _ = self._admission_view()
+        admitted_set = set(admitted)
+        for jid in self._order:
+            if jid not in admitted_set:
+                continue
             job = self._jobs[jid]
             if job.state not in (PENDING, RUNNING):
                 continue
@@ -427,7 +567,31 @@ class SamplingService:
             if b is not None:
                 job.state = RUNNING
                 return job, b
+        if self.straggler_k:
+            for jid in self._order:
+                job = self._jobs[jid]
+                if job.state != RUNNING:
+                    continue
+                b = job.straggler.maybe_steal(worker)
+                if b is not None:
+                    self._steals += 1
+                    return job, b
         return None
+
+    def _stealable(self) -> bool:
+        """Whether an idle lane should poll for stale batches (a RUNNING
+        job with claimed batches and an armed deadline).  Caller holds the
+        lock."""
+        if not self.straggler_k:
+            return False
+        for jid in self._order:
+            job = self._jobs[jid]
+            if (job.state == RUNNING
+                    and job.straggler.deadline is not None
+                    and any(r.owner is not None and not r.done
+                            for r in job.queue.records.values())):
+                return True
+        return False
 
     def _worker_loop(self, name: str) -> None:
         while True:
@@ -438,7 +602,11 @@ class SamplingService:
                         return
                     task = self._next_task(name)
                     if task is None:
-                        self._cond.wait()
+                        # an idle lane wakes on notify (new work) — or on a
+                        # short poll when a straggler deadline might pass
+                        self._cond.wait(timeout=(self.steal_poll_s
+                                                 if self._stealable()
+                                                 else None))
             self._run_batch(*task, worker=name)
 
     def _batch_checkpoint(self, job: _Job, b: int) -> tuple[Optional[str], bool]:
@@ -455,7 +623,26 @@ class SamplingService:
             return ck, has_chain_checkpoint(ck)
         return job.checkpoint_dir, job.resume
 
+    def _run_batch_fleet(self, job: _Job, b: int, worker: str
+                         ) -> tuple[np.ndarray, dict]:
+        """Dispatch one claimed batch through the lane's persistent worker
+        process: serialize the v2 job-batch payload (base key + batch
+        identity; the worker folds the batch key itself) and block for the
+        streamed-back block."""
+        from repro.api.remote import build_payload
+
+        store = job.session._ensure_store()     # locks internally; does I/O
+        payload = build_payload(job.session.config, store, job.per_batch,
+                                job.key,
+                                job=JobBatch(job.job_id, b, job.n_batches))
+        out = self._pool.call(worker, payload)
+        w = self._pool.workers.get(worker)
+        return out, {"transport_worker": worker,
+                     "transport_worker_batches": w.batches if w else None}
+
     def _run_batch(self, job: _Job, b: int, worker: str) -> None:
+        from repro.runtime.transport import TransportError
+
         hook = self.batch_hook
         if hook is not None:
             hook(job, b, worker)       # may remove this worker / cancel
@@ -469,14 +656,34 @@ class SamplingService:
             # only costs one extra prefetch, the pre-fix behaviour)
             pipeline = job.queue.stats()["pending"] > 1
         ck = None
+        t0 = time.monotonic()
         try:
-            ck, resume = self._batch_checkpoint(job, b)
-            out, stats = job.session._execute_batch(
-                job.per_batch, job.key,
-                job=JobBatch(job.job_id, b, job.n_batches),
-                resume=resume, checkpoint_dir=ck,
-                stop_after_segments=job.stop_after_segments,
-                pipeline=pipeline)
+            if self._pool is not None:
+                out, stats = self._run_batch_fleet(job, b, worker)
+            else:
+                ck, resume = self._batch_checkpoint(job, b)
+                out, stats = job.session._execute_batch(
+                    job.per_batch, job.key,
+                    job=JobBatch(job.job_id, b, job.n_batches),
+                    resume=resume, checkpoint_dir=ck,
+                    stop_after_segments=job.stop_after_segments,
+                    pipeline=pipeline)
+        except TransportError:
+            # a LANE fault, not a job fault: the batch requeues (re-offered
+            # before fresh work) and the lane's worker process respawns —
+            # the recomputation is bit-identical (batch = f(seed, id))
+            with self._cond:
+                self._transport_faults += 1
+                if job.queue.records[b].owner == worker:
+                    job.queue.fail(worker)
+                self._cond.notify_all()
+                if self._closing or worker in self._removed:
+                    return
+            try:
+                self._pool.respawn(worker)
+            except OSError:
+                self.remove_worker(worker)     # can't respawn: retire lane
+            return
         except BaseException as e:     # noqa: BLE001 — reported via the job
             with self._cond:
                 if job.queue.records[b].owner == worker:
@@ -484,11 +691,15 @@ class SamplingService:
                     job.error = e
                 self._cond.notify_all()
             return
+        duration = time.monotonic() - t0
         with self._cond:
             if not job.queue.complete(b, worker=worker):
+                self._rejected_results += 1
                 return                 # ownership lost mid-compute: discard —
                                        # the requeued batch recomputes the
                                        # exact same block (batch = f(seed, id))
+            job.straggler.observe_completion(duration)
+            self._lane_batches[worker] = self._lane_batches.get(worker, 0) + 1
             if job.state == CANCELLED:
                 return
             job.blocks[b] = np.asarray(out)
@@ -502,14 +713,36 @@ class SamplingService:
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> dict:
-        """Service-wide snapshot: job states, coalescing, lanes."""
+        """Service-wide snapshot: job states, coalescing, lanes, queue
+        depth, admission backpressure, straggler and transport counters."""
         with self._cond:
             states: dict[str, int] = {}
+            queue_depth = 0
+            duplicates = 0
             for job in self._jobs.values():
                 states[job.state] = states.get(job.state, 0) + 1
-            return {"jobs": states, "sessions": len(self._sessions),
-                    "coalesced_jobs": self._coalesced,
-                    "workers": len(self.workers())}
+                if job.state in (PENDING, RUNNING):
+                    queue_depth += job.queue.stats()["pending"]
+                duplicates += job.straggler.duplicates
+            admitted, waiting, active_bytes = self._admission_view()
+            out = {"jobs": states, "sessions": len(self._sessions),
+                   "coalesced_jobs": self._coalesced,
+                   "workers": len(self.workers()),
+                   "queue_depth": queue_depth,
+                   "lane_batches": dict(self._lane_batches),
+                   "admission": {
+                       "budget_bytes": self.max_active_bytes,
+                       "active_model_bytes": active_bytes,
+                       "admitted_jobs": len(admitted),
+                       "queued_jobs": len(waiting),
+                       "backpressure": bool(waiting)},
+                   "stragglers": {
+                       "duplicates": duplicates, "steals": self._steals,
+                       "rejected_results": self._rejected_results}}
+            if self._pool is not None:
+                out["transport"] = dict(self._pool.stats(),
+                                        lane_faults=self._transport_faults)
+            return out
 
     def purge(self) -> int:
         """Drop finished (done/failed/cancelled) jobs from the service
@@ -531,7 +764,8 @@ class SamplingService:
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
         """Stop the lanes (running batches finish; pending jobs that never
-        completed report cancelled) and close service-owned sessions."""
+        completed report cancelled), reap fleet workers, and close
+        service-owned sessions."""
         with self._cond:
             if self._closing:
                 return
@@ -542,6 +776,11 @@ class SamplingService:
             self._cond.notify_all()
         for t in self._threads.values():
             t.join(timeout=300)
+        if self._pool is not None:
+            for name in list(self._threads):
+                self._pool.reap(name)
+            if self._owns_pool:
+                self._pool.close()
         for sess in self._sessions.values():
             sess.close()
         self._sessions.clear()

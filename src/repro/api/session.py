@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.api.backends import SampleRequest, get_backend
 from repro.api.config import SamplerConfig, SessionPlan, resolve_plan
-from repro.api.runtime import resolve_runtime
+from repro.api.runtime import ClusterRuntime, resolve_runtime
 from repro.core.mps import MPS
 from repro.data.gamma_store import GammaStore
 
@@ -54,8 +54,12 @@ class SamplingSession:
         self.config = config or SamplerConfig()
         self.mesh = mesh
         # the cluster runtime is session state (it may hold live transport
-        # handles); plans record only its name
+        # handles); plans record only its name.  A runtime resolved from a
+        # name here is session-owned (its persistent workers are reaped on
+        # close); an instance passed in stays the caller's
         self.runtime = resolve_runtime(self.config.runtime)
+        self._owns_runtime = not isinstance(self.config.runtime,
+                                            ClusterRuntime)
         self._mps: Optional[MPS] = None
         self._store: Optional[GammaStore] = None
         self._owns_store = False
@@ -301,6 +305,8 @@ class SamplingSession:
             import shutil
             shutil.rmtree(self._tmp_store_root, ignore_errors=True)
             self._tmp_store_root = None
+        if self._owns_runtime:
+            self.runtime.close()        # reap persistent transport workers
 
     def __enter__(self) -> "SamplingSession":
         return self

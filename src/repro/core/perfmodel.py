@@ -200,3 +200,21 @@ def min_macro_batch_for_overlap(w: Workload, hw: Hardware,
     per_sample_flops = 2.0 * w.chi * w.chi * w.d
     per_sample_t = per_sample_flops / (hw.peak_flops * efficiency)
     return int(t_io / per_sample_t) + 1
+
+
+def job_admission_cost(w: Workload, hw: Hardware, n_batches: int = 1,
+                       efficiency: float = 0.5) -> dict:
+    """Modeled footprint of one service job, for admission control.
+
+    ``resident_bytes`` is Eq. 3 for ONE active macro batch — what the job
+    pins on a device while any of its batches runs; batches of one job run
+    one-at-a-time per lane, so concurrency across *jobs*, not batches, is
+    what the admission budget must bound.  ``compute_s`` is the modeled
+    chain-walk time summed over the job's live batches — the scheduler
+    surfaces it so queued-job backpressure is interpretable (seconds of
+    modeled work waiting, not just a count)."""
+    return {
+        "resident_bytes": eq3_memory(w),
+        "compute_s": n_batches * w.n_sites * t_site_compute(
+            w, hw, w.macro_batch, efficiency),
+    }

@@ -88,4 +88,7 @@ def explain_plan(plan: StreamPlan, w: Workload, hw: Hardware, *,
         "segment_bytes": seg_bytes,
         "device_resident_bytes": 2 * seg_bytes + PM.eq3_memory(
             w, compute_bytes),
+        # what SamplingService admission control charges this workload
+        # (Eq. 3 resident bytes of one live batch + modeled walk seconds)
+        "admission": PM.job_admission_cost(w, hw, efficiency=efficiency),
     }

@@ -79,6 +79,10 @@ def main() -> None:
                          "with progress as they complete")
     ap.add_argument("--service-workers", type=int, default=1,
                     help="service submit lanes (elastic worker threads)")
+    ap.add_argument("--service-fleet", action="store_true",
+                    help="back every service lane with a persistent worker "
+                         "PROCESS (framed-pipe RPC, repro.runtime.transport)"
+                         " instead of an in-process thread")
     ap.add_argument("--stream", action="store_true",
                     help="segment-streamed engine (Γ from --store, §3.1)")
     ap.add_argument("--store", default=None,
@@ -91,7 +95,7 @@ def main() -> None:
     # the runtime decides where devices live; the mesh is derived from it
     # (a remote runtime dispatches the whole request — no local mesh)
     runtime = api.resolve_runtime(args.runtime)
-    mesh = (None if runtime.name == "remote"
+    mesh = (None if runtime.name == "remote" or args.service_fleet
             else runtime.mesh(args.model_parallel))
     print(f"runtime: {runtime.name} "
           f"(process {runtime.process_index}/{runtime.process_count})  "
@@ -132,6 +136,11 @@ def main() -> None:
     if runtime.name == "remote" and scheme not in ("auto", "seq"):
         print(f"runtime=remote resolves placement on the worker — "
               f"overriding scheme {scheme!r} to auto")
+        scheme = "auto"
+    if args.service_fleet and scheme not in ("auto", "seq"):
+        print(f"--service-fleet dispatches serialized job batches; workers "
+              f"resolve their own placement — overriding scheme "
+              f"{scheme!r} to auto")
         scheme = "auto"
     config = api.SamplerConfig(
         scheme=scheme,
@@ -182,18 +191,39 @@ def main() -> None:
             # EVERY n1 — a 1-batch job passes its key through unfolded
             # (service.batch_key), so fold batch 0's key here.
             job_key = jax.random.fold_in(base, 0) if n1 == 1 else base
-            with api.SamplingService(workers=args.service_workers) as svc:
+            # fleet lanes have no local chain walk — per-batch idempotence
+            # (skip_batches from the files on disk) is the restart story
+            ck_root = (None if args.service_fleet
+                       else os.path.join(args.out, "chain_ckpt"))
+            with api.SamplingService(workers=args.service_workers,
+                                     pool=args.service_fleet or None) as svc:
                 handle = svc.submit(
                     session, n_samples=args.samples, key=job_key,
                     macro_batches=n1, skip_batches=done,
-                    checkpoint_root=os.path.join(args.out, "chain_ckpt"))
+                    checkpoint_root=ck_root)
                 for b, block in handle.stream():
                     save_batch(b, block)
                     p = handle.progress
+                    st = svc.stats()
+                    adm = st["admission"]
+                    lanes = " ".join(
+                        f"{n}:{c}"
+                        for n, c in sorted(st["lane_batches"].items()))
                     print(f"[service] {p['done']}/{p['total']} batches "
                           f"(claims={p['claims']} requeues={p['requeues']} "
-                          f"lanes={p['workers']})", flush=True)
-                print("[service] final:", handle.status(), svc.stats())
+                          f"lanes={p['workers']}) queue_depth="
+                          f"{st['queue_depth']} backpressure="
+                          f"{'yes' if adm['backpressure'] else 'no'} "
+                          f"(admitted={adm['admitted_jobs']} queued="
+                          f"{adm['queued_jobs']}) per-lane: {lanes}",
+                          flush=True)
+                final = svc.stats()
+                print("[service] final:", handle.status(), final)
+                print(f"[service] per-lane batch counts: "
+                      f"{final['lane_batches']}  stragglers: "
+                      f"{final['stragglers']}" +
+                      (f"  transport: {final['transport']}"
+                       if args.service_fleet else ""), flush=True)
         else:
             session.run_queue(
                 queue, per_batch, base, worker="driver",

@@ -103,8 +103,13 @@ class WorkQueue:
         With ``worker`` given, a completion from a worker that no longer
         owns the batch (it was removed and the batch requeued) is rejected
         — the caller should discard its result and let the current owner's
-        identical recomputation land instead."""
+        identical recomputation land instead.  A batch completes at most
+        once: the second delivery of a duplicated batch (straggler
+        reissue, transport replay) reports False so it is never
+        double-counted."""
         r = self.records[b]
+        if r.done:
+            return False
         if worker is not None and r.owner != worker:
             return False
         r.done = True
@@ -113,6 +118,21 @@ class WorkQueue:
 
     def fail(self, w: str) -> None:
         self.remove_worker(w)
+
+    def steal(self, b: int, w: str, now: Optional[float] = None) -> bool:
+        """Reassign a reclaimed (unowned, not-done) batch to ``w`` — the
+        straggler-duplicate path.  Counts as a claim and drops the batch
+        from the re-offer FIFO, so ordinary ``claim`` calls won't hand the
+        same batch out a second time."""
+        r = self.records[b]
+        if r.done or r.owner is not None:
+            return False
+        if b in self._requeued:
+            self._requeued.remove(b)
+        if w not in self.workers:
+            self.add_worker(w)
+        self._hand_out(r, w, now)
+        return True
 
     def reclaim_stale(self, timeout: float, now: Optional[float] = None) -> list[int]:
         now = now if now is not None else time.monotonic()

@@ -32,14 +32,22 @@ class StragglerMitigator:
         return None if self._ewma is None else self.k * self._ewma
 
     def maybe_steal(self, idle_worker: str, now: Optional[float] = None) -> Optional[int]:
-        """Give an idle worker a stale batch to duplicate, if any is late."""
+        """Give an idle worker a stale batch to duplicate, if any is late.
+
+        ``reclaim_stale`` requeues every batch past the deadline (its old
+        owner loses the claim — a late completion is rejected by the
+        queue's ownership check); the first reclaimed batch is handed to
+        the idle worker via :meth:`WorkQueue.steal`, the rest re-offer
+        through normal claims."""
         if self.deadline is None:
             return None
-        stale = self.queue.reclaim_stale(self.deadline, now)
-        if not stale:
-            return None
-        b = stale[0]
-        r = self.queue.records[b]
-        r.owner, r.started_at = idle_worker, (now if now is not None else time.monotonic())
-        self.duplicates += 1
-        return b
+        for b in self.queue.reclaim_stale(self.deadline, now):
+            if self.queue.steal(b, idle_worker, now):
+                self.duplicates += 1
+                return b
+        return None
+
+    def stats(self) -> dict:
+        """Instrumentation snapshot (merged into job ``progress``)."""
+        return {"ewma_s": self._ewma, "deadline_s": self.deadline,
+                "duplicates": self.duplicates}

@@ -1,0 +1,276 @@
+"""Chaos helpers: fault injectors for the fleet transport and service.
+
+The fault-tolerance story of the service rests on one paper property —
+batch = f(seed, id), so any batch may be killed, delayed, duplicated, or
+dropped and the recomputation is bit-identical.  This module makes those
+faults *injectable* so tests exercise the claims instead of assuming them:
+
+* transport injectors (plug into ``WorkerPool.injectors``): each sees
+  every dispatch via ``before(worker, payload)`` and every result via
+  ``after(worker, payload, result)`` and may return ``"drop"`` (raise a
+  ``TransportError`` — lane fault, batch requeues) or ``"duplicate"``
+  (deliver the payload twice; the pool asserts both results agree
+  bit-for-bit);
+* :class:`KillLane` (plug into ``SamplingService.batch_hook``): removes
+  the lane that claims a chosen batch — mid-job worker loss, the queue
+  requeues its claims;
+* :func:`run_queue_script`: a deterministic interpreter for abstract
+  op sequences against a ``WorkQueue`` that enforces the queue invariants
+  after every op — the shared engine behind the seeded-random storm tests
+  (``tests/test_fleet.py``) and the hypothesis property tests
+  (``tests/test_property.py``).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _payload_batch(payload: dict):
+    job = payload.get("job") or {}
+    return job.get("batch_id")
+
+
+class _Matching:
+    """Base: match payloads by batch id (None = every batch), fire at most
+    ``times`` times (None = unlimited)."""
+
+    def __init__(self, batch_ids=None, times=1):
+        self.batch_ids = None if batch_ids is None else set(batch_ids)
+        self.remaining = times
+        self.fired: list = []       # (worker, batch_id) log
+
+    def _take(self, worker, payload) -> bool:
+        b = _payload_batch(payload)
+        if self.batch_ids is not None and b not in self.batch_ids:
+            return False
+        if self.remaining is not None and self.remaining <= 0:
+            return False
+        if self.remaining is not None:
+            self.remaining -= 1
+        self.fired.append((worker, b))
+        return True
+
+
+class DelayBatch(_Matching):
+    """Hold a matching dispatch for ``delay_s`` before it reaches the
+    worker — the straggler: its claim goes stale while the lane sleeps, so
+    an idle lane's EWMA-deadline reclaim fires and the late original's
+    completion is ownership-rejected."""
+
+    def __init__(self, batch_ids=None, delay_s=1.0, times=1):
+        super().__init__(batch_ids, times)
+        self.delay_s = delay_s
+
+    def before(self, worker, payload):
+        if self._take(worker, payload):
+            time.sleep(self.delay_s)
+        return None
+
+
+class HoldUntil(_Matching):
+    """Hold a matching dispatch until ``predicate()`` turns true (or
+    ``max_wait_s`` passes) — the *deterministic* straggler: the test can
+    pin the release to an observable event (e.g. "my batch was reclaimed")
+    instead of guessing sleep durations."""
+
+    def __init__(self, predicate, batch_ids=None, max_wait_s=60.0, times=1):
+        super().__init__(batch_ids, times)
+        self.predicate = predicate
+        self.max_wait_s = max_wait_s
+
+    def before(self, worker, payload):
+        if self._take(worker, payload):
+            t0 = time.monotonic()
+            while (not self.predicate()
+                   and time.monotonic() - t0 < self.max_wait_s):
+                time.sleep(0.01)
+        return None
+
+
+class DuplicateDelivery(_Matching):
+    """Deliver a matching payload twice (at-least-once transport).  The
+    pool asserts the two results are bit-identical — the idempotence the
+    whole design leans on."""
+
+    def before(self, worker, payload):
+        return "duplicate" if self._take(worker, payload) else None
+
+
+class DropDispatch(_Matching):
+    """Fail a matching dispatch before the worker sees it (lost request).
+    Surfaces as a ``TransportError``: lane fault, batch requeues."""
+
+    def before(self, worker, payload):
+        return "drop" if self._take(worker, payload) else None
+
+
+class DropResult(_Matching):
+    """Discard a matching result after the worker computed it (lost
+    response) — the worker did the work, the caller must still recompute,
+    and the bits must come out the same."""
+
+    def after(self, worker, payload, result):
+        return "drop" if self._take(worker, payload) else None
+
+
+class KillLane:
+    """``SamplingService.batch_hook``: remove the lane that claims batch
+    ``on_batch`` (fires once).  ``remove_worker`` requeues the victim's
+    claims and, in fleet mode, hard-kills its worker process — the full
+    mid-job node-loss scenario."""
+
+    def __init__(self, service, on_batch: int, job_id=None):
+        self.service = service
+        self.on_batch = on_batch
+        self.job_id = job_id
+        self.victim = None          # lane name once fired
+
+    def __call__(self, job, b, worker):
+        if self.victim is not None or b != self.on_batch:
+            return
+        if self.job_id is not None and job.job_id != self.job_id:
+            return
+        self.victim = worker
+        self.service.remove_worker(worker)
+
+
+class HookChain:
+    """Compose several batch_hook callables (service takes exactly one)."""
+
+    def __init__(self, *hooks):
+        self.hooks = list(hooks)
+
+    def __call__(self, job, b, worker):
+        for h in self.hooks:
+            h(job, b, worker)
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue op-script interpreter (shared by seeded and hypothesis tests)
+# ---------------------------------------------------------------------------
+
+class QueueInvariantError(AssertionError):
+    pass
+
+
+def run_queue_script(n_batches: int, ops) -> dict:
+    """Interpret an abstract op sequence against a fresh ``WorkQueue``,
+    enforcing the queue's invariants after every step, then drain to
+    completion.  Deterministic: time is a virtual counter, so identical
+    scripts replay identically.
+
+    Ops (``w`` is a small int naming a worker):
+
+    * ``("add", w)`` / ``("remove", w)`` — membership
+    * ``("claim", w)`` — worker claims; the interpreter records ownership
+    * ``("complete", w)`` — worker completes its oldest *believed* claim
+      (which may have been requeued from under it — the interpreter then
+      asserts the completion is REJECTED, never double-counted)
+    * ``("reclaim", t)`` — ``reclaim_stale(timeout=t)`` at the current
+      virtual time
+    * ``("tick",)`` — advance the virtual clock
+
+    Returns counters (counted completions per batch, rejections, …).
+    Raises :class:`QueueInvariantError` on: a lost batch, a double-counted
+    completion, or a requeue-FIFO fairness violation.
+    """
+    from repro.runtime.elastic import WorkQueue
+
+    q = WorkQueue(n_batches)
+    now = 0.0
+    counted: dict[int, int] = {}     # batch -> completions that counted
+    rejected = 0
+    believed: dict[str, list[int]] = {}   # worker -> claims it thinks it owns
+
+    def check(op):
+        # 1. conservation: every batch is exactly one of {done, owned,
+        #    unowned-pending}; nothing vanishes
+        seen = 0
+        for b, r in q.records.items():
+            states = [r.done, r.owner is not None and not r.done,
+                      r.owner is None and not r.done]
+            if sum(states) != 1:
+                raise QueueInvariantError(
+                    f"after {op}: batch {b} in impossible state {r}")
+            seen += 1
+        if seen != n_batches:
+            raise QueueInvariantError(
+                f"after {op}: {seen} records, expected {n_batches}")
+        # 2. no batch completed more than once
+        for b, n in counted.items():
+            if n > 1:
+                raise QueueInvariantError(
+                    f"after {op}: batch {b} completed {n} times")
+        # 3. a done batch never sits in the re-offer FIFO as live work
+        st = q.stats()
+        if st["done"] + st["pending"] != n_batches:
+            raise QueueInvariantError(f"after {op}: done+pending != total")
+
+    def live_requeued():
+        return [b for b in q._requeued
+                if q.records[b].owner is None and not q.records[b].done]
+
+    for op in ops:
+        kind = op[0]
+        if kind == "tick":
+            now += 1.0
+        elif kind == "add":
+            q.add_worker(f"w{op[1]}")
+        elif kind == "remove":
+            q.remove_worker(f"w{op[1]}")
+        elif kind == "claim":
+            w = f"w{op[1]}"
+            fifo = live_requeued()
+            b = q.claim(w, now=now)
+            if b is not None:
+                # fairness: requeued work re-offers FIFO before fresh
+                if fifo and b != fifo[0]:
+                    raise QueueInvariantError(
+                        f"after {op}: claimed {b}, but requeue FIFO head "
+                        f"was {fifo[0]} ({fifo})")
+                believed.setdefault(w, []).append(b)
+        elif kind == "complete":
+            w = f"w{op[1]}"
+            claims = believed.get(w, [])
+            if claims:
+                b = claims.pop(0)
+                owns = q.records[b].owner == w and not q.records[b].done
+                ok = q.complete(b, worker=w)
+                if ok != owns:
+                    raise QueueInvariantError(
+                        f"complete({b}, {w}) returned {ok} but ownership "
+                        f"was {owns}")
+                if ok:
+                    counted[b] = counted.get(b, 0) + 1
+                else:
+                    rejected += 1
+        elif kind == "reclaim":
+            q.reclaim_stale(float(op[1]), now=now)
+        else:
+            raise ValueError(f"unknown op {op!r}")
+        check(op)
+
+    # drain: one fresh worker must be able to finish everything that isn't
+    # done — if a batch were lost, this would hang; instead we bound it
+    for _ in range(4 * n_batches + 8):
+        if q.finished:
+            break
+        b = q.claim("drain", now=now)
+        if b is None:
+            # every pending batch is owned by someone who'll never return —
+            # reclaim them (timeout 0 = everything) and keep going
+            q.reclaim_stale(0.0, now=now + 1.0)
+            now += 2.0
+            continue
+        if not q.complete(b, worker="drain"):
+            raise QueueInvariantError(f"drain completion of {b} rejected")
+        counted[b] = counted.get(b, 0) + 1
+    if not q.finished:
+        lost = [b for b, r in q.records.items() if not r.done]
+        raise QueueInvariantError(f"batches lost (never completable): {lost}")
+    for b in range(n_batches):
+        if counted.get(b, 0) != 1:
+            raise QueueInvariantError(
+                f"batch {b} counted {counted.get(b, 0)} times, want exactly 1")
+    check(("drain",))
+    return {"counted": counted, "rejected": rejected, "stats": q.stats()}

@@ -112,3 +112,55 @@ def test_bucketize_dominates(buckets, data):
     buck = DB.bucketize(prof, buckets)
     assert np.all(buck >= prof)
     assert set(np.unique(buck)) <= set(buckets)
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue invariants under arbitrary interleavings (fleet control plane)
+# ---------------------------------------------------------------------------
+# The op vocabulary and the invariant checker live in tests/chaos.py
+# (run_queue_script), shared with the seeded-random storms in
+# tests/test_fleet.py so the same engine runs with and without hypothesis.
+
+_worker_ix = st.integers(0, 3)
+_queue_op = st.one_of(
+    st.tuples(st.just("add"), _worker_ix),
+    st.tuples(st.just("remove"), _worker_ix),
+    st.tuples(st.just("claim"), _worker_ix),
+    st.tuples(st.just("complete"), _worker_ix),
+    st.tuples(st.just("reclaim"), st.integers(0, 4)),
+    st.tuples(st.just("tick")),
+)
+
+
+@hypothesis.given(n_batches=st.integers(1, 12),
+                  ops=st.lists(_queue_op, max_size=150))
+def test_workqueue_never_loses_never_double_counts(n_batches, ops):
+    """Any interleaving of add/remove/claim/complete/reclaim_stale leaves
+    every batch completable exactly once: no batch is ever lost, no
+    completion is ever double-counted, and requeued work re-offers FIFO
+    before fresh work (checked op-by-op inside the script runner)."""
+    from chaos import run_queue_script
+
+    out = run_queue_script(n_batches, ops)
+    assert len(out["counted"]) == n_batches
+    assert all(v == 1 for v in out["counted"].values())
+
+
+@hypothesis.given(
+    durations=st.lists(st.floats(1e-3, 1e3, allow_nan=False,
+                                 allow_infinity=False),
+                       min_size=1, max_size=32),
+    k=st.floats(0.1, 10.0), alpha=st.floats(0.01, 1.0),
+)
+def test_straggler_ewma_bounded_by_observations(durations, k, alpha):
+    """The EWMA (and so the reclaim deadline) always stays inside the
+    [min, max] envelope of observed batch times, scaled by k — the
+    deadline can never run away from the data."""
+    from repro.runtime.elastic import WorkQueue
+    from repro.runtime.stragglers import StragglerMitigator
+
+    m = StragglerMitigator(WorkQueue(1), k=k, ewma_alpha=alpha)
+    for d in durations:
+        m.observe_completion(d)
+    assert min(durations) <= m._ewma <= max(durations)
+    assert m.deadline == pytest.approx(k * m._ewma)
