@@ -1,0 +1,179 @@
+"""Gateway bench: what the HTTP front door costs — and what the result
+cache buys back.
+
+Two paper-facing numbers:
+
+* **requests/s, cold vs cache-hit** — a burst of distinct jobs (every
+  request computes) vs the same burst repeated (every request streams
+  cached bytes).  The ratio is the content-address dividend: restart-exact
+  sampling (batch = f(seed, id)) makes results pure values, so the cache
+  serves bit-identical blocks without touching a device.
+* **time-to-first-block, HTTP vs in-process** — the wire tax: the same
+  k-batch job through ``JobHandle.stream`` in-process and through the
+  chunked-HTTP frame stream; the delta is gateway + localhost HTTP, which
+  should be negligible against the macro-batch compute it fronts.
+
+Rows (common.emit): `cold_burst` / `hit_burst` with requests/s derived,
+`first_block_http` / `first_block_inproc` with the latency ratio.  Each
+full run appends a `gateway` record to the BENCH trajectory
+(``benchmarks/BENCH.json``); CI smoke passes ``--json ""`` so ephemeral
+runners never mutate the tracked history.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_gateway.py [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import common
+from repro import api
+from repro.core import mps as M
+from repro.data.gamma_store import GammaStore
+from repro.runtime import transport
+from repro.serve import Gateway, ResultCache
+
+
+def _build_store(sites: int, chi: int, d: int) -> str:
+    root = tempfile.mkdtemp(prefix="fastmps_bench_gateway_")
+    mps = M.random_linear_mps(jax.random.key(0), sites, chi, d)
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        store.write_mps(mps)
+    return root
+
+
+class _Exact:
+    def __init__(self, resp):
+        self.resp = resp
+
+    def read(self, n):
+        out = b""
+        while len(out) < n:
+            chunk = self.resp.read(n - len(out))
+            if not chunk:
+                break
+            out += chunk
+        return out
+
+
+def _submit(conn, store, n, seed, k):
+    conn.request("POST", "/v1/jobs", json.dumps(
+        {"store": store, "n_samples": n, "seed": seed, "macro_batches": k}),
+        {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    out = json.loads(resp.read())
+    assert resp.status == 201, out
+    return out
+
+
+def _drain_stream(conn, gid, first_block_at=None):
+    conn.request("GET", f"/v1/jobs/{gid}/stream")
+    resp = conn.getresponse()
+    rx = _Exact(resp)
+    n_blocks = 0
+    while True:
+        head = json.loads(transport.read_frame(rx))
+        if head["kind"] == "block":
+            transport.read_frame(rx)
+            if n_blocks == 0 and first_block_at is not None:
+                first_block_at.append(time.perf_counter())
+            n_blocks += 1
+        else:
+            assert head["kind"] == "end", head
+            break
+    resp.read()
+    return n_blocks
+
+
+def bench_burst(gw, conn, store, jobs, n, seeds) -> float:
+    t0 = time.perf_counter()
+    gids = [_submit(conn, store, n, seed, 1)["id"] for seed in seeds]
+    for gid in gids:
+        _drain_stream(conn, gid)
+    return time.perf_counter() - t0
+
+
+def bench_first_block(svc, gw, conn, store, n, k, seed
+                      ) -> tuple[float, float]:
+    """(http_ttfb_s, inproc_ttfb_s) of the same cold k-batch job."""
+    marks = []
+    t0 = time.perf_counter()
+    gid = _submit(conn, store, n, seed, k)["id"]
+    _drain_stream(conn, gid, first_block_at=marks)
+    http_ttfb = marks[0] - t0
+    t0 = time.perf_counter()
+    h = svc.submit(store, api.SamplerConfig(), n_samples=n,
+                   key=jax.random.key(seed + 1), macro_batches=k)
+    for _b, _blk in h.stream(timeout=600):
+        inproc_ttfb = time.perf_counter() - t0
+        break
+    h.result(timeout=600)
+    return http_ttfb, inproc_ttfb
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=common.BENCH_JSON,
+                    help='trajectory file; "" disables the append')
+    args = ap.parse_args()
+    sites, chi, d = (8, 4, 3) if args.smoke else (32, 16, 3)
+    jobs = 4 if args.smoke else 16
+    n = 16 if args.smoke else 256
+    k = 4
+
+    store = _build_store(sites, chi, d)
+    cache_dir = tempfile.mkdtemp(prefix="fastmps_bench_gwcache_")
+    common.header()
+    try:
+        with api.SamplingService(workers=2) as svc, \
+                Gateway(svc, cache=ResultCache(cache_dir=cache_dir)) as gw:
+            host, port = gw._server.server_address[:2]
+            conn = http.client.HTTPConnection(host, port)
+            # prime the jit cache so cold measures scheduling, not XLA —
+            # both variants: single-batch (burst) and k-batch (TTFB; the
+            # multi-batch path jits its own pipelined walk)
+            _drain_stream(conn, _submit(conn, store, n, 9999, 1)["id"])
+            _drain_stream(conn, _submit(conn, store, n * k, 9998, k)["id"])
+
+            seeds = list(range(jobs))
+            cold_s = bench_burst(gw, conn, store, jobs, n, seeds)
+            hit_s = bench_burst(gw, conn, store, jobs, n, seeds)
+            assert gw.cache.stats()["hits"] >= jobs
+            common.emit("cold_burst", cold_s / jobs,
+                        f"{jobs / cold_s:.1f} req/s")
+            common.emit("hit_burst", hit_s / jobs,
+                        f"{jobs / hit_s:.1f} req/s")
+
+            http_ttfb, inproc_ttfb = bench_first_block(
+                svc, gw, conn, store, n * k, k, seed=777)
+            common.emit("first_block_http", http_ttfb, "")
+            common.emit("first_block_inproc", inproc_ttfb,
+                        f"http/inproc {http_ttfb / inproc_ttfb:.2f}x")
+
+            common.append_bench_record(
+                args.json, "gateway",
+                {"sites": sites, "chi": chi, "d": d, "jobs": jobs,
+                 "n_samples": n, "macro_batches": k, "smoke": args.smoke},
+                cold_req_s=jobs / cold_s, hit_req_s=jobs / hit_s,
+                cache_speedup=cold_s / hit_s,
+                ttfb_http_s=http_ttfb, ttfb_inproc_s=inproc_ttfb,
+                http_overhead_x=http_ttfb / inproc_ttfb)
+            conn.close()
+    finally:
+        shutil.rmtree(store, ignore_errors=True)
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

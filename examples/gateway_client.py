@@ -1,0 +1,142 @@
+"""Pure-stdlib client for the FastMPS sampling gateway.
+
+No repro import, no third-party packages — ``http.client`` + the frame
+protocol re-derived from its spec (8-byte big-endian length prefix; npy
+block payloads), so any process with Python can consume the gateway.
+
+Submit a job, stream its blocks, save the concatenated samples:
+
+  python examples/gateway_client.py --url http://127.0.0.1:8752 \
+      --store /tmp/gw_demo --samples 64 --seed 7 --macro-batches 4 \
+      --api-key alice-key --config '{"segment_len": 4}' --out samples.npy
+
+Or just poke the server:
+
+  python examples/gateway_client.py --url ... --stats
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import struct
+import sys
+import urllib.parse
+from http.client import HTTPConnection
+
+_LEN = struct.Struct(">Q")     # the gateway's frame prefix (PR 6 codec)
+
+
+def _read_exact(resp, n: int) -> bytes:
+    """A chunked HTTPResponse's read(n) may return short — loop it."""
+    out = b""
+    while len(out) < n:
+        chunk = resp.read(n - len(out))
+        if not chunk:
+            raise ConnectionError("stream closed mid-frame")
+        out += chunk
+    return out
+
+
+def read_frame(resp) -> bytes:
+    (n,) = _LEN.unpack(_read_exact(resp, _LEN.size))
+    return _read_exact(resp, n)
+
+
+def _connect(url: str) -> tuple[HTTPConnection, str]:
+    u = urllib.parse.urlparse(url)
+    return HTTPConnection(u.hostname, u.port or 80), u.path.rstrip("/")
+
+
+def _request(conn, method, path, body=None, api_key=None):
+    headers = {"Content-Type": "application/json"}
+    if api_key:
+        headers["x-api-key"] = api_key
+    conn.request(method, path,
+                 None if body is None else json.dumps(body), headers)
+    resp = conn.getresponse()
+    payload = json.loads(resp.read() or b"{}")
+    if resp.status >= 400:
+        raise SystemExit(f"HTTP {resp.status}: {payload.get('error')}"
+                         + (f" (Retry-After: {resp.getheader('Retry-After')})"
+                            if resp.status == 429 else ""))
+    return payload
+
+
+def stream_blocks(conn, base: str, job_id: str, api_key=None):
+    """Yield (batch_id, np-like array) per streamed block.  Loads npy
+    payloads via a minimal header parse so numpy stays optional; with
+    numpy installed the real ``np.load`` is used."""
+    headers = {"x-api-key": api_key} if api_key else {}
+    conn.request("GET", f"{base}/v1/jobs/{job_id}/stream", None, headers)
+    resp = conn.getresponse()
+    if resp.status != 200:
+        raise SystemExit(f"HTTP {resp.status}: {resp.read()[:200]}")
+    while True:
+        head = json.loads(read_frame(resp))
+        if head["kind"] == "block":
+            yield head["batch_id"], read_frame(resp)
+        elif head["kind"] == "end":
+            resp.read()        # drain the chunked terminator (keep-alive)
+            return
+        else:
+            raise SystemExit(f"server error: {head.get('error')}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--url", required=True, help="gateway base URL")
+    ap.add_argument("--api-key", default=None)
+    ap.add_argument("--store", help="GammaStore path (server-side)")
+    ap.add_argument("--samples", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--macro-batches", type=int, default=1)
+    ap.add_argument("--config", default="{}",
+                    help="JSON SamplerConfig overrides")
+    ap.add_argument("--out", default=None, help="write samples here (.npy)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print /v1/stats and exit")
+    args = ap.parse_args(argv)
+
+    conn, base = _connect(args.url)
+    if args.stats:
+        print(json.dumps(_request(conn, "GET", f"{base}/v1/stats"), indent=2))
+        return 0
+    if not args.store:
+        ap.error("--store is required to submit")
+
+    sub = _request(conn, "POST", f"{base}/v1/jobs",
+                   {"store": args.store, "n_samples": args.samples,
+                    "seed": args.seed, "macro_batches": args.macro_batches,
+                    "config": json.loads(args.config)},
+                   api_key=args.api_key)
+    print(f"job {sub['id']}: cache={sub['cache']} state={sub['state']}")
+
+    try:
+        import numpy as np
+    except ImportError:
+        np = None
+    frames = []
+    for batch_id, frame in stream_blocks(conn, base, sub["id"],
+                                         api_key=args.api_key):
+        print(f"  block {batch_id}: {len(frame)} bytes")
+        frames.append(frame)
+    status = _request(conn, "GET", f"{base}/v1/jobs/{sub['id']}",
+                      api_key=args.api_key)
+    print(f"job {sub['id']}: state={status['state']} "
+          f"blocks={status['blocks_done']}/{status['n_batches']}")
+    if np is not None:
+        blocks = [np.load(io.BytesIO(f), allow_pickle=False) for f in frames]
+        samples = np.concatenate(blocks, axis=0)
+        print(f"samples: shape={samples.shape} dtype={samples.dtype}")
+        if args.out:
+            np.save(args.out, samples)
+            print(f"wrote {args.out}")
+    elif args.out:
+        with open(args.out, "wb") as f:   # raw npy bytes of block 0 only
+            f.write(frames[0])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -199,7 +199,7 @@ class JobHandle:
         with svc._cond:
             if self._job.state in (DONE, FAILED, CANCELLED):
                 return self._job.state == CANCELLED
-            self._job.state = CANCELLED
+            svc._finish(self._job, CANCELLED)
             svc._cond.notify_all()
             return True
 
@@ -263,12 +263,23 @@ class SamplingService:
     observed).  ``max_active_bytes`` — perfmodel admission budget
     (``None`` = unlimited).  ``steal_poll_s`` — how often an idle lane
     re-checks for stale batches when everything is claimed.
+
+    ``observer`` is the telemetry seam (``repro.obs.metrics``): an
+    optional callable invoked as ``observer(event, **fields)`` for
+    ``job_submit`` / ``job_finished(state=...)`` /
+    ``batch_done(duration_s=..., stats=...)`` / ``steal`` /
+    ``rejected_result`` / ``lane_fault`` / ``queue_{claim,requeue,
+    complete,steal}`` (per-job WorkQueue events, prefix-forwarded).
+    Observer errors are swallowed — telemetry must never perturb
+    scheduling.  Also settable after construction (``svc.observer =``).
     """
 
     def __init__(self, *, workers: int = 1, pool=None,
                  straggler_k: Optional[float] = 3.0,
                  steal_poll_s: float = 0.05,
-                 max_active_bytes: Optional[float] = None):
+                 max_active_bytes: Optional[float] = None,
+                 observer=None):
+        self.observer = observer
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._jobs: dict[int, _Job] = {}
@@ -298,6 +309,30 @@ class SamplingService:
         self.batch_hook = None
         for _ in range(workers):
             self.add_worker()
+
+    @property
+    def pool(self):
+        """The fleet :class:`~repro.runtime.transport.WorkerPool` backing
+        the lanes, or None for thread lanes (telemetry binders hook its
+        ``observer`` here)."""
+        return self._pool
+
+    def _emit(self, event: str, **fields) -> None:
+        if self.observer is not None:
+            try:
+                self.observer(event, **fields)
+            except Exception:          # noqa: BLE001 — see class docstring
+                pass
+
+    def _finish(self, job: _Job, state: str) -> None:
+        """Set a terminal job state (caller holds the lock) + telemetry."""
+        job.state = state
+        self._emit("job_finished", state=state)
+
+    def _queue_observer(self, event: str, **fields) -> None:
+        """Per-job WorkQueue events, forwarded with a ``queue_`` prefix so
+        one bound observer sees the whole scheduling surface."""
+        self._emit("queue_" + event, **fields)
 
     # -- membership (elastic worker lanes) -----------------------------------
     def add_worker(self, name: Optional[str] = None) -> str:
@@ -464,7 +499,7 @@ class SamplingService:
         with self._cond:
             if self._closing:
                 raise RuntimeError("service is closed")
-            queue = WorkQueue(macro_batches)
+            queue = WorkQueue(macro_batches, observer=self._queue_observer)
             job = _Job(job_id=next(self._seq), session=session,
                        n_samples=n_samples, per_batch=per_batch,
                        n_batches=macro_batches, key=key, priority=priority,
@@ -477,10 +512,11 @@ class SamplingService:
                        resume=resume, checkpoint_dir=checkpoint_dir,
                        stop_after_segments=stop_after_segments,
                        checkpoint_root=checkpoint_root)
+            self._emit("job_submit")
             for b in skip:
                 job.queue.complete(b)
             if job.queue.finished:
-                job.state = DONE
+                self._finish(job, DONE)
             self._jobs[job.job_id] = job
             self._order.append(job.job_id)
             self._order.sort(key=lambda j: (-self._jobs[j].priority, j))
@@ -575,6 +611,7 @@ class SamplingService:
                 b = job.straggler.maybe_steal(worker)
                 if b is not None:
                     self._steals += 1
+                    self._emit("steal")
                     return job, b
         return None
 
@@ -674,6 +711,7 @@ class SamplingService:
             # the recomputation is bit-identical (batch = f(seed, id))
             with self._cond:
                 self._transport_faults += 1
+                self._emit("lane_fault")
                 if job.queue.records[b].owner == worker:
                     job.queue.fail(worker)
                 self._cond.notify_all()
@@ -687,7 +725,7 @@ class SamplingService:
         except BaseException as e:     # noqa: BLE001 — reported via the job
             with self._cond:
                 if job.queue.records[b].owner == worker:
-                    job.state = FAILED
+                    self._finish(job, FAILED)
                     job.error = e
                 self._cond.notify_all()
             return
@@ -695,17 +733,19 @@ class SamplingService:
         with self._cond:
             if not job.queue.complete(b, worker=worker):
                 self._rejected_results += 1
+                self._emit("rejected_result")
                 return                 # ownership lost mid-compute: discard —
                                        # the requeued batch recomputes the
                                        # exact same block (batch = f(seed, id))
             job.straggler.observe_completion(duration)
             self._lane_batches[worker] = self._lane_batches.get(worker, 0) + 1
+            self._emit("batch_done", duration_s=duration, stats=stats)
             if job.state == CANCELLED:
                 return
             job.blocks[b] = np.asarray(out)
             job.batch_stats[b] = stats
             if job.queue.finished and job.state == RUNNING:
-                job.state = DONE
+                self._finish(job, DONE)
             self._cond.notify_all()
         if ck is not None and job.checkpoint_root:
             import shutil
@@ -713,36 +753,60 @@ class SamplingService:
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> dict:
-        """Service-wide snapshot: job states, coalescing, lanes, queue
-        depth, admission backpressure, straggler and transport counters."""
+        """Service-wide snapshot with a STABLE schema — every key below is
+        present on every call, zero-valued on an idle service, so scrapers
+        (``repro.obs.metrics``, the gateway's ``/v1/stats``) never branch
+        on missing keys:
+
+        * ``jobs`` — count per lifecycle state, **all five states always
+          present**: ``{"pending": 0, "running": 0, "done": 0,
+          "failed": 0, "cancelled": 0, ...}``
+        * ``sessions`` / ``coalesced_jobs`` — coalescing cache size, hits
+        * ``workers`` — live lane count
+        * ``queue_depth`` — pending batches over all active jobs
+        * ``lane_batches`` — batches completed per lane name
+        * ``admission`` — ``budget_bytes`` (None = unlimited),
+          ``active_model_bytes``, ``admitted_jobs``, ``queued_jobs``,
+          ``backpressure`` (bool)
+        * ``stragglers`` — ``duplicates``, ``steals``, ``rejected_results``
+        * ``transport`` — ALWAYS present: ``enabled`` (fleet mode?) plus
+          the :meth:`WorkerPool.stats` keys (``workers``/``spawned``/
+          ``reaped``/``faults``/``batches``/``dispatch_bytes``, zeroed for
+          thread lanes) and ``lane_faults`` (faults absorbed by lanes).
+        """
         with self._cond:
-            states: dict[str, int] = {}
+            states = {s: 0 for s in
+                      (PENDING, RUNNING, DONE, FAILED, CANCELLED)}
             queue_depth = 0
             duplicates = 0
             for job in self._jobs.values():
-                states[job.state] = states.get(job.state, 0) + 1
+                states[job.state] += 1
                 if job.state in (PENDING, RUNNING):
                     queue_depth += job.queue.stats()["pending"]
                 duplicates += job.straggler.duplicates
             admitted, waiting, active_bytes = self._admission_view()
-            out = {"jobs": states, "sessions": len(self._sessions),
-                   "coalesced_jobs": self._coalesced,
-                   "workers": len(self.workers()),
-                   "queue_depth": queue_depth,
-                   "lane_batches": dict(self._lane_batches),
-                   "admission": {
-                       "budget_bytes": self.max_active_bytes,
-                       "active_model_bytes": active_bytes,
-                       "admitted_jobs": len(admitted),
-                       "queued_jobs": len(waiting),
-                       "backpressure": bool(waiting)},
-                   "stragglers": {
-                       "duplicates": duplicates, "steals": self._steals,
-                       "rejected_results": self._rejected_results}}
             if self._pool is not None:
-                out["transport"] = dict(self._pool.stats(),
-                                        lane_faults=self._transport_faults)
-            return out
+                transport = dict(self._pool.stats(), enabled=True)
+            else:
+                transport = {"enabled": False, "workers": 0, "spawned": 0,
+                             "reaped": 0, "faults": 0, "batches": {},
+                             "dispatch_bytes": 0}
+            transport["lane_faults"] = self._transport_faults
+            return {"jobs": states, "sessions": len(self._sessions),
+                    "coalesced_jobs": self._coalesced,
+                    "workers": len(self.workers()),
+                    "queue_depth": queue_depth,
+                    "lane_batches": dict(self._lane_batches),
+                    "admission": {
+                        "budget_bytes": self.max_active_bytes,
+                        "active_model_bytes": active_bytes,
+                        "admitted_jobs": len(admitted),
+                        "queued_jobs": len(waiting),
+                        "backpressure": bool(waiting)},
+                    "stragglers": {
+                        "duplicates": duplicates, "steals": self._steals,
+                        "rejected_results": self._rejected_results},
+                    "transport": transport}
 
     def purge(self) -> int:
         """Drop finished (done/failed/cancelled) jobs from the service
@@ -772,7 +836,7 @@ class SamplingService:
             self._closing = True
             for job in self._jobs.values():
                 if job.state in (PENDING, RUNNING):
-                    job.state = CANCELLED
+                    self._finish(job, CANCELLED)
             self._cond.notify_all()
         for t in self._threads.values():
             t.join(timeout=300)

@@ -88,6 +88,7 @@ class GammaStore:
         self.io_bytes = 0          # instrumentation for the benches
         self.io_seconds = 0.0      # worker+sync read wall time
         self.payload_reads = 0     # Γ payload reads (meta() probes excluded)
+        self._digest: Optional[str] = None
         self._n_sites = sum(1 for f in os.listdir(root)
                             if f.startswith("site_") and f.endswith(".npz"))
 
@@ -101,6 +102,7 @@ class GammaStore:
                  two_byte=np.array(g16.dtype.itemsize == 2))
         if fresh:
             self._n_sites += 1
+        self._digest = None            # content changed: recompute lazily
 
     def write_mps(self, mps) -> None:
         for i in range(mps.n_sites):
@@ -115,6 +117,25 @@ class GammaStore:
         """Cached count (kept current by put()) — a listdir per call would be
         O(M) filenames on every segment walk of an M-site chain."""
         return self._n_sites
+
+    def digest(self) -> str:
+        """Content digest of the materialized store: sha256 over the sorted
+        ``site_*.npz`` file names and bytes.  This identifies *these tensor
+        files* — npz archives embed zip timestamps, so re-writing identical
+        tensors yields a new digest; that is conservative in the right
+        direction for result caching (a stale hit is impossible, a spurious
+        miss just recomputes).  Cached; invalidated by :meth:`put`."""
+        if self._digest is None:
+            import hashlib
+
+            h = hashlib.sha256()
+            for f in sorted(f for f in os.listdir(self.root)
+                            if f.startswith("site_") and f.endswith(".npz")):
+                h.update(f.encode())
+                with open(os.path.join(self.root, f), "rb") as fh:
+                    h.update(fh.read())
+            self._digest = h.hexdigest()
+        return self._digest
 
     def meta(self, i: int = 0) -> tuple[int, ...]:
         """Γ shape of site i from the npz header — no tensor payload read."""

@@ -1,4 +1,5 @@
-"""Continuous-batching LM serving driver.
+"""Continuous-batching LM serving driver (the §5 analogy demo — the MPS
+sampling gateway proper is ``repro.launch.gateway`` / ``repro.serve``).
 
 The paper's §5 analogy made executable in the other direction: the
 FastMPS macro-batch work queue becomes a *request* queue, the left
@@ -16,7 +17,7 @@ Design (vLLM-lite, single jitted step):
     mask is independent.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --smoke \
+  PYTHONPATH=src python -m repro.launch.serve_lm --arch deepseek-7b --smoke \
       --requests 32 --batch 8 --max-new 24
 """
 from __future__ import annotations

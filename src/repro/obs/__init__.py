@@ -1,0 +1,12 @@
+"""Observability: the unified telemetry subsystem (``repro.obs.metrics``).
+
+Counters, gauges, and histograms with Prometheus text exposition — the one
+place the stats scattered across ``SamplingService.stats()``, the kernel
+autotuner cache, the transport fault counters, and the per-walk engine I/O
+consolidate (served at ``GET /metrics`` by ``repro.serve.gateway``).
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               instrument_dispatch, instrument_service)
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "instrument_dispatch", "instrument_service"]

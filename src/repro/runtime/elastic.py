@@ -47,16 +47,31 @@ class WorkQueue:
       attribute the batch to its current owner.
     * ``add_worker`` just makes the new worker eligible to claim.
     * ``reclaim_stale(timeout)`` is the straggler hook (see stragglers.py).
-    * ``stats()`` is the progress snapshot service layers surface.
+    * ``stats()`` is the progress snapshot service layers surface — a flat
+      dict with a STABLE schema: ``total``/``done``/``claimed``/
+      ``requeued``/``pending``/``claims``/``requeues``/``workers``, every
+      key always present (zero on an idle queue).
+    * ``observer`` is the telemetry seam (``repro.obs.metrics``): an
+      optional callable invoked as ``observer(event, batch=b, worker=w)``
+      for ``claim`` / ``requeue`` / ``complete`` / ``steal``.  Observer
+      errors are swallowed — telemetry must never perturb scheduling.
     """
 
-    def __init__(self, n_batches: int, seed: int = 0):
+    def __init__(self, n_batches: int, seed: int = 0, observer=None):
         self.seed = seed
+        self.observer = observer
         self.records = {b: BatchRecord(b) for b in range(n_batches)}
         self.workers: set[str] = set()
         self._requeued: list[int] = []     # FIFO of re-offer-first batch ids
         self._claims = 0
         self._requeues = 0
+
+    def _emit(self, event: str, **fields) -> None:
+        if self.observer is not None:
+            try:
+                self.observer(event, **fields)
+            except Exception:              # noqa: BLE001 — see class docstring
+                pass
 
     # -- membership ----------------------------------------------------------
     def add_worker(self, w: str) -> None:
@@ -67,6 +82,7 @@ class WorkQueue:
         if r.batch_id not in self._requeued:
             self._requeued.append(r.batch_id)
             self._requeues += 1
+            self._emit("requeue", batch=r.batch_id)
 
     def remove_worker(self, w: str) -> None:
         self.workers.discard(w)
@@ -79,6 +95,7 @@ class WorkQueue:
         r.owner = w
         r.started_at = now if now is not None else time.monotonic()
         self._claims += 1
+        self._emit("claim", batch=r.batch_id, worker=w)
         return r.batch_id
 
     def claim(self, w: str, now: Optional[float] = None) -> Optional[int]:
@@ -114,6 +131,7 @@ class WorkQueue:
             return False
         r.done = True
         r.owner = None
+        self._emit("complete", batch=b, worker=worker)
         return True
 
     def fail(self, w: str) -> None:
@@ -132,6 +150,7 @@ class WorkQueue:
         if w not in self.workers:
             self.add_worker(w)
         self._hand_out(r, w, now)
+        self._emit("steal", batch=b, worker=w)
         return True
 
     def reclaim_stale(self, timeout: float, now: Optional[float] = None) -> list[int]:

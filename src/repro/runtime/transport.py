@@ -275,7 +275,8 @@ class WorkerPool:
     """
 
     def __init__(self, python: Optional[str] = None,
-                 env: Optional[dict] = None, timeout: float = 600.0):
+                 env: Optional[dict] = None, timeout: float = 600.0,
+                 observer=None):
         self.python = python
         self.env = env
         self.timeout = timeout
@@ -284,6 +285,17 @@ class WorkerPool:
         self.spawned = 0
         self.reaped = 0
         self.faults = 0               # TransportErrors surfaced to callers
+        # telemetry seam (repro.obs.metrics): optional callable invoked as
+        # observer(event, ...) for transport_{spawn,reap,fault,dispatch,
+        # result}; errors swallowed — telemetry never perturbs dispatch
+        self.observer = observer
+
+    def _emit(self, event: str, **fields) -> None:
+        if self.observer is not None:
+            try:
+                self.observer(event, **fields)
+            except Exception:          # noqa: BLE001 — see __init__
+                pass
 
     def spawn(self, name: str) -> WorkerProcess:
         if name in self.workers and self.workers[name].alive:
@@ -292,6 +304,7 @@ class WorkerPool:
                           timeout=self.timeout)
         self.workers[name] = w
         self.spawned += 1
+        self._emit("transport_spawn", worker=name)
         return w
 
     def reap(self, name: str, kill: bool = False) -> None:
@@ -300,6 +313,7 @@ class WorkerPool:
             return
         (w.kill if kill else w.close)()
         self.reaped += 1
+        self._emit("transport_reap", worker=name)
 
     def respawn(self, name: str) -> WorkerProcess:
         """Replace a dead/hung worker under its stable lane name."""
@@ -316,6 +330,8 @@ class WorkerPool:
             if "drop" in actions:
                 raise TransportError(
                     f"payload to {name!r} dropped by injector")
+            self._emit("transport_dispatch", worker=name,
+                       nbytes=len(json.dumps(payload)))
             out = w.call(payload)
             if "duplicate" in actions:          # delivered twice: idempotent?
                 again = w.call(payload)
@@ -328,9 +344,11 @@ class WorkerPool:
                     if inj.after(name, payload, out) == "drop":
                         raise TransportError(
                             f"result from {name!r} dropped by injector")
+            self._emit("transport_result", worker=name, nbytes=out.nbytes)
             return out
         except TransportError:
             self.faults += 1
+            self._emit("transport_fault", worker=name)
             raise
 
     def stats(self) -> dict:

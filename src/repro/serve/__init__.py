@@ -1,0 +1,24 @@
+"""`repro.serve` — the multi-tenant HTTP front door over `SamplingService`.
+
+Three orthogonal pieces, composable and individually testable:
+
+* :mod:`repro.serve.cache` — content-addressed result cache.  The paper's
+  restart-exactness (batch = f(seed, id)) makes sampling a *pure function*
+  of (store bytes, resolved config, seed, n_samples, macro_batches) — so
+  identical requests are served from cached bytes, and a request identical
+  to one *currently running* attaches to its stream instead of recomputing.
+* :mod:`repro.serve.tenancy` — API-key → tenant resolution, per-tenant
+  job/byte quotas (429 + Retry-After on exhaustion), and fair-share
+  priority (a tenant's effective priority decays with its active jobs).
+* :mod:`repro.serve.gateway` — the stdlib ``ThreadingHTTPServer`` gateway:
+  job submission/status/cancel as JSON, sample blocks streamed over
+  chunked HTTP in the PR 6 frame codec, ``/v1/stats`` and Prometheus
+  ``/metrics`` for scrapers.
+"""
+from repro.serve.cache import ResultCache, cache_key
+from repro.serve.gateway import Gateway
+from repro.serve.tenancy import (QuotaExceeded, Tenant, TenantTable,
+                                 UnknownTenant)
+
+__all__ = ["Gateway", "QuotaExceeded", "ResultCache", "Tenant",
+           "TenantTable", "UnknownTenant", "cache_key"]

@@ -1,0 +1,440 @@
+"""Gateway e2e: the HTTP front door over a real socket.
+
+Every test talks to a live ``ThreadingHTTPServer`` through
+``http.client`` — no handler mocking — because the claims under test are
+wire-level: streamed bytes bit-identical to the in-process service,
+quota 429s with Retry-After, one execution per content-address no matter
+how many requests ask, and a Prometheus scrape that reflects it all.
+
+THE acceptance test (``test_acceptance_two_tenants_one_execution``): two
+tenants submit the same job over HTTP → it executes once; the streamed
+bytes are bit-identical to an in-process ``SamplingService`` run; a third
+over-quota request gets 429; ``GET /metrics`` exposes nonzero
+queue/admission/cache counters.
+"""
+import http.client
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from chaos import DropResult
+from repro import api
+from repro.api.service import SamplingService, batch_key
+from repro.data.gamma_store import GammaStore
+from repro.obs import MetricsRegistry, instrument_service
+from repro.runtime import transport
+from repro.serve import (Gateway, QuotaExceeded, ResultCache, Tenant,
+                         TenantTable, cache_key)
+from repro.serve.cache import Entry
+
+
+@pytest.fixture(scope="module")
+def chain(tmp_path_factory, linear_mps_10x6):
+    root = str(tmp_path_factory.mktemp("gw_gamma"))
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        store.write_mps(linear_mps_10x6)
+    return root
+
+
+# ---------------------------------------------------------------------------
+# a minimal real-socket client
+# ---------------------------------------------------------------------------
+
+class _Exact:
+    """read-exactly adapter: a chunked HTTPResponse's read(n) may return
+    short across chunk boundaries; the frame codec needs exact reads."""
+
+    def __init__(self, resp):
+        self.resp = resp
+
+    def read(self, n):
+        out = b""
+        while len(out) < n:
+            chunk = self.resp.read(n - len(out))
+            if not chunk:
+                break
+            out += chunk
+        return out
+
+
+class Client:
+    def __init__(self, gw, api_key=None):
+        host, port = gw._server.server_address[:2]
+        self.conn = http.client.HTTPConnection(host, port)
+        self.api_key = api_key
+
+    def _headers(self):
+        return {"x-api-key": self.api_key} if self.api_key else {}
+
+    def request(self, method, path, body=None):
+        self.conn.request(method, path,
+                          None if body is None else json.dumps(body),
+                          self._headers())
+        resp = self.conn.getresponse()
+        return resp.status, dict(resp.getheaders()), \
+            json.loads(resp.read() or b"{}")
+
+    def submit(self, store, n_samples, seed, macro_batches=1, config=None,
+               **extra):
+        body = {"store": store, "n_samples": n_samples, "seed": seed,
+                "macro_batches": macro_batches, **extra}
+        if config is not None:
+            body["config"] = config
+        return self.request("POST", "/v1/jobs", body)
+
+    def stream_frames(self, gid):
+        """[(batch_id, npy frame bytes), ...] + the terminal header."""
+        self.conn.request("GET", f"/v1/jobs/{gid}/stream", None,
+                          self._headers())
+        resp = self.conn.getresponse()
+        assert resp.status == 200
+        rx = _Exact(resp)
+        frames, terminal = [], None
+        while terminal is None:
+            head = json.loads(transport.read_frame(rx))
+            if head["kind"] == "block":
+                frames.append((head["batch_id"], transport.read_frame(rx)))
+            else:
+                terminal = head
+        resp.read()                        # drain the chunked terminator
+        return frames, terminal
+
+    def stream_samples(self, gid):
+        frames, terminal = self.stream_frames(gid)
+        assert terminal["kind"] == "end", terminal
+        return np.concatenate(
+            [transport.array_from_frame(f) for _, f in frames], axis=0)
+
+    def close(self):
+        self.conn.close()
+
+
+def _inprocess_frames(root, n_samples, key, macro_batches):
+    """What the gateway MUST put on the wire: the in-process service's
+    blocks through the same frame serializer."""
+    with SamplingService(workers=1) as svc:
+        h = svc.submit(root, n_samples=n_samples, key=key,
+                       macro_batches=macro_batches)
+        return [(b, transport.array_to_frame(blk))
+                for b, blk in h.stream(timeout=300)]
+
+
+# ---------------------------------------------------------------------------
+# submit / stream / status / cancel / validation
+# ---------------------------------------------------------------------------
+
+def test_submit_stream_status_and_validation(chain):
+    with SamplingService(workers=2) as svc, Gateway(svc) as gw:
+        c = Client(gw)
+        code, _, sub = c.submit(chain, 16, seed=3, macro_batches=4)
+        assert code == 201 and sub["cache"] == "miss"
+        samples = c.stream_samples(sub["id"])
+        ref_frames = _inprocess_frames(chain, 16, jax.random.key(3), 4)
+        ref = np.concatenate(
+            [transport.array_from_frame(f) for _, f in ref_frames], axis=0)
+        assert np.array_equal(samples, ref)
+
+        code, _, st = c.request("GET", f"/v1/jobs/{sub['id']}")
+        assert code == 200 and st["state"] == "done"
+        assert st["blocks_done"] == 4 and st["progress"]["done"] == 4
+
+        # the error surface: 404, unknown fields, bad splits, bad JSON
+        code, _, err = c.request("GET", "/v1/jobs/j999")
+        assert code == 404 and "no such job" in err["error"]
+        code, _, err = c.submit(chain, 16, seed=0, bogus=1)
+        assert code == 400 and "bogus" in err["error"]
+        code, _, err = c.submit(chain, 16, seed=0,
+                                config={"made_up_knob": 2})
+        assert code == 400 and "made_up_knob" in err["error"]
+        code, _, err = c.submit(chain, 10, seed=0, macro_batches=4)
+        assert code == 400 and "divide" in err["error"]
+        code, _, err = c.submit(chain, 16, seed=0,
+                                config={"runtime": "local"})
+        assert code == 400 and "server-side" in err["error"]
+        code, _, err = c.submit("/nonexistent/store", 16, seed=0)
+        assert code == 400 and "store" in err["error"]
+        c.conn.request("POST", "/v1/jobs", b"not json{")
+        resp = c.conn.getresponse()
+        assert resp.status == 400
+        resp.read()
+        c.close()
+
+
+def test_cancel_running_job_streams_error_frame(chain):
+    with SamplingService(workers=1) as svc, Gateway(svc) as gw:
+        release = threading.Event()
+        svc.batch_hook = lambda job, b, w: release.wait(timeout=60)
+        c = Client(gw)
+        code, _, sub = c.submit(chain, 16, seed=9, macro_batches=4)
+        assert code == 201
+        code, _, out = c.request("DELETE", f"/v1/jobs/{sub['id']}")
+        assert code == 200 and out["cancelled"] is True
+        release.set()
+        frames, terminal = c.stream_frames(sub["id"])
+        assert terminal["kind"] == "error"
+        code, _, st = c.request("GET", f"/v1/jobs/{sub['id']}")
+        assert st["state"] == "cancelled"
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# quotas / tenancy
+# ---------------------------------------------------------------------------
+
+def test_quota_exhaustion_429_and_recovery(chain):
+    table = TenantTable([Tenant(name="t", api_key="tk", max_active_jobs=1)])
+    with SamplingService(workers=1) as svc, \
+            Gateway(svc, tenants=table) as gw:
+        release = threading.Event()
+        svc.batch_hook = lambda job, b, w: release.wait(timeout=60)
+        c = Client(gw, api_key="tk")
+        code, _, first = c.submit(chain, 8, seed=1)
+        assert code == 201
+        # second DISTINCT job while the first executes: over quota
+        code, headers, err = c.submit(chain, 8, seed=2)
+        assert code == 429
+        assert int(headers["Retry-After"]) >= 1
+        assert "admission" in err          # service backpressure snapshot
+        # unknown key → 401 (table is closed once tenants exist)
+        bad = Client(gw, api_key="wrong")
+        code, _, _ = bad.submit(chain, 8, seed=3)
+        assert code == 401
+        bad.close()
+        # recovery: drain the first job, the slot frees, resubmit lands
+        # (the quota releases on the owner pump's epilogue — a hair after
+        # the last block reaches the stream — so poll briefly)
+        release.set()
+        assert c.stream_samples(first["id"]).shape == (8, 10)
+        deadline = time.monotonic() + 30
+        while True:
+            code, _, third = c.submit(chain, 8, seed=2)
+            if code == 201 or time.monotonic() > deadline:
+                break
+            time.sleep(0.05)
+        assert code == 201
+        c.stream_samples(third["id"])
+        c.close()
+    assert table.stats()["rejected"] == 1
+
+
+def test_fair_share_priority_decays_with_active_jobs():
+    table = TenantTable([Tenant(name="a", api_key="ak", priority=10)])
+    t = table.resolve("ak")
+    assert table.begin_job(t, 100) == 10       # idle tenant: base priority
+    assert table.begin_job(t, 100) == 9        # each active job demotes
+    assert table.begin_job(t, 100) == 8
+    table.end_job(t, 100)
+    assert table.begin_job(t, 100) == 8
+    with pytest.raises(QuotaExceeded):
+        table.begin_job(Tenant(name="q", api_key="q", max_active_bytes=10),
+                        100)
+
+
+# ---------------------------------------------------------------------------
+# the result cache: hits, in-flight dedup, disk, LRU
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_serves_bit_identical_bytes_one_execution(chain, tmp_path):
+    cache = ResultCache(cache_dir=str(tmp_path / "cache"))
+    with SamplingService(workers=2) as svc, \
+            Gateway(svc, cache=cache) as gw:
+        c = Client(gw)
+        code, _, first = c.submit(chain, 16, seed=5, macro_batches=2)
+        assert first["cache"] == "miss"
+        frames1, t1 = c.stream_frames(first["id"])
+        code, _, second = c.submit(chain, 16, seed=5, macro_batches=2)
+        assert second["cache"] == "hit"
+        frames2, t2 = c.stream_frames(second["id"])
+        assert frames1 == frames2              # the exact same bytes
+        assert svc.stats()["jobs"]["done"] == 1    # ONE execution
+        c.close()
+    # disk round-trip: a fresh gateway + fresh service, same cache dir —
+    # the hit comes off disk, no execution at all
+    cache2 = ResultCache(cache_dir=str(tmp_path / "cache"))
+    with SamplingService(workers=1) as svc2, \
+            Gateway(svc2, cache=cache2) as gw2:
+        c2 = Client(gw2)
+        code, _, again = c2.submit(chain, 16, seed=5, macro_batches=2)
+        assert again["cache"] == "hit"
+        frames3, _ = c2.stream_frames(again["id"])
+        assert frames3 == frames1
+        assert svc2.stats()["jobs"]["done"] == 0
+        c2.close()
+
+
+def test_inflight_dedup_second_request_attaches(chain):
+    with SamplingService(workers=1) as svc, Gateway(svc) as gw:
+        release = threading.Event()
+        svc.batch_hook = lambda job, b, w: release.wait(timeout=60)
+        c1, c2 = Client(gw), Client(gw)
+        code, _, first = c1.submit(chain, 16, seed=11, macro_batches=4)
+        assert first["cache"] == "miss"
+        code, _, second = c2.submit(chain, 16, seed=11, macro_batches=4)
+        assert second["cache"] == "attach"     # dedup while RUNNING
+        release.set()
+        s2 = c2.stream_samples(second["id"])   # attacher first: it streams
+        s1 = c1.stream_samples(first["id"])    # the owner's blocks live
+        assert np.array_equal(s1, s2)
+        assert svc.stats()["jobs"]["done"] == 1
+        assert gw.cache.stats()["attaches"] == 1
+        c1.close()
+        c2.close()
+
+
+def test_cache_lru_evicts_under_byte_budget(tmp_path):
+    cache = ResultCache(cache_dir=str(tmp_path / "lru"), max_bytes=3000)
+    filler = np.zeros((16, 16), np.float32)        # ~1 KiB per entry
+    for i in range(5):
+        e, status = cache.get_or_begin(f"key-{i:02d}", 1)
+        assert status == "miss"
+        e.publish(0, transport.array_to_frame(filler))
+        e.finish()
+        cache.seal(e)
+        time.sleep(0.01)                           # distinct LRU mtimes
+    st = cache.stats()
+    assert st["evictions"] >= 2
+    assert st["disk_bytes"] <= 3000
+    # the survivors are the most recently used
+    surviving = {k for k, _, _ in cache._disk_entries()}
+    assert "key-04" in surviving and "key-00" not in surviving
+
+
+def test_cache_key_separates_every_input():
+    base = ("store", "cfg", 0, 64, 4)
+    keys = {cache_key(*base),
+            cache_key("store2", "cfg", 0, 64, 4),
+            cache_key("store", "cfg2", 0, 64, 4),
+            cache_key("store", "cfg", 1, 64, 4),
+            cache_key("store", "cfg", 0, 128, 4),
+            cache_key("store", "cfg", 0, 64, 2)}
+    assert len(keys) == 6
+
+
+def test_failed_entry_does_not_poison_the_key():
+    cache = ResultCache()
+    e, status = cache.get_or_begin("k", 1)
+    assert status == "miss"
+    e.finish(error="boom")
+    cache.seal(e)
+    with pytest.raises(RuntimeError, match="boom"):
+        list(e.stream())
+    e2, status = cache.get_or_begin("k", 1)
+    assert status == "miss" and e2 is not e
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance test
+# ---------------------------------------------------------------------------
+
+def test_acceptance_two_tenants_one_execution(chain, tmp_path):
+    table = TenantTable([
+        Tenant(name="alice", api_key="alice-key", priority=5),
+        Tenant(name="bob", api_key="bob-key", priority=5),
+        Tenant(name="carol", api_key="carol-key", max_active_jobs=1)])
+    registry = MetricsRegistry()
+    cache = ResultCache(cache_dir=str(tmp_path / "cache"))
+    with SamplingService(workers=1) as svc, \
+            Gateway(svc, tenants=table, cache=cache,
+                    registry=registry) as gw:
+        instrument_service(svc, registry)
+        release = threading.Event()
+        svc.batch_hook = lambda job, b, w: release.wait(timeout=120)
+
+        alice = Client(gw, api_key="alice-key")
+        bob = Client(gw, api_key="bob-key")
+        carol = Client(gw, api_key="carol-key")
+
+        # two tenants, the same job: one miss, one attach — one execution
+        code, _, a = alice.submit(chain, 16, seed=21, macro_batches=4)
+        assert code == 201 and a["cache"] == "miss"
+        code, _, b = bob.submit(chain, 16, seed=21, macro_batches=4)
+        assert code == 201 and b["cache"] == "attach"
+
+        # carol holds one executing job; her next is over quota → 429
+        code, _, c1 = carol.submit(chain, 8, seed=99)
+        assert code == 201
+        code, headers, err = carol.submit(chain, 8, seed=100)
+        assert code == 429 and int(headers["Retry-After"]) >= 1
+
+        release.set()
+        a_frames, a_term = alice.stream_frames(a["id"])
+        b_frames, b_term = bob.stream_frames(b["id"])
+        assert a_term["kind"] == "end" and b_term["kind"] == "end"
+        assert a_frames == b_frames            # byte-for-byte shared stream
+
+        # bit-identical to the in-process SamplingService run — at the
+        # BYTES level, not just the decoded arrays
+        assert a_frames == _inprocess_frames(chain, 16, jax.random.key(21), 4)
+        assert svc.stats()["jobs"]["done"] >= 1
+        assert cache.stats()["misses"] == 2
+        assert cache.stats()["attaches"] == 1
+
+        carol.stream_samples(c1["id"])
+        # /metrics: nonzero queue / admission / cache counters
+        conn = alice.conn
+        conn.request("GET", "/metrics")
+        resp = conn.getresponse()
+        assert resp.status == 200
+        assert resp.getheader("Content-Type").startswith("text/plain")
+        text = resp.read().decode()
+
+        def value(sample):
+            for line in text.splitlines():
+                if line.startswith(sample + " "):
+                    return float(line.split()[-1])
+            raise AssertionError(f"{sample} not exposed:\n{text}")
+
+        # 2 service submissions: alice's miss + carol's job — bob's attach
+        # deliberately never reaches the service
+        assert value("fastmps_jobs_submitted_total") == 2
+        assert value('fastmps_queue_events_total{event="claim"}') >= 5
+        assert value('fastmps_queue_events_total{event="complete"}') >= 5
+        assert value('fastmps_cache_events_total{event="miss"}') >= 2
+        assert value('fastmps_cache_events_total{event="attach"}') >= 1
+        assert value('fastmps_tenant_rejections_total') == 1
+        assert value('fastmps_http_requests_total{route="submit",'
+                     'code="429"}') == 1
+        assert value("fastmps_admission_queued_jobs") >= 0
+        assert value("fastmps_admission_backpressure") >= 0
+        assert value("fastmps_batches_total") >= 5
+        for c in (alice, bob, carol):
+            c.close()
+
+
+# ---------------------------------------------------------------------------
+# telemetry under chaos (fleet lanes — worker processes, slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_metrics_expose_transport_faults_after_chaos(chain):
+    """A chaos-injected fleet run (dropped result → lane fault → requeue)
+    surfaces in the Prometheus scrape: transport fault counters nonzero,
+    result still served."""
+    registry = MetricsRegistry()
+    with SamplingService(workers=2, pool=True, straggler_k=None) as svc, \
+            Gateway(svc, registry=registry) as gw:
+        instrument_service(svc, registry)
+        svc._pool.injectors.append(DropResult(batch_ids={2}))
+        c = Client(gw)
+        code, _, sub = c.submit(chain, 96, seed=7, macro_batches=4)
+        assert code == 201
+        samples = c.stream_samples(sub["id"])
+        ref = np.concatenate([transport.array_from_frame(f) for _, f in
+                              _inprocess_frames(chain, 96,
+                                                jax.random.key(7), 4)])
+        assert np.array_equal(samples, ref)
+        c.conn.request("GET", "/metrics")
+        resp = c.conn.getresponse()
+        text = resp.read().decode()
+        assert 'fastmps_transport_lane_faults_total 1' in text \
+            or 'fastmps_transport_lane_faults_total 2' in text
+        assert 'fastmps_transport_events_total{event="fault"}' in text
+        assert 'fastmps_transport_events_total{event="dispatch"}' in text
+        assert "fastmps_transport_dispatch_bytes_total" in text
+        c.close()

@@ -6,7 +6,7 @@ pytestmark = pytest.mark.slow
 import numpy as np
 
 from repro import configs
-from repro.launch.serve import serve
+from repro.launch.serve_lm import serve
 from repro.models import transformer as T
 
 
