@@ -87,7 +87,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--url", required=True, help="gateway base URL")
     ap.add_argument("--api-key", default=None)
-    ap.add_argument("--store", help="GammaStore path (server-side)")
+    ap.add_argument("--store", help="GammaStore: a name under the "
+                    "gateway's --store-root, or a server-side path in "
+                    "trusted mode")
     ap.add_argument("--samples", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--macro-batches", type=int, default=1)

@@ -7,8 +7,14 @@ cache, and the `repro.obs` metrics registry — behind one
 
 Usage:
   PYTHONPATH=src python -m repro.launch.gateway --port 8752 --workers 2 \
-      --tenants tenants.json --cache-dir /tmp/fastmps_cache \
+      --tenants tenants.json --store-root /data/stores \
+      --cache-dir /tmp/fastmps_cache \
       --max-cache-bytes 1000000000 --max-active-bytes 8e9
+
+With ``--store-root``, clients name stores *relative* to that directory
+(``{"store": "demo_chain"}``) and can never reach outside it; without
+it the gateway runs in trusted single-user mode where ``store`` is a
+server path.  Always set a root when serving untrusted tenants.
 
 Smoke/CI mode (bind an ephemeral port, build a demo store, exit after N
 seconds):
@@ -47,6 +53,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tenants", default=None,
                     help="tenants.json (see repro.serve.tenancy); "
                          "omitted = open single-tenant mode")
+    ap.add_argument("--store-root", default=None,
+                    help="confine client store names beneath this "
+                         "directory; omitted = trusted mode (store is a "
+                         "server path)")
     ap.add_argument("--cache-dir", default=None,
                     help="result-cache disk store (omitted = memory only)")
     ap.add_argument("--max-cache-bytes", type=float, default=None,
@@ -75,6 +85,9 @@ def main(argv=None) -> int:
 
     tenants = (TenantTable.from_json(args.tenants) if args.tenants
                else TenantTable())
+    if args.tenants and not args.store_root:
+        print("warning: --tenants without --store-root lets every tenant "
+              "name arbitrary server paths as stores", file=sys.stderr)
     cache = ResultCache(cache_dir=args.cache_dir,
                         max_bytes=(None if args.max_cache_bytes is None
                                    else int(args.max_cache_bytes)))
@@ -85,7 +98,8 @@ def main(argv=None) -> int:
                              max_active_bytes=args.max_active_bytes) as svc:
         instrument_service(svc, registry)
         with Gateway(svc, tenants=tenants, cache=cache, registry=registry,
-                     host=args.host, port=args.port) as gw:
+                     host=args.host, port=args.port,
+                     store_root=args.store_root) as gw:
             print(f"gateway listening on {gw.url}", flush=True)
             deadline = (None if args.serve_s is None
                         else time.monotonic() + args.serve_s)

@@ -22,8 +22,11 @@ construction, not by re-serialization.
 The optional disk store persists finished entries under
 ``cache_dir/<key>/batch_*.npy`` (+ ``meta.json``) with an LRU byte budget:
 when ``max_bytes`` would be exceeded, least-recently-used entries are
-evicted whole.  Memory holds only running/recently-finished entries; a
-restart re-serves from disk.
+evicted whole.  Memory holds only running entries plus at most
+``max_memory_entries`` finished ones (its own LRU, enforced at seal/load
+time): an evicted finished entry re-serves from disk when a store is
+configured, or becomes a miss in memory-only mode — either way a
+long-running cache cannot accumulate every unique job's bytes.
 """
 from __future__ import annotations
 
@@ -69,6 +72,7 @@ class Entry:
         self.error: Optional[str] = None
         self.blocks: dict[int, bytes] = {}
         self.created = time.time()
+        self.last_used = time.monotonic()   # memory-LRU recency
         self._cond = threading.Condition()
 
     def publish(self, batch_id: int, frame: bytes) -> None:
@@ -120,9 +124,11 @@ class ResultCache:
     disk_bytes, always present)."""
 
     def __init__(self, cache_dir: Optional[str] = None,
-                 max_bytes: Optional[int] = None):
+                 max_bytes: Optional[int] = None,
+                 max_memory_entries: int = 64):
         self.cache_dir = cache_dir
         self.max_bytes = max_bytes
+        self.max_memory_entries = max_memory_entries
         if cache_dir:
             os.makedirs(cache_dir, exist_ok=True)
         self._lock = threading.Lock()
@@ -190,9 +196,13 @@ class ResultCache:
             d = self._dir(key)
             if not os.path.isdir(d) or key.endswith(".tmp"):
                 continue
-            size = sum(os.path.getsize(os.path.join(d, f))
-                       for f in os.listdir(d))
-            out.append((key, os.path.getmtime(d), size))
+            try:
+                size = sum(os.path.getsize(os.path.join(d, f))
+                           for f in os.listdir(d))
+                mtime = os.path.getmtime(d)
+            except OSError:
+                continue       # rmtree'd by a concurrent _evict mid-scan
+            out.append((key, mtime, size))
         out.sort(key=lambda t: t[1])
         return out
 
@@ -208,6 +218,21 @@ class ResultCache:
             total -= size
             self.evictions += 1
             self._emit("cache_evict")
+
+    def _evict_memory_locked(self) -> None:
+        """Bound the in-memory table (caller holds ``_lock``): beyond
+        ``max_memory_entries`` finished entries, drop the least recently
+        used.  RUNNING entries are exempt — dropping one would break the
+        in-flight dedup contract.  Streams already attached to a dropped
+        entry keep their own reference; only the table forgets it."""
+        finished = [(e.last_used, k) for k, e in self._entries.items()
+                    if e.state != RUNNING]
+        excess = len(finished) - self.max_memory_entries
+        if excess <= 0:
+            return
+        finished.sort()
+        for _, key in finished[:excess]:
+            del self._entries[key]
 
     # -- the one entry point -------------------------------------------------
     def get_or_begin(self, key: str, n_batches: int
@@ -225,6 +250,7 @@ class ResultCache:
             entry = self._entries.get(key)
             if entry is not None:
                 if entry.state == DONE_:
+                    entry.last_used = time.monotonic()
                     self.hits += 1
                     self._emit("cache_hit")
                     return entry, "hit"
@@ -237,6 +263,7 @@ class ResultCache:
                 disk = self._load_disk(key)
                 if disk is not None:
                     self._entries[key] = disk
+                    self._evict_memory_locked()
                     self.hits += 1
                     self._emit("cache_hit")
                     return disk, "hit"
@@ -248,11 +275,15 @@ class ResultCache:
 
     def seal(self, entry: Entry) -> None:
         """Owner's epilogue after ``finish()``: persist a DONE entry to the
-        disk store (under the LRU budget); drop a FAILED entry from the
-        table so the next identical request recomputes."""
+        disk store (under the LRU budget) and re-bound the in-memory
+        table; drop a FAILED entry from the table so the next identical
+        request recomputes."""
         if entry.state == DONE_:
             if self.cache_dir:
                 self._store_disk(entry)
+            with self._lock:
+                entry.last_used = time.monotonic()
+                self._evict_memory_locked()
         else:
             with self._lock:
                 if self._entries.get(entry.key) is entry:

@@ -14,14 +14,27 @@ Routes (JSON in/out unless noted)::
     GET    /v1/stats             service + cache + tenant snapshot
     GET    /metrics              Prometheus text exposition (repro.obs)
 
+**Authorization**: every ``/v1/jobs/<id>`` route resolves ``x-api-key``
+exactly like submit does (401 on an unknown key) and answers 404 unless
+the job belongs to the caller's tenant — a job id is never a capability,
+and ids are unguessable tokens (``secrets.token_hex``) as defense in
+depth.  The open (no tenants file) table maps every caller to the same
+``anonymous`` tenant, so single-user deployments see no auth at all.
+
 **Submission body** — a whitelist, unknown fields are a 400 (a typo'd
 tuning knob must fail loudly, not silently sample with defaults)::
 
-    {"store": "/path/to/gamma_store",   # required
+    {"store": "demo_chain",             # required (see store_root below)
      "n_samples": 4096,                 # required
      "seed": 7,                         # required (job key = key(seed))
      "macro_batches": 4,                # optional, default 1
      "config": {"segment_len": 4, ...}} # optional SamplerConfig overrides
+
+With ``store_root`` configured (``--store-root``), ``store`` is a
+relative name resolved strictly beneath that directory — absolute paths
+and ``..`` escapes are a 400, so clients can never point the server at
+arbitrary host filesystem.  Without a root (trusted single-user mode)
+``store`` is a server-side path, as before.
 
 ``config`` keys are validated against the full ``SamplerConfig`` schema
 via the v2 wire codec (``remote.config_to_dict`` round-trip), minus the
@@ -44,9 +57,9 @@ hit-served request has nothing to cancel.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import json
 import os
+import secrets
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -114,15 +127,17 @@ class Gateway:
 
     def __init__(self, service, *, tenants: Optional[TenantTable] = None,
                  cache: Optional[ResultCache] = None, registry=None,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 store_root: Optional[str] = None, max_records: int = 4096):
         self.service = service
         self.tenants = tenants or TenantTable()
         self.cache = cache or ResultCache()
         self.registry = registry
+        self.store_root = store_root
+        self.max_records = max_records
         self._host, self._port = host, port
         self._lock = threading.Lock()
         self._records: dict[str, _Record] = {}
-        self._seq = itertools.count()
         self._digest_cache: dict[str, tuple[tuple, str, int]] = {}
         self._server: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
@@ -199,10 +214,31 @@ class Gateway:
         self.close()
 
     # -- store identity ------------------------------------------------------
+    def _resolve_store(self, name: str) -> str:
+        """Client ``store`` field → server path.  With a configured
+        ``store_root`` the name must resolve strictly beneath it (realpath
+        containment, so ``..`` and symlink escapes both fail); without one
+        (trusted single-user mode) the name is used as a path verbatim."""
+        if self.store_root is None:
+            return name
+        if os.path.isabs(name):
+            raise _HTTPError(
+                400, f"store {name!r} must be a name relative to the "
+                     f"configured store root, not an absolute path")
+        if ".." in name.replace("\\", "/").split("/"):
+            raise _HTTPError(400, f"store {name!r} escapes the store root")
+        root = os.path.realpath(self.store_root)
+        real = os.path.realpath(os.path.join(root, name))
+        if real != root and not real.startswith(root + os.sep):
+            raise _HTTPError(400, f"store {name!r} escapes the store root")
+        return real
+
     def _store_identity(self, path: str) -> tuple[str, int]:
         """(content digest, n_sites) of the store at ``path``, cached per
-        realpath and invalidated when any site file's (name, mtime, size)
-        changes — submissions against an unchanged store don't re-hash."""
+        realpath and invalidated when any site file's (name, mtime_ns,
+        size, inode) changes — submissions against an unchanged store
+        don't re-hash.  ``st_mtime_ns + st_ino`` (not coarse mtime) so an
+        atomic rewrite with identical size can't serve a stale digest."""
         real = os.path.realpath(path)
         if not os.path.isdir(real):
             raise _HTTPError(400, f"store {path!r} is not a directory")
@@ -210,8 +246,9 @@ class Gateway:
                        if f.startswith("site_") and f.endswith(".npz"))
         if not sites:
             raise _HTTPError(400, f"store {path!r} holds no site_*.npz")
-        sig = tuple((f, os.path.getmtime(os.path.join(real, f)),
-                     os.path.getsize(os.path.join(real, f))) for f in sites)
+        stats = [os.stat(os.path.join(real, f)) for f in sites]
+        sig = tuple((f, st.st_mtime_ns, st.st_size, st.st_ino)
+                    for f, st in zip(sites, stats))
         with self._lock:
             hit = self._digest_cache.get(real)
             if hit is not None and hit[0] == sig:
@@ -280,6 +317,7 @@ class Gateway:
             raise _HTTPError(401, str(e))
         store, cfg, cfg_digest, n_samples, seed, macro_batches = \
             self._parse_body(body)
+        store = self._resolve_store(store)
         store_digest, n_sites = self._store_identity(store)
         nbytes = n_samples * n_sites * _SAMPLE_ITEMSIZE
         try:
@@ -294,7 +332,7 @@ class Gateway:
         key = cache_key(store_digest, cfg_digest, seed, n_samples,
                         macro_batches)
         entry, status = self.cache.get_or_begin(key, macro_batches)
-        gid = f"j{next(self._seq)}"
+        gid = f"j{secrets.token_hex(12)}"     # unguessable: ids leak nothing
         handle = None
         if status == "miss":
             try:
@@ -319,7 +357,26 @@ class Gateway:
                       n_batches=macro_batches, created=time.time())
         with self._lock:
             self._records[gid] = rec
+            self._purge_records_locked()
         return rec.snapshot()
+
+    def _purge_records_locked(self) -> None:
+        """Bound ``_records``: beyond ``max_records``, drop the oldest
+        *terminal* (done/failed/cancelled) records — insertion order is
+        creation order.  Live records are never dropped, so the table can
+        exceed the bound only while that many jobs are actually in
+        flight."""
+        excess = len(self._records) - self.max_records
+        if excess <= 0:
+            return
+        drop = []
+        for gid, rec in self._records.items():
+            if len(drop) >= excess:
+                break
+            if rec.state() in ("done", "failed", "cancelled"):
+                drop.append(gid)
+        for gid in drop:
+            del self._records[gid]
 
     def _pump(self, handle, entry, tenant, nbytes: int) -> None:
         """Owner loop of a cache-miss execution: service blocks → cache
@@ -335,15 +392,23 @@ class Gateway:
             self.tenants.end_job(tenant, nbytes)
 
     # -- the other routes ----------------------------------------------------
-    def record(self, gid: str) -> _Record:
+    def record(self, gid: str, api_key: Optional[str]) -> _Record:
+        """gid → record, tenant-scoped: the caller's key must resolve
+        (401) and the record must belong to that tenant — a foreign
+        tenant's job id answers 404, indistinguishable from absent, so
+        ids leak neither results nor existence."""
+        try:
+            tenant = self.tenants.resolve(api_key)
+        except UnknownTenant as e:
+            raise _HTTPError(401, str(e))
         with self._lock:
             rec = self._records.get(gid)
-        if rec is None:
+        if rec is None or rec.tenant_name != tenant.name:
             raise _HTTPError(404, f"no such job {gid!r}")
         return rec
 
-    def cancel(self, gid: str) -> dict:
-        rec = self.record(gid)
+    def cancel(self, gid: str, api_key: Optional[str]) -> dict:
+        rec = self.record(gid, api_key)
         if rec.handle is not None:
             ok = rec.handle.cancel()
         else:
@@ -465,20 +530,23 @@ class _Handler(BaseHTTPRequestHandler):
             body = json.loads(self.rfile.read(n) or b"{}")
         except (ValueError, TypeError):
             raise _HTTPError(400, "body is not valid JSON")
-        out = self.gateway.submit(body, self.headers.get("x-api-key"))
+        out = self.gateway.submit(body, self._api_key())
         self._json(201, out)
         return 201
 
+    def _api_key(self) -> Optional[str]:
+        return self.headers.get("x-api-key")
+
     def _do_status(self, gid: str) -> int:
-        self._json(200, self.gateway.record(gid).snapshot())
+        self._json(200, self.gateway.record(gid, self._api_key()).snapshot())
         return 200
 
     def _do_cancel(self, gid: str) -> int:
-        self._json(200, self.gateway.cancel(gid))
+        self._json(200, self.gateway.cancel(gid, self._api_key()))
         return 200
 
     def _do_stream(self, gid: str) -> int:
-        rec = self.gateway.record(gid)
+        rec = self.gateway.record(gid, self._api_key())
         self.send_response(200)
         self.send_header("Content-Type", "application/x-fastmps-frames")
         self.send_header("Transfer-Encoding", "chunked")

@@ -14,6 +14,7 @@ queue/admission/cache counters.
 """
 import http.client
 import json
+import os
 import threading
 import time
 
@@ -184,6 +185,91 @@ def test_cancel_running_job_streams_error_frame(chain):
 
 
 # ---------------------------------------------------------------------------
+# authorization: job routes are tenant-scoped
+# ---------------------------------------------------------------------------
+
+def test_job_routes_are_tenant_scoped(chain):
+    """A job id is not a capability: another tenant's GET/stream/DELETE
+    answers 404 (indistinguishable from absent), a keyless request 401,
+    and a foreign DELETE must NOT cancel the owner's execution."""
+    table = TenantTable([Tenant(name="alice", api_key="alice-key"),
+                         Tenant(name="mallory", api_key="mallory-key")])
+    with SamplingService(workers=1) as svc, \
+            Gateway(svc, tenants=table) as gw:
+        release = threading.Event()
+        svc.batch_hook = lambda job, b, w: release.wait(timeout=60)
+        alice = Client(gw, api_key="alice-key")
+        mallory = Client(gw, api_key="mallory-key")
+        nokey = Client(gw)
+        code, _, sub = alice.submit(chain, 8, seed=31)
+        assert code == 201
+        gid = sub["id"]
+        assert len(gid) > 16          # unguessable token, not a sequence
+
+        for method, path in [("GET", f"/v1/jobs/{gid}"),
+                             ("GET", f"/v1/jobs/{gid}/stream"),
+                             ("DELETE", f"/v1/jobs/{gid}")]:
+            code, _, err = mallory.request(method, path)
+            assert code == 404, (method, path, err)
+            code, _, err = nokey.request(method, path)
+            assert code == 401, (method, path, err)
+
+        # mallory's DELETEs changed nothing: alice's job still runs,
+        # drains, and streams to completion
+        code, _, st = alice.request("GET", f"/v1/jobs/{gid}")
+        assert code == 200 and st["state"] in ("pending", "running")
+        release.set()
+        assert alice.stream_samples(gid).shape == (8, 10)
+        for c in (alice, mallory, nokey):
+            c.close()
+
+
+def test_store_root_confines_client_paths(chain, tmp_path):
+    """With --store-root, the store field is a name under the root:
+    absolute paths and ``..`` escapes are 400s, never touched."""
+    root = os.path.dirname(chain)
+    with SamplingService(workers=1) as svc, \
+            Gateway(svc, store_root=root) as gw:
+        c = Client(gw)
+        code, _, err = c.submit(chain, 8, seed=0)       # absolute path
+        assert code == 400 and "absolute" in err["error"]
+        code, _, err = c.submit("../" + os.path.basename(root) + "/"
+                                + os.path.basename(chain), 8, seed=0)
+        assert code == 400 and "escapes" in err["error"]
+        code, _, err = c.submit("../../../../etc", 8, seed=0)
+        assert code == 400 and "escapes" in err["error"]
+        code, _, sub = c.submit(os.path.basename(chain), 8, seed=0)
+        assert code == 201
+        assert c.stream_samples(sub["id"]).shape == (8, 10)
+        c.close()
+
+
+def test_store_digest_cache_catches_same_size_rewrite(chain, tmp_path):
+    """The digest cache's signature must see an atomic same-size rewrite
+    (st_ino/st_mtime_ns, not coarse mtime+size) — a stale store digest
+    would serve a stale cached result."""
+    import shutil as _sh
+    root = str(tmp_path / "copy")
+    _sh.copytree(chain, root)
+    with SamplingService(workers=1) as svc, Gateway(svc) as gw:
+        d1, _ = gw._store_identity(root)
+        assert gw._store_identity(root) == (d1, 10)      # cached path
+        site = sorted(f for f in os.listdir(root)
+                      if f.startswith("site_"))[0]
+        p = os.path.join(root, site)
+        st = os.stat(p)
+        raw = bytearray(open(p, "rb").read())
+        raw[-1] ^= 0xFF                                  # same size, new bytes
+        tmp = p + ".new"
+        with open(tmp, "wb") as f:
+            f.write(raw)
+        os.utime(tmp, ns=(st.st_atime_ns, st.st_mtime_ns))   # same mtime_ns
+        os.replace(tmp, p)
+        d2, _ = gw._store_identity(root)
+        assert d2 != d1
+
+
+# ---------------------------------------------------------------------------
 # quotas / tenancy
 # ---------------------------------------------------------------------------
 
@@ -303,6 +389,72 @@ def test_cache_lru_evicts_under_byte_budget(tmp_path):
     # the survivors are the most recently used
     surviving = {k for k, _, _ in cache._disk_entries()}
     assert "key-04" in surviving and "key-00" not in surviving
+
+
+def test_cache_memory_is_bounded_and_disk_backed(tmp_path):
+    """Sealing never grows the in-memory table past max_memory_entries;
+    an evicted entry re-serves from disk (still a hit, same bytes)."""
+    cache = ResultCache(cache_dir=str(tmp_path / "mem"),
+                        max_memory_entries=2)
+    frames = {}
+    for i in range(5):
+        e, status = cache.get_or_begin(f"key-{i:02d}", 1)
+        assert status == "miss"
+        frame = transport.array_to_frame(
+            np.full((4, 4), i, dtype=np.float32))
+        e.publish(0, frame)
+        e.finish()
+        cache.seal(e)
+        frames[f"key-{i:02d}"] = frame
+        assert cache.stats()["entries"] <= 2
+    # the oldest key was evicted from memory but survives on disk
+    e, status = cache.get_or_begin("key-00", 1)
+    assert status == "hit"
+    assert e.blocks[0] == frames["key-00"]
+
+
+def test_cache_memory_only_mode_is_bounded():
+    """Without a disk store an evicted finished entry becomes a miss —
+    bounded memory beats an unbounded byte leak."""
+    cache = ResultCache(max_memory_entries=1)
+    for i in range(3):
+        e, status = cache.get_or_begin(f"k{i}", 1)
+        assert status == "miss"
+        e.publish(0, b"frame")
+        e.finish()
+        cache.seal(e)
+    assert cache.stats()["entries"] == 1
+    _, status = cache.get_or_begin("k2", 1)     # the survivor (most recent)
+    assert status == "hit"
+    _, status = cache.get_or_begin("k0", 1)     # evicted: recompute
+    assert status == "miss"
+
+
+def test_cache_running_entries_never_memory_evicted():
+    cache = ResultCache(max_memory_entries=1)
+    running = [cache.get_or_begin(f"r{i}", 1)[0] for i in range(4)]
+    done, _ = cache.get_or_begin("d", 1)
+    done.finish()
+    cache.seal(done)
+    # all four RUNNING entries still attachable (dedup contract intact)
+    for i in range(4):
+        e, status = cache.get_or_begin(f"r{i}", 1)
+        assert status == "attach" and e is running[i]
+
+
+def test_gateway_record_table_is_bounded(chain):
+    with SamplingService(workers=1) as svc, \
+            Gateway(svc, max_records=2) as gw:
+        c = Client(gw)
+        for seed in range(4):
+            code, _, sub = c.submit(chain, 8, seed=seed)
+            assert code == 201
+            c.stream_samples(sub["id"])         # drain → terminal record
+        assert len(gw._records) <= 2
+        # the latest job's record survived the purges
+        code, _, st = c.request("GET", f"/v1/jobs/{sub['id']}")
+        assert code == 200 and st["state"] == "done"
+        c.close()
 
 
 def test_cache_key_separates_every_input():
