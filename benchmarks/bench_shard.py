@@ -1,0 +1,160 @@
+"""Chain-sharding bench: §3.1 broadcast plane vs block-cyclic Γ + env handoff.
+
+The broadcast plane (bench_broadcast.py) already collapses *storage* I/O to
+1 × chain-bytes, but the interconnect still carries every Γ segment to
+every peer: wire bytes grow as O(hosts × chain).  The sharded data plane
+(ROADMAP item 3, `repro.shard`) deals the chain's blocks across hosts —
+each host reads only its own Γ slice and ships the tiny (N, χ) sampling
+environment at ownership boundaries, plus one final sample gather: wire
+bytes are O(chain boundaries), independent of host count AND of the
+per-site Γ size, which is the whole game at large χ.
+
+This bench walks one chain both ways at 1/2/4 emulated hosts and records,
+per host count: walk wall time, per-host store bytes, and the wire bytes
+each plane moved (broadcast segments vs env handoffs + gather).  Every
+variant is asserted bit-identical to the single-host unsharded walk before
+its row counts.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_shard.py [--smoke] [--hosts 1 2 4]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import common  # noqa: F401  (enables x64 for the fp comparisons)
+from repro import api
+from repro.core import mps as M
+from repro.data.gamma_store import GammaStore
+
+
+def _run_cluster(source_root: str, runtimes, segment_len: int, n: int, key,
+                 shard) -> tuple[float, dict, dict]:
+    outs, stats, errs = {}, {}, []
+
+    def walk(idx, runtime):
+        try:
+            config = api.SamplerConfig(backend="streamed", runtime=runtime,
+                                       segment_len=segment_len, shard=shard)
+            with api.SamplingSession(source_root, config) as session:
+                outs[idx] = session.sample(n, key)
+                stats[idx] = dict(session.stats)
+        except Exception as e:          # noqa: BLE001 - surfaced below
+            errs.append(repr(e))
+
+    threads = [threading.Thread(target=walk, args=(i, rt))
+               for i, rt in enumerate(runtimes)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=1200)
+    wall = time.perf_counter() - t0
+    assert not errs and len(outs) == len(runtimes), (errs, sorted(outs))
+    return wall, outs, stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--hosts", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--sites", type=int, default=0)
+    ap.add_argument("--chi", type=int, default=0)
+    ap.add_argument("--samples", type=int, default=0)
+    ap.add_argument("--segment-len", type=int, default=0)
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(__file__), "BENCH.json"),
+        help="BENCH trajectory file to append the record to ('' disables)")
+    args = ap.parse_args()
+
+    sites = args.sites or (32 if args.smoke else 128)
+    chi = args.chi or (16 if args.smoke else 64)
+    n = args.samples or (128 if args.smoke else 1024)
+    seg = args.segment_len or max(2, sites // 16)
+
+    mps = M.gbs_like_mps(jax.random.key(0), sites, chi, 3,
+                         dtype=jnp.float32)
+    root = tempfile.mkdtemp(prefix="bench_shard_")
+    try:
+        with GammaStore(root, storage_dtype=jnp.bfloat16,
+                        compute_dtype=jnp.float32) as store:
+            store.write_mps(mps)
+        key = jax.random.key(1)
+
+        common.header()
+        # reference + jit warm-up: single-host unsharded walk
+        _, ref_outs, ref_stats = _run_cluster(
+            root, [api.LocalRuntime()], seg, n, key, shard=None)
+        ref = ref_outs[0]
+        chain_bytes = ref_stats[0]["io_bytes"]
+
+        rows = []
+        for p in sorted(set(args.hosts)):
+            cluster = (api.emulated_cluster(p, timeout=600.0)
+                       if p > 1 else [api.LocalRuntime()])
+            # -- broadcast plane: root reads all, peers receive all Γ -------
+            wall_bc, outs_bc, st_bc = _run_cluster(
+                root, cluster, seg, n, key, shard=None)
+            bc_wire = sum(st_bc[i]["broadcast_send_bytes"] for i in range(p))
+            assert all(np.array_equal(outs_bc[i], ref) for i in range(p))
+
+            # -- sharded plane: block-cyclic Γ, env handoff + gather --------
+            cluster = (api.emulated_cluster(p, timeout=600.0)
+                       if p > 1 else [api.LocalRuntime()])
+            wall_sh, outs_sh, st_sh = _run_cluster(
+                root, cluster, seg, n, key, shard="auto")
+            assert all(np.array_equal(outs_sh[i], ref) for i in range(p))
+            sh_wire = sum(st_sh[i]["p2p_send_bytes"] for i in range(p))
+            sh_store = [st_sh[i]["io_bytes"] for i in range(p)]
+            assert sum(sh_store) == chain_bytes   # chain read exactly once
+
+            common.emit(f"shard_h{p}_broadcast", wall_bc,
+                        f"wire_bytes={bc_wire}")
+            common.emit(f"shard_h{p}_sharded", wall_sh,
+                        f"wire_bytes={sh_wire}")
+            rows.append({"hosts": p,
+                         "broadcast": {"wall_s": wall_bc,
+                                       "wire_bytes": int(bc_wire)},
+                         "sharded": {"wall_s": wall_sh,
+                                     "wire_bytes": int(sh_wire),
+                                     "store_bytes_per_host": sh_store}})
+            print(f"# {p} hosts: wire {bc_wire/1e6:.2f} MB broadcast -> "
+                  f"{sh_wire/1e6:.2f} MB sharded "
+                  f"({bc_wire/max(1, sh_wire):.1f}x), per-host store "
+                  f"{[f'{b/1e6:.2f}' for b in sh_store]} MB")
+
+        # the acceptance claim: broadcast wire grows ~linearly with hosts,
+        # sharded handoff wire stays O(chain) — flat in host count
+        multi = [r for r in rows if r["hosts"] > 1]
+        if len(multi) >= 2:
+            lo, hi = multi[0], multi[-1]
+            bc_growth = hi["broadcast"]["wire_bytes"] / max(
+                1, lo["broadcast"]["wire_bytes"])
+            sh_growth = hi["sharded"]["wire_bytes"] / max(
+                1, lo["sharded"]["wire_bytes"])
+            print(f"# {lo['hosts']}→{hi['hosts']} hosts: broadcast wire "
+                  f"×{bc_growth:.2f}, sharded wire ×{sh_growth:.2f}")
+            assert sh_growth < bc_growth, \
+                "sharded wire bytes should scale sublinearly vs broadcast"
+
+        common.append_bench_record(
+            args.json, "shard",
+            {"sites": sites, "chi": chi, "samples": n, "segment_len": seg,
+             "hosts": sorted(set(args.hosts)), "smoke": bool(args.smoke)},
+            chain_store_bytes=int(chain_bytes),
+            sweep=rows)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

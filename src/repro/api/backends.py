@@ -222,6 +222,16 @@ class StreamedBackend(Backend):
         _warm_kernel_autotuner(plan, req.n_samples, shape[0], shape[2],
                                store.compute_dtype)
         engine_scheme = "inmem" if plan.scheme == "seq" else plan.scheme
+        shard = None
+        if plan.shard_block:
+            # host count binds HERE, to the executing runtime — the same
+            # plan dispatched to a lone remote worker builds the degenerate
+            # 1-host map and walks locally, bit-identical
+            from repro.shard.shardmap import ShardMap
+            n_hosts = (req.runtime.process_count
+                       if req.runtime is not None else 1)
+            shard = ShardMap(n_sites=store.n_sites, n_hosts=max(1, n_hosts),
+                             block=plan.shard_block)
 
         def build() -> StreamingEngine:
             return StreamingEngine(
@@ -233,7 +243,8 @@ class StreamedBackend(Backend):
                 mesh=req.mesh if engine_scheme != "inmem" else None,
                 pconfig=plan.pconfig,
                 chi_profile=plan.chi_profile,
-                runtime=req.runtime)
+                runtime=req.runtime,
+                shard=shard)
 
         if req.engines is None:         # direct Backend use: walk and release
             eng = build()
@@ -257,7 +268,7 @@ class StreamedBackend(Backend):
         # thread) until session close
         eng_key = (engine_scheme, plan.semantics, plan.segment_len,
                    plan.micro_batch, plan.chi_profile, plan.checkpoint_every,
-                   plan.sampler_config, plan.pconfig)
+                   plan.sampler_config, plan.pconfig, plan.shard_block)
         eng = req.engines.get(eng_key)
         if eng is None:
             new = build()

@@ -40,6 +40,12 @@ field                   meaning
 ``chi_profile``         per-site bucketed χ tuple (§3.4.2) or None (fixed χ)
 ``segment_len``         streamed-backend sites per device segment, or AUTO
                         (largest L whose two buffers fit the device budget)
+``shard``               chain sharding (``repro.shard``): None (off — the
+                        §3.1 broadcast plane), an int block size in sites
+                        (block-cyclic site→host ownership; must be a whole
+                        number of segments), or AUTO (one segment per
+                        block).  Streamed backend only; composes with
+                        DP-over-samples and dynamic χ
 ``store_root``          where a streamed session materializes Γ when built
                         from an in-memory MPS (default: temp dir)
 ``checkpoint_dir``      per-segment checkpoint directory (streamed backend)
@@ -87,6 +93,10 @@ class SamplerConfig:
     chi_profile: Optional[tuple[int, ...]] = None
     # streaming backend
     segment_len: Union[int, str] = AUTO
+    # chain sharding (block-cyclic Γ distribution, repro.shard): None = the
+    # §3.1 broadcast plane; int = sites per ownership block; AUTO = one
+    # segment per block
+    shard: Union[int, str, None] = None
     store_root: Optional[str] = None
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 1
@@ -113,6 +123,11 @@ class SessionPlan:
     checkpoint_every: int
     sampler_config: CoreSamplerConfig  # the kernel-level config
     pconfig: Optional[ParallelConfig]  # dp/tp placement, None for seq
+    # chain sharding: sites per block-cyclic ownership block (repro.shard),
+    # None for the broadcast plane.  The host count is the RUNTIME's
+    # process count at execution time, so the same plan serializes cleanly
+    # to a remote worker (which runs the degenerate 1-host shard).
+    shard_block: Optional[int] = None
 
     @property
     def cell(self) -> tuple[str, str, str, str, str]:
@@ -305,6 +320,39 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
         if scheme == "tp_double" and segment_len % 2:
             segment_len += 1            # pairs never straddle segments
 
+    # -- chain sharding (block-cyclic Γ distribution, repro.shard) ----------
+    shard_block = None
+    if config.shard is not None:
+        if backend == "remote":
+            # rides the serialized config untouched; the WORKER resolves it
+            # against its own runtime (a single worker runs the degenerate
+            # 1-host shard, bit-identical by construction)
+            pass
+        elif backend != "streamed":
+            # also covers the [19] pipeline baseline, which is inmem-only
+            raise ValueError(
+                f"chain sharding distributes the streamed Γ walk — it needs "
+                f"backend='streamed', got {backend!r}")
+        else:
+            shard_block = (segment_len if config.shard == AUTO
+                           else int(config.shard))
+            if shard_block < 1:
+                raise ValueError(f"shard block must be ≥ 1 site, got "
+                                 f"{shard_block}")
+            if shard_block % segment_len != 0:
+                raise ValueError(
+                    f"shard block ({shard_block} sites) must be a whole "
+                    f"number of segments (segment_len={segment_len}) — a "
+                    f"segment contracted on one host cannot straddle two "
+                    f"owners")
+            # prove single-ownership against the engine's REAL schedule
+            # (χ-stages can split blocks in ways the uniform check misses)
+            from repro.shard.shardmap import ShardMap, chain_segments
+            smap = ShardMap(n_sites=n_sites,
+                            n_hosts=max(1, runtime.process_count),
+                            block=shard_block)
+            smap.owners_for(chain_segments(n_sites, segment_len, stages))
+
     pconfig = None
     if scheme in ("dp", "tp_single", "tp_double"):
         # shard the batch over EVERY non-model mesh axis ("pod" folds into
@@ -325,4 +373,5 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
                        segment_len=segment_len, chi_profile=chi_profile,
                        stages=stages,
                        checkpoint_every=config.checkpoint_every,
-                       sampler_config=sampler_config, pconfig=pconfig)
+                       sampler_config=sampler_config, pconfig=pconfig,
+                       shard_block=shard_block)

@@ -132,6 +132,26 @@ def payload_from_bytes(buf: np.ndarray) -> dict:
                 "compute_dtype": getattr(jnp, str(z["compute_dtype"]))}
 
 
+def dict_to_bytes(payload: dict) -> np.ndarray:
+    """Generic dict-of-arrays → flat uint8 buffer (npz framing) for the
+    fixed-structure two-round collective transports (length, then blob).
+    Used by the sharded walk's env-handoff and block-gather payloads, whose
+    keys — unlike the Γ segment payload's — are not known up front."""
+    import io
+
+    bio = io.BytesIO()
+    np.savez(bio, **{k: np.asarray(v) for k, v in payload.items()})
+    return np.frombuffer(bio.getvalue(), dtype=np.uint8)
+
+
+def dict_from_bytes(buf: np.ndarray) -> dict:
+    """Inverse of :func:`dict_to_bytes`."""
+    import io
+
+    with np.load(io.BytesIO(np.asarray(buf, dtype=np.uint8).tobytes())) as z:
+        return {k: z[k] for k in z.files}
+
+
 class ClusterRuntime:
     """Where processes/devices live and how bytes move between them."""
     name = "abstract"
@@ -170,6 +190,39 @@ class ClusterRuntime:
     def barrier(self) -> None:
         """Line the processes up (no-op with one process)."""
 
+    # -- point-to-point (sharded data plane, repro.shard) --------------------
+    def send(self, dst: int, payload: dict, tag=None) -> None:
+        """Ship a dict-of-host-arrays payload to process ``dst`` (the
+        sharded walk's env handoff).  ``tag`` disambiguates concurrent
+        streams between the same pair (the walk tags by boundary site)."""
+        raise NotImplementedError(f"runtime {self.name!r} has no "
+                                  f"point-to-point transport")
+
+    def recv(self, src: int, tag=None) -> dict:
+        """Blocking receive of the matching :meth:`send` from ``src``."""
+        raise NotImplementedError(f"runtime {self.name!r} has no "
+                                  f"point-to-point transport")
+
+    def observe_handoff(self, src: int, tag=None) -> None:
+        """Called by every process that is NEITHER endpoint of a handoff.
+
+        A true point-to-point fabric (the emulated interconnect) ignores
+        this; transports built on global collectives (a real
+        ``jax.distributed`` launch routes send/recv through
+        ``broadcast_one_to_all``) need every process to participate in
+        every transfer — this is the bystander's participation hook."""
+
+    def allreduce_min(self, value: int) -> int:
+        """Global min over one int per process (the cluster-synchronized
+        resume agreement).  Identity with one process."""
+        return int(value)
+
+    def allgather_payloads(self, payload: dict) -> list[dict]:
+        """Every process contributes one dict-of-arrays payload; every
+        process returns all of them, rank-ordered (the sharded walk's final
+        sample-block gather).  Single-process: ``[payload]``."""
+        return [payload]
+
     def compute_lock(self):
         """Context manager held around one segment's device execution.
 
@@ -189,7 +242,8 @@ class ClusterRuntime:
         over the interconnect (or dispatched to a worker).  Engines report
         per-walk deltas of these next to the GammaStore's disk counters."""
         return {"broadcast_send_bytes": 0, "broadcast_recv_bytes": 0,
-                "broadcast_segments": 0, "dispatch_bytes": 0}
+                "broadcast_segments": 0, "dispatch_bytes": 0,
+                "p2p_send_bytes": 0, "p2p_recv_bytes": 0, "p2p_msgs": 0}
 
     # -- remote dispatch ------------------------------------------------------
     def submit(self, payload: dict) -> np.ndarray:
@@ -244,7 +298,17 @@ class _Interconnect:
         self.n = n_processes
         self.timeout = timeout
         self.queues = [queue_mod.Queue() for _ in range(n_processes)]
+        # separate lane for point-to-point traffic (env handoffs, block
+        # gathers): a sharded walk must not have its handoff dequeue a
+        # broadcast segment some other plan left in flight
+        self.p2p_queues = [queue_mod.Queue() for _ in range(n_processes)]
         self.barrier = threading.Barrier(n_processes)
+        # allreduce scratch: one slot per process.  Each process overwrites
+        # only its OWN slot before the first barrier and reads between the
+        # two barriers, so rounds never need clearing (stale values are
+        # overwritten, and the trailing barrier keeps a fast process from
+        # starting round k+1 before a slow one has read round k).
+        self.reduce_slots = [0] * n_processes
         # emulated processes share one XLA backend: collective programs
         # from two members must not execute concurrently (their rendezvous
         # would interleave and deadlock the device pool) — see
@@ -261,6 +325,17 @@ class _Interconnect:
             raise TimeoutError(
                 f"process {dst} waited >{self.timeout}s for a broadcast — "
                 f"is the root walking the same segment schedule?") from None
+
+    def send_p2p(self, dst: int, msg) -> None:
+        self.p2p_queues[dst].put(msg)
+
+    def recv_p2p(self, dst: int):
+        try:
+            return self.p2p_queues[dst].get(timeout=self.timeout)
+        except queue_mod.Empty:
+            raise TimeoutError(
+                f"process {dst} waited >{self.timeout}s for a point-to-point "
+                f"payload — is the predecessor owner still walking?") from None
 
 
 class MultiHostRuntime(ClusterRuntime):
@@ -282,6 +357,12 @@ class MultiHostRuntime(ClusterRuntime):
         self._send_bytes = 0
         self._recv_bytes = 0
         self._segments = 0
+        self._p2p_send = 0
+        self._p2p_recv = 0
+        self._p2p_msgs = 0
+        # out-of-order p2p delivery: messages that arrived while waiting
+        # for a different (src, tag) stream, keyed for later pickup
+        self._p2p_buf: dict = {}
 
     @property
     def process_index(self) -> int:
@@ -315,6 +396,51 @@ class MultiHostRuntime(ClusterRuntime):
     def barrier(self) -> None:
         self._fabric.barrier.wait(timeout=self._fabric.timeout)
 
+    # -- point-to-point (sharded data plane) ---------------------------------
+    def send(self, dst: int, payload: dict, tag=None) -> None:
+        if not 0 <= dst < self._count:
+            raise ValueError(f"send dst {dst} outside [0, {self._count})")
+        if dst == self._index:
+            raise ValueError(f"process {self._index} sending to itself — "
+                             f"an owner handoff never loops back")
+        self._fabric.send_p2p(dst, (self._index, tag, payload))
+        self._p2p_send += _payload_nbytes(payload)
+        self._p2p_msgs += 1
+
+    def recv(self, src: int, tag=None) -> dict:
+        want = (src, tag)
+        buf = self._p2p_buf
+        while not buf.get(want):
+            s, t, payload = self._fabric.recv_p2p(self._index)
+            # count on arrival INTO this process, buffered or not
+            self._p2p_recv += _payload_nbytes(payload)
+            self._p2p_msgs += 1
+            buf.setdefault((s, t), []).append(payload)
+        return buf[want].pop(0)
+
+    def allreduce_min(self, value: int) -> int:
+        f = self._fabric
+        f.reduce_slots[self._index] = int(value)
+        f.barrier.wait(timeout=f.timeout)
+        out = min(f.reduce_slots)
+        f.barrier.wait(timeout=f.timeout)
+        return out
+
+    def allgather_payloads(self, payload: dict) -> list[dict]:
+        # rank-ordered rounds; sends never block (unbounded queues), so a
+        # process fires all its sends in its own round and then drains the
+        # others' — deadlock-free without any global scheduler
+        out = []
+        for r in range(self._count):
+            if r == self._index:
+                for dst in range(self._count):
+                    if dst != self._index:
+                        self.send(dst, payload, tag=("allgather", r))
+                out.append(payload)
+            else:
+                out.append(self.recv(r, tag=("allgather", r)))
+        return out
+
     def compute_lock(self):
         import contextlib
         if self._fabric is not None and hasattr(self._fabric, "compute"):
@@ -325,7 +451,10 @@ class MultiHostRuntime(ClusterRuntime):
         out = super().io_counters()
         out.update(broadcast_send_bytes=self._send_bytes,
                    broadcast_recv_bytes=self._recv_bytes,
-                   broadcast_segments=self._segments)
+                   broadcast_segments=self._segments,
+                   p2p_send_bytes=self._p2p_send,
+                   p2p_recv_bytes=self._p2p_recv,
+                   p2p_msgs=self._p2p_msgs)
         return out
 
 
@@ -389,6 +518,53 @@ class JaxMultiHostRuntime(MultiHostRuntime):  # pragma: no cover — ≥2 procs
         from jax.experimental import multihost_utils as mhu
         mhu.sync_global_devices("repro.api.runtime.barrier")
 
+    # -- point-to-point over the global collective ---------------------------
+    # ``jax.distributed`` exposes no true send/recv; a handoff is a
+    # src-rooted broadcast every process participates in (sender=send,
+    # receiver=recv, everyone else=observe_handoff — the engine's sharded
+    # walk calls exactly one of the three on each process per boundary, so
+    # the rounds line up globally).  Env payloads are (N, χ) — tiny next to
+    # the Γ broadcast this plane replaces — so the collective detour costs
+    # O(N·χ) per boundary, still O(chain) overall.
+    def _bcast_dict_from(self, src: int, payload) -> dict:
+        from jax.experimental import multihost_utils as mhu
+        mine = self._index == src
+        if mine:
+            blob = dict_to_bytes(payload)
+            length = np.asarray([blob.size], dtype=np.int64)
+        else:
+            blob = None
+            length = np.zeros((1,), dtype=np.int64)
+        length = np.asarray(mhu.broadcast_one_to_all(length, is_source=mine))
+        if not mine:
+            blob = np.zeros((int(length[0]),), dtype=np.uint8)
+        blob = np.asarray(mhu.broadcast_one_to_all(blob, is_source=mine))
+        return payload if mine else dict_from_bytes(blob)
+
+    def send(self, dst: int, payload: dict, tag=None) -> None:
+        self._p2p_send += _payload_nbytes(payload)
+        self._p2p_msgs += 1
+        self._bcast_dict_from(self._index, payload)
+
+    def recv(self, src: int, tag=None) -> dict:
+        payload = self._bcast_dict_from(src, None)
+        self._p2p_recv += _payload_nbytes(payload)
+        self._p2p_msgs += 1
+        return payload
+
+    def observe_handoff(self, src: int, tag=None) -> None:
+        self._bcast_dict_from(src, None)
+
+    def allreduce_min(self, value: int) -> int:
+        from jax.experimental import multihost_utils as mhu
+        vals = mhu.process_allgather(np.asarray([value], dtype=np.int64))
+        return int(np.min(vals))
+
+    def allgather_payloads(self, payload: dict) -> list[dict]:
+        return [self._bcast_dict_from(r, payload if r == self._index
+                                      else None)
+                for r in range(self._count)]
+
 
 @register_runtime("multihost")
 def jax_multihost_runtime() -> MultiHostRuntime:
@@ -409,7 +585,8 @@ def jax_multihost_runtime() -> MultiHostRuntime:
 
 __all__ = [
     "AUTO", "ClusterRuntime", "JaxMultiHostRuntime", "LocalRuntime",
-    "MultiHostRuntime", "available_runtimes", "emulated_cluster",
-    "get_runtime", "payload_from_bytes", "payload_to_bytes",
-    "register_runtime", "resolve_runtime",
+    "MultiHostRuntime", "available_runtimes", "dict_from_bytes",
+    "dict_to_bytes", "emulated_cluster", "get_runtime",
+    "payload_from_bytes", "payload_to_bytes", "register_runtime",
+    "resolve_runtime",
 ]

@@ -140,6 +140,14 @@ class SamplingSession:
                 w, self.config.hardware, compute_bytes=self._elt_bytes)
             engine_info.pop("scheme", None)      # keep the session-level name
             info.update(engine_info)
+            if plan.shard_block:
+                from repro.core.perfmodel import shard_wire_bytes
+                info["shard"] = {
+                    "block": plan.shard_block,
+                    "hosts": self.runtime.process_count,
+                    **shard_wire_bytes(w, self.runtime.process_count,
+                                       block=plan.shard_block),
+                }
         return info
 
     # -- source materialization (lazy; at most once per session) -------------

@@ -41,6 +41,26 @@ def save_sampler_state(root: str, site: int, state: SamplerState,
     return final
 
 
+def newest_checkpoint_site(root: str) -> int:
+    """Site index of the newest checkpoint under ``root``, or 0 when none
+    exist (site 0 — the chain start — IS "nothing durable yet": resuming
+    from it recomputes everything, which is always safe).
+
+    This is each process's vote in the cluster-synchronized resume
+    agreement: ``runtime.allreduce_min(newest_checkpoint_site(dir))`` is
+    the newest boundary EVERY process can resume from.  For the min to be
+    loadable, multi-process walks checkpoint with ``keep=0`` (full
+    history) — pruning could delete the very boundary a slower process
+    needs the cluster to agree on."""
+    if not os.path.isdir(root):
+        return 0
+    files = sorted(f for f in os.listdir(root)
+                   if f.startswith("site_") and f.endswith(".npz"))
+    if not files:
+        return 0
+    return int(files[-1].split("_")[1].split(".")[0])
+
+
 def load_sampler_state(root: str, site: int | None = None):
     files = sorted(f for f in os.listdir(root)
                    if f.startswith("site_") and f.endswith(".npz"))

@@ -202,6 +202,34 @@ def min_macro_batch_for_overlap(w: Workload, hw: Hardware,
     return int(t_io / per_sample_t) + 1
 
 
+def shard_wire_bytes(w: Workload, hosts: int, *, block: int,
+                     storage_bytes: int = 2, env_bytes: int = 8,
+                     sample_bytes: int = 4) -> dict:
+    """Interconnect bytes of a full chain walk: §3.1 broadcast vs the
+    chain-sharded data plane (block-cyclic Γ, pipelined env handoff).
+
+    broadcast ships every Γ segment from the root to hosts−1 peers —
+    O(hosts × chain).  Sharded ships NO Γ at all (each host reads only the
+    blocks it owns) and instead hands the tiny (N, χ) env across each of
+    the n_blocks−1 block boundaries, plus one final sample allgather —
+    O(chain-boundaries × N·χ), independent of per-site Γ size.  The
+    crossover is immediate for χ² ≫ N, which is exactly the large-χ regime
+    the paper targets."""
+    gamma_site = w.chi * w.chi * w.d * storage_bytes
+    broadcast = (hosts - 1) * w.n_sites * gamma_site
+    n_blocks = -(-w.n_sites // block)
+    boundaries = n_blocks - 1 if hosts > 1 else 0
+    handoff = boundaries * w.n_samples * w.chi * env_bytes
+    gather = ((hosts - 1) * w.n_samples * w.n_sites * sample_bytes
+              if hosts > 1 else 0)
+    return {
+        "broadcast_bytes": broadcast,
+        "handoff_bytes": handoff,
+        "gather_bytes": gather,
+        "sharded_bytes": handoff + gather,
+    }
+
+
 def job_admission_cost(w: Workload, hw: Hardware, n_batches: int = 1,
                        efficiency: float = 0.5) -> dict:
     """Modeled footprint of one service job, for admission control.

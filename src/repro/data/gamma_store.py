@@ -31,6 +31,8 @@ duplicate synchronous read and leaked the prefetched copy into
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 import queue
 import threading
@@ -40,6 +42,40 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: per-store digest manifest (``write_digest_manifest``): maps each site
+#: file name to its leaf digest so a host holding only a *slice* of the
+#: chain (repro.shard) can still reproduce the whole store's digest — the
+#: key the serving gateway's ResultCache addresses results by.  The name
+#: deliberately does not match the ``site_*.npz`` glob.
+MANIFEST_NAME = "digests.json"
+
+
+def site_filename(i: int) -> str:
+    """Canonical site-file name — shared with repro.shard so a sliced store
+    and a whole store agree on the Merkle leaf set."""
+    return f"site_{i:06d}.npz"
+
+
+def leaf_digest(fname: str, data: bytes) -> str:
+    """Merkle leaf: sha256 over the site file's name + bytes (the name binds
+    the leaf to its chain position; bytes alone would let two permuted
+    stores collide)."""
+    h = hashlib.sha256()
+    h.update(fname.encode())
+    h.update(data)
+    return h.hexdigest()
+
+
+def merkle_root(leaves: dict[str, str]) -> str:
+    """Combine per-site leaf digests into the store digest: sha256 over the
+    sorted ``name:leaf`` lines.  Computable from the leaves alone — which is
+    the point: a sharded store hashes only the files it holds and takes the
+    rest from the manifest."""
+    h = hashlib.sha256()
+    for f in sorted(leaves):
+        h.update(f"{f}:{leaves[f]}\n".encode())
+    return h.hexdigest()
 
 
 def decode_gamma(raw: np.ndarray, gshape: tuple[int, ...], two_byte: bool,
@@ -89,6 +125,7 @@ class GammaStore:
         self.io_seconds = 0.0      # worker+sync read wall time
         self.payload_reads = 0     # Γ payload reads (meta() probes excluded)
         self._digest: Optional[str] = None
+        self._leaves: Optional[dict[str, str]] = None
         self._n_sites = sum(1 for f in os.listdir(root)
                             if f.startswith("site_") and f.endswith(".npz"))
 
@@ -103,6 +140,7 @@ class GammaStore:
         if fresh:
             self._n_sites += 1
         self._digest = None            # content changed: recompute lazily
+        self._leaves = None
 
     def write_mps(self, mps) -> None:
         for i in range(mps.n_sites):
@@ -110,7 +148,7 @@ class GammaStore:
 
     # -- read path ----------------------------------------------------------
     def _path(self, i: int) -> str:
-        return os.path.join(self.root, f"site_{i:06d}.npz")
+        return os.path.join(self.root, site_filename(i))
 
     @property
     def n_sites(self) -> int:
@@ -118,24 +156,45 @@ class GammaStore:
         O(M) filenames on every segment walk of an M-site chain."""
         return self._n_sites
 
-    def digest(self) -> str:
-        """Content digest of the materialized store: sha256 over the sorted
-        ``site_*.npz`` file names and bytes.  This identifies *these tensor
-        files* — npz archives embed zip timestamps, so re-writing identical
-        tensors yields a new digest; that is conservative in the right
-        direction for result caching (a stale hit is impossible, a spurious
-        miss just recomputes).  Cached; invalidated by :meth:`put`."""
-        if self._digest is None:
-            import hashlib
+    def _site_files(self) -> list[str]:
+        return sorted(f for f in os.listdir(self.root)
+                      if f.startswith("site_") and f.endswith(".npz"))
 
-            h = hashlib.sha256()
-            for f in sorted(f for f in os.listdir(self.root)
-                            if f.startswith("site_") and f.endswith(".npz")):
-                h.update(f.encode())
+    def site_digests(self) -> dict[str, str]:
+        """Per-site Merkle leaves (``{file name: leaf_digest}``) for every
+        site file this store holds.  Cached; invalidated by :meth:`put`."""
+        if self._leaves is None:
+            leaves = {}
+            for f in self._site_files():
                 with open(os.path.join(self.root, f), "rb") as fh:
-                    h.update(fh.read())
-            self._digest = h.hexdigest()
+                    leaves[f] = leaf_digest(f, fh.read())
+            self._leaves = leaves
+        return dict(self._leaves)
+
+    def digest(self) -> str:
+        """Content digest of the materialized store: the Merkle root
+        (:func:`merkle_root`) over the per-site leaf digests.  This
+        identifies *these tensor files* — npz archives embed zip
+        timestamps, so re-writing identical tensors yields a new digest;
+        that is conservative in the right direction for result caching (a
+        stale hit is impossible, a spurious miss just recomputes).  The
+        tree shape is what lets a *sharded* store (repro.shard) reproduce
+        the same digest from its owned leaves plus the manifest's.
+        Cached; invalidated by :meth:`put`."""
+        if self._digest is None:
+            self._digest = merkle_root(self.site_digests())
         return self._digest
+
+    def write_digest_manifest(self) -> str:
+        """Persist the per-site leaves as ``digests.json`` in the store
+        root (atomic).  A sharded slice carries this file so each host can
+        answer for the GLOBAL digest while holding only its own sites."""
+        path = os.path.join(self.root, MANIFEST_NAME)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(self.site_digests(), fh, indent=0, sort_keys=True)
+        os.replace(tmp, path)
+        return path
 
     def meta(self, i: int = 0) -> tuple[int, ...]:
         """Γ shape of site i from the npz header — no tensor payload read."""

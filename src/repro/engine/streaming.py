@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.api.runtime import ClusterRuntime, LocalRuntime
 from repro.checkpoint.sampler_state import (load_sampler_state,
+                                            newest_checkpoint_site,
                                             save_sampler_state)
 from repro.core import parallel as PP
 from repro.core import sampler as S
@@ -118,19 +119,45 @@ class StreamingEngine:
                  mesh=None, pconfig: Optional[PP.ParallelConfig] = None,
                  checkpoint_dir: Optional[str] = None,
                  chi_profile=None,
-                 runtime: Optional[ClusterRuntime] = None):
+                 runtime: Optional[ClusterRuntime] = None,
+                 shard=None):
         self.store = store
+        self._source_store = store
+        self._wrapped_store = None
         # where this engine's process lives and how Γ bytes reach it: on a
         # LocalRuntime every segment is a store read; on a multi-process
         # runtime only the ROOT touches the store and everyone else receives
-        # the broadcast (paper §3.1) — see _fetch
+        # the broadcast (paper §3.1) — see _fetch.  A `shard` map
+        # (repro.shard.ShardMap) switches the multi-process plane from
+        # broadcast to block-cyclic ownership: every process reads ONLY its
+        # owned slice and the walk pipelines the (N, χ) env host-to-host
+        # (ROADMAP item 3) — see _sample_sharded
         self.runtime = runtime or LocalRuntime()
+        self.shard = shard
         self.n_sites = store.n_sites
         if self.n_sites == 0:
             raise ValueError(f"empty GammaStore at {store.root}")
-        shape = store.meta(0)             # header-only: no Γ payload read
+        if shard is not None:
+            from repro.shard.store import ShardedGammaStore
+            if shard.n_sites != self.n_sites:
+                raise ValueError(f"shard map covers {shard.n_sites} sites, "
+                                 f"store holds {self.n_sites}")
+            if shard.n_hosts != self.runtime.process_count:
+                raise ValueError(
+                    f"shard map spans {shard.n_hosts} hosts but the runtime "
+                    f"has {self.runtime.process_count} processes")
+            if shard.n_hosts > 1 and not isinstance(store, ShardedGammaStore):
+                # shared-root deployment: wrap the caller's plain store in
+                # this host's ownership-enforcing view (engine-owned; the
+                # caller's store object stays untouched and shared)
+                self.store = ShardedGammaStore(
+                    store.root, shard, self.runtime.process_index,
+                    storage_dtype=store.storage_dtype,
+                    compute_dtype=store.compute_dtype)
+                self._wrapped_store = self.store
+        shape = self.store.meta(0)        # header-only: no Γ payload read
         self.chi, self.d = shape[0], shape[2]
-        self.gamma_dtype = np.dtype(store.compute_dtype)
+        self.gamma_dtype = np.dtype(self.store.compute_dtype)
         self.semantics = semantics
         self.config = config
         self.plan = plan
@@ -167,16 +194,26 @@ class StreamingEngine:
         self._warm: Optional[tuple] = None
         # store I/O is counted relative to engine creation so a shared
         # (session-owned) store can serve many engines without the hidden-
-        # I/O ratio mixing scopes
-        self._store_io0 = (store.io_seconds, store.io_bytes)
+        # I/O ratio mixing scopes (self.store: the sharded view when one
+        # was wrapped — its counters see owned traffic only)
+        self._store_io0 = (self.store.io_seconds, self.store.io_bytes)
         # runtime counters are scoped the same way: deltas since engine
         # creation, so shared runtimes serve many engines cleanly
         self._runtime_io0 = dict(self.runtime.io_counters())
         self.stats = {"segments": 0, "io_wait_s": 0.0, "compute_s": 0.0,
                       "max_live_segments": 0, "store_io_s": 0.0,
-                      "io_bytes": 0, "io_hidden_frac": 0.0}
+                      "io_bytes": 0, "io_hidden_frac": 0.0,
+                      "owned_segments": 0, "handoffs": 0,
+                      "handoff_send_bytes": 0, "handoff_recv_bytes": 0,
+                      "gather_bytes": 0}
         for k in self._runtime_io0:
             self.stats[k] = 0
+        # the shard algebra must hold for the REAL schedule (χ-stages can
+        # split blocks in ways plan-time uniform checks miss): every
+        # scheduled segment needs exactly one owner, checked here once
+        self._seg_owners = (None if self.shard is None else
+                            tuple(self.shard.segment_owner(s, e)
+                                  for s, e, _ in self._segment_schedule()))
 
     # -- chain schedule ------------------------------------------------------
     def _segment_schedule(self) -> list[tuple[int, int, int]]:
@@ -186,24 +223,22 @@ class StreamingEngine:
         (every segment of a bucket is padded to the same length, so a
         dynamic-χ chain costs ONE jit compilation per bucket)."""
         from repro.core import dynamic_bond as DB
+        from repro.shard.shardmap import chain_segments
 
-        L = self.plan.segment_len
         if self.chi_profile is None:
             stages = [(0, self.n_sites, self.chi)]
         else:
             stages = [(st.start, st.stop, st.chi)
                       for st in DB.stages_from_profile(self.chi_profile)]
-        out = []
-        for s0, s1, chi_s in stages:
+        for s0, s1, _ in stages:
             if self.pconfig.scheme == "tp_double" and (s0 % 2 or s1 % 2):
                 raise ValueError(
                     "tp_double pairs sites (2j, 2j+1): χ-stage boundaries "
                     f"must be even (got stage [{s0}, {s1}))")
-            c = s0
-            while c < s1:
-                out.append((c, min(c + L, s1), chi_s))
-                c = min(c + L, s1)
-        return out
+        # the chunking itself is shared with the planner's shard validation
+        # (shardmap.chain_segments) so "every segment has one owner" is
+        # proved against the very schedule this engine walks
+        return chain_segments(self.n_sites, self.plan.segment_len, stages)
 
     # -- segment fetch (runs on the pool thread) ----------------------------
     def _fetch_via_runtime(self, start: int,
@@ -233,7 +268,14 @@ class StreamingEngine:
     def _fetch(self, start: int, stop: int,
                chi_s: int) -> tuple[jax.Array, jax.Array, int]:
         L = self.plan.segment_len
-        if self.runtime.process_count > 1:
+        if self.shard is not None:
+            # sharded plane: Γ NEVER crosses the interconnect — the owner
+            # reads its own slice locally (multi-process included); the
+            # walk loop schedules the next OWNED segment itself, so the
+            # blanket next-segment prefetch stays off
+            g, lam = self.store.get_segment(start, stop - start,
+                                            prefetch_next_segment=False)
+        elif self.runtime.process_count > 1:
             g, lam = self._fetch_via_runtime(start, stop)
         else:
             g, lam = self.store.get_segment(start, stop - start,
@@ -301,7 +343,10 @@ class StreamingEngine:
             live = self._live           # a warm prefetched segment counts
         self.stats.update(segments=0, io_wait_s=0.0, compute_s=0.0,
                           max_live_segments=live, store_io_s=0.0,
-                          io_bytes=0, io_hidden_frac=0.0)
+                          io_bytes=0, io_hidden_frac=0.0,
+                          owned_segments=0, handoffs=0,
+                          handoff_send_bytes=0, handoff_recv_bytes=0,
+                          gather_bytes=0)
         for k in self._runtime_io0:
             self.stats[k] = 0
 
@@ -372,29 +417,21 @@ class StreamingEngine:
                     else checkpoint_dir)
         if ckpt_dir:
             os.makedirs(ckpt_dir, exist_ok=True)
+        if self.shard is not None and self.runtime.process_count > 1:
+            return self._sample_sharded(n_samples, key, resume=resume,
+                                        stop_after_segments=stop_after_segments,
+                                        ckpt_dir=ckpt_dir, pipeline=pipeline)
         self._begin_walk()
 
         M_sites = self.n_sites
         if self.plan.micro_batch is not None:
             assert n_samples % self.plan.micro_batch == 0, \
                 (n_samples, self.plan.micro_batch)
-        if self.runtime.process_count > 1:
-            if stop_after_segments is not None:
-                raise ValueError(
-                    "stop_after_segments injects a single-process kill — "
-                    "on a multi-process runtime the peers would block on "
-                    "the broadcast")
-            if resume:
-                # each process checkpoints independently; after a cluster
-                # kill their persisted boundaries can differ, and resuming
-                # from unequal indices desyncs the broadcast schedule.
-                # Cluster-synchronized resume is a runtime follow-up
-                # (ROADMAP); until then macro batches are the restart unit.
-                raise ValueError(
-                    "resume on a multi-process runtime needs a cluster-"
-                    "synchronized checkpoint boundary, which is not wired "
-                    "yet — re-run the macro batch instead (batches are "
-                    "idempotent work items)")
+        if self.runtime.process_count > 1 and stop_after_segments is not None:
+            raise ValueError(
+                "stop_after_segments injects a single-process kill — "
+                "on a multi-process runtime the peers would block on "
+                "the broadcast")
 
         schedule = self._segment_schedule()
         boundaries = {s for s, _, _ in schedule} | {M_sites}
@@ -407,19 +444,35 @@ class StreamingEngine:
         if resume:
             if not ckpt_dir:
                 raise ValueError("resume=True needs a checkpoint_dir")
-            site, state, _ = load_sampler_state(ckpt_dir)
-            # the engine only checkpoints segment boundaries (or chain end)
-            assert site in boundaries, (site, sorted(boundaries))
-            # a mismatched key would silently produce a chimera batch
-            # (prefix from the checkpoint's seed, suffix from the caller's)
-            assert jnp.array_equal(jax.random.key_data(key),
-                                   jax.random.key_data(state.key)), \
-                "resume key does not match the checkpointed run"
-            env, key, log_scale = state.env, state.key, state.log_scale
-            idx = next((i for i, (s, _, _) in enumerate(schedule)
-                        if s == site), len(schedule))
-            done = self._load_sample_blocks(site, ckpt_dir)
-            persisted = len(done)
+            if self.runtime.process_count > 1:
+                # cluster-synchronized resume: after an unclean stop the
+                # processes' newest durable boundaries can differ, and
+                # resuming from unequal indices would desync the broadcast
+                # schedule.  Agree on min(newest) — the newest boundary
+                # EVERY process holds (keep=0 checkpoints, see
+                # newest_checkpoint_site) — and walk from there in
+                # lockstep; 0 means someone lost everything: start fresh.
+                agreed = self.runtime.allreduce_min(
+                    newest_checkpoint_site(ckpt_dir))
+                loaded = (load_sampler_state(ckpt_dir, site=agreed)
+                          if agreed > 0 else None)
+            else:
+                loaded = load_sampler_state(ckpt_dir)
+            if loaded is not None:
+                site, state, _ = loaded
+                # the engine only checkpoints segment boundaries (or end)
+                assert site in boundaries, (site, sorted(boundaries))
+                # a mismatched key would silently produce a chimera batch
+                # (prefix from the checkpoint's seed, suffix from the
+                # caller's)
+                assert jnp.array_equal(jax.random.key_data(key),
+                                       jax.random.key_data(state.key)), \
+                    "resume key does not match the checkpointed run"
+                env, key, log_scale = state.env, state.key, state.log_scale
+                idx = next((i for i, (s, _, _) in enumerate(schedule)
+                            if s == site), len(schedule))
+                done = self._load_sample_blocks(site, ckpt_dir)
+                persisted = len(done)
 
         if idx >= len(schedule):          # resumed from a finished run
             self._finish_walk()
@@ -481,10 +534,14 @@ class StreamingEngine:
                             blk)
                     site_cursor += blk.shape[0]
                 persisted = len(done)
+                # multi-process walks keep the FULL boundary history
+                # (keep=0): the cluster-min resume agreement must be able
+                # to load any boundary a slower process is still at
                 save_sampler_state(
                     ckpt_dir, site_done,
                     S.SamplerState(env, key, log_scale),
-                    np.zeros((0, n_samples), dtype=np.int32))
+                    np.zeros((0, n_samples), dtype=np.int32),
+                    keep=0 if self.runtime.process_count > 1 else 3)
             if stopping:
                 if idx < len(schedule):   # drain the prefetch we no longer
                     gd, ld, _ = fut.result()   # need, or its buffers leak and
@@ -493,6 +550,166 @@ class StreamingEngine:
 
         self._finish_walk()
         return np.concatenate(done, axis=0).T.astype(np.int32)
+
+    def _sample_sharded(self, n_samples: int, key: jax.Array, *,
+                        resume: bool, stop_after_segments: Optional[int],
+                        ckpt_dir, pipeline: bool) -> np.ndarray:
+        """Block-cyclic sharded walk (ROADMAP item 3, Adamski & Brown).
+
+        Every process iterates the same segment schedule, but segment k's
+        sites are contracted only by ``shard.segment_owner(k)``; at each
+        ownership boundary the tiny (N, χ) environment — never Γ — crosses
+        the wire (``runtime.send/recv``), and the next owner's Γ prefetch
+        for its OWN slice runs behind the predecessor's compute, exactly as
+        the broadcast plane overlaps its collective.  The walk ends with a
+        barrier and one sample-block all-gather so every process returns
+        the identical (N, M) batch: wire traffic is O(chain) env handoffs
+        plus one outcome gather, not O(hosts × chain) Γ broadcast bytes.
+
+        Crash consistency (the SIGKILL chaos test's contract): an owner
+        persists a RECEIVED boundary before computing from it, and each
+        computed block + post-compute boundary immediately after the
+        compute — both with ``keep=0`` — so the cluster-min agreed site is
+        always durable exactly where the resume needs it, with every owned
+        block below it on disk.
+        """
+        from repro.core.dynamic_bond import fit_env
+        from repro.shard import walk as SW
+
+        if stop_after_segments is not None:
+            raise ValueError(
+                "stop_after_segments injects a single-process kill — on a "
+                "sharded runtime the peers would block on the env handoff")
+        self._begin_walk()
+        if self.plan.micro_batch is not None:
+            assert n_samples % self.plan.micro_batch == 0, \
+                (n_samples, self.plan.micro_batch)
+
+        schedule = self._segment_schedule()
+        owners = list(self._seg_owners)
+        me = self.runtime.process_index
+        base_key_data = np.asarray(jax.random.key_data(key))
+
+        idx0 = 0
+        blocks: dict[int, np.ndarray] = {}     # start site → (L, N) block
+        env = PP.segment_env_init(n_samples, schedule[0][2], self.gamma_dtype)
+        log_scale = jnp.zeros((n_samples,), dtype=real_dtype_of(env.dtype))
+
+        if resume:
+            if not ckpt_dir:
+                raise ValueError("resume=True needs a checkpoint_dir")
+            agreed = self.runtime.allreduce_min(
+                newest_checkpoint_site(ckpt_dir))
+            if agreed > 0:
+                boundaries = {s for s, _, _ in schedule} | {self.n_sites}
+                assert agreed in boundaries, (agreed, sorted(boundaries))
+                idx0 = next((i for i, (s, _, _) in enumerate(schedule)
+                             if s == agreed), len(schedule))
+                for i in range(idx0):          # my durable blocks < agreed
+                    if owners[i] == me:
+                        s0 = schedule[i][0]
+                        blocks[s0] = np.load(os.path.join(
+                            ckpt_dir, f"samples_{s0:06d}.npy"))
+                if idx0 < len(schedule) and owners[idx0] == me:
+                    site, state, _ = load_sampler_state(ckpt_dir,
+                                                        site=agreed)
+                    assert jnp.array_equal(jax.random.key_data(key),
+                                           jax.random.key_data(state.key)), \
+                        "resume key does not match the checkpointed run"
+                    env, key, log_scale = (state.env, state.key,
+                                           state.log_scale)
+
+        owned = [i for i in range(idx0, len(schedule)) if owners[i] == me]
+        self.stats["owned_segments"] = len(owned)
+        fut: Optional[Future] = None
+        if owned:
+            fut = self._take_warm(schedule[owned[0]])
+            if fut is None:
+                fut = self._pool.submit(self._fetch, *schedule[owned[0]])
+        next_pos = 1                      # next entry of `owned` to prefetch
+
+        for idx in range(idx0, len(schedule)):
+            start, _, chi_s = schedule[idx]
+            prev_owner = owners[idx - 1] if idx > idx0 else None
+            incoming = prev_owner is not None and prev_owner != owners[idx]
+            if owners[idx] != me:
+                if incoming and prev_owner != me:
+                    # neither endpoint: collective-backed transports still
+                    # need this process in the transfer (no-op in-process)
+                    self.runtime.observe_handoff(prev_owner, tag=start)
+                continue
+
+            if incoming:                  # I take over: receive the env
+                t0 = time.perf_counter()
+                payload = self.runtime.recv(prev_owner, tag=start)
+                self.stats["io_wait_s"] += time.perf_counter() - t0
+                env_h, ls_h, key_data, site = SW.decode_handoff(payload)
+                if site != start:
+                    raise RuntimeError(
+                        f"handoff desync: host {me} expected the env at "
+                        f"site {start} but received site {site} — are all "
+                        f"processes walking the same plan?")
+                if not np.array_equal(key_data, base_key_data):
+                    raise RuntimeError(
+                        "handoff key does not match this walk's base key — "
+                        "the predecessor owner is sampling a different "
+                        "(n_samples, key) job")
+                env, log_scale = jnp.asarray(env_h), jnp.asarray(ls_h)
+                self.stats["handoffs"] += 1
+                self.stats["handoff_recv_bytes"] += SW.payload_nbytes(payload)
+                if ckpt_dir:              # durable BEFORE computing from it
+                    save_sampler_state(
+                        ckpt_dir, start, S.SamplerState(env, key, log_scale),
+                        np.zeros((0, n_samples), dtype=np.int32), keep=0)
+
+            t0 = time.perf_counter()
+            gd, ld, real = fut.result()
+            self.stats["io_wait_s"] += time.perf_counter() - t0
+            if next_pos < len(owned):     # pipeline my NEXT owned segment
+                fut = self._pool.submit(self._fetch,
+                                        *schedule[owned[next_pos]])
+                next_pos += 1
+            else:
+                fut = None
+                if pipeline:              # gang-schedule the next walk
+                    self._warm = (schedule[owned[0]], self._pool.submit(
+                        self._fetch, *schedule[owned[0]]))
+
+            t0 = time.perf_counter()
+            with self.runtime.compute_lock():
+                seg = MPS(gd, ld, self.semantics)
+                env = fit_env(env, chi_s)
+                samples, env, log_scale = self._run_segment(
+                    seg, env, log_scale, key, start)
+                samples = np.asarray(samples[:real])
+                jax.block_until_ready((env, log_scale))
+            self.stats["compute_s"] += time.perf_counter() - t0
+            self._release(gd, ld)
+            blocks[start] = samples
+            self.stats["segments"] += 1
+            site_done = start + real
+            if ckpt_dir:
+                np.save(os.path.join(ckpt_dir, f"samples_{start:06d}.npy"),
+                        samples)
+                save_sampler_state(
+                    ckpt_dir, site_done,
+                    S.SamplerState(env, key, log_scale),
+                    np.zeros((0, n_samples), dtype=np.int32), keep=0)
+            if idx + 1 < len(schedule) and owners[idx + 1] != me:
+                payload = SW.encode_handoff(env, log_scale, key, site_done)
+                self.runtime.send(owners[idx + 1], payload, tag=site_done)
+                self.stats["handoffs"] += 1
+                self.stats["handoff_send_bytes"] += SW.payload_nbytes(payload)
+
+        # every process finishes its slice before the outcome gather
+        self.runtime.barrier()
+        merged: dict[int, np.ndarray] = {}
+        for pay in self.runtime.allgather_payloads(SW.encode_blocks(blocks)):
+            self.stats["gather_bytes"] += SW.payload_nbytes(pay)
+            merged.update(SW.decode_blocks(pay))
+        out = SW.assemble_blocks(merged, self.n_sites, n_samples)
+        self._finish_walk()
+        return out
 
     def _finish_walk(self) -> None:
         """Fold the store's and the runtime's I/O counters (deltas since
@@ -539,8 +756,12 @@ class StreamingEngine:
             except Exception:           # fetch already failed — nothing live
                 pass
         self._pool.shutdown(wait=True)
+        if self._wrapped_store is not None:
+            # the sharded view is ENGINE-owned (its prefetch thread must
+            # not leak) even when the caller's underlying store is shared
+            self._wrapped_store.close()
         if close_store:
-            self.store.close()
+            self._source_store.close()
 
     def __enter__(self) -> "StreamingEngine":
         return self

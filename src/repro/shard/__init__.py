@@ -1,0 +1,32 @@
+"""Chain-sharded data plane (ROADMAP item 3): block-cyclic Γ distribution.
+
+Every runtime before this package replicated the whole chain's Γ stream on
+every process (paper §3.1 root-reads-then-broadcast) — O(hosts × chain)
+wire bytes, and the chain's *store* had to fit one host's disk.  Following
+Adamski & Brown ("Tensor-Parallel Emulation of Quantum Circuits with
+Block-Cyclic Distributed MPS", PAPERS.md), the chain itself is a third
+parallelism axis next to DP-over-samples and TP-over-bond:
+
+* :class:`ShardMap` — the ownership algebra: site ``i`` belongs to host
+  ``(i // block) % n_hosts``;
+* :class:`ShardedGammaStore` — a :class:`~repro.data.gamma_store.GammaStore`
+  view that refuses to read (or prefetch) any site its host does not own,
+  so store capacity scales with hosts and the no-foreign-reads contract is
+  *enforced*, not just asserted;
+* :func:`materialize_shard` — pack one host's slice (plus the digest
+  manifest that lets the slice still answer for the global store digest);
+* :mod:`repro.shard.walk` — the wire codecs for the pipelined walk: the
+  owner of segment k ships only the tiny (N, χ) environment to the owner
+  of k+1 (``ClusterRuntime.send/recv``), then every host's sample blocks
+  meet in one final all-gather.
+
+The driver lives in :class:`repro.engine.streaming.StreamingEngine`
+(``shard=``), reached through the front door as
+``SamplerConfig(shard=<block sites>|"auto")``.
+"""
+from repro.shard.shardmap import ShardMap, chain_segments
+from repro.shard.store import (ShardedGammaStore, ShardViolation,
+                               materialize_shard)
+
+__all__ = ["ShardMap", "ShardedGammaStore", "ShardViolation",
+           "chain_segments", "materialize_shard"]

@@ -1,0 +1,96 @@
+"""Wire codecs for the sharded walk's two traffic classes.
+
+The pipelined walk (``StreamingEngine._sample_sharded``) moves exactly two
+kinds of payload between hosts, both dicts of numpy arrays so every
+``ClusterRuntime`` transport (in-process queues, npz-framed
+``broadcast_one_to_all``) carries them unchanged:
+
+* **env handoff** — at each ownership boundary the finishing owner ships
+  ``(env (N, χ), log_scale (N,), base-key data, boundary site)`` to the
+  next owner.  The key never advances along the chain (per-site keys are
+  ``fold_in(base, global_site)``), so shipping it is purely a desync
+  cross-check: a receiver whose base key differs is sampling a different
+  job and must fail loudly, not emit a chimera batch.
+* **sample blocks** — after the walk, each host's computed ``(L, N)``
+  blocks meet in one all-gather so every process returns the identical
+  ``(N, M)`` batch (the same contract the broadcast plane gets for free).
+
+Bit-identity argument: the env crosses the wire as raw host-array bytes
+(no recompression, no dtype cast), and the receiving owner applies the
+same ``fit_env`` → segment-compute sequence the unsharded loop applies to
+the very same array — so a sharded walk IS the unsharded walk, merely
+executed on rotating hosts.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def payload_nbytes(payload: dict) -> int:
+    """Wire size of a dict-of-arrays payload (what the runtimes count)."""
+    return sum(int(v.nbytes) for v in payload.values()
+               if isinstance(v, np.ndarray))
+
+
+# -- env handoff -------------------------------------------------------------
+
+def encode_handoff(env, log_scale, key, site: int) -> dict:
+    return {"env": np.asarray(env), "log_scale": np.asarray(log_scale),
+            "key": np.asarray(jax.random.key_data(key)),
+            "site": np.asarray(int(site), dtype=np.int64)}
+
+
+def decode_handoff(payload: dict
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """→ (env, log_scale, base-key data, boundary site)."""
+    return (np.asarray(payload["env"]), np.asarray(payload["log_scale"]),
+            np.asarray(payload["key"]), int(payload["site"]))
+
+
+# -- sample-block gather ------------------------------------------------------
+
+_BLK = "blk_"
+
+
+def encode_blocks(blocks: dict[int, np.ndarray]) -> dict:
+    """{start_site: (L, N) block} → a flat savez-able payload."""
+    return {f"{_BLK}{start:06d}": np.asarray(blk)
+            for start, blk in sorted(blocks.items())}
+
+
+def decode_blocks(payload: dict) -> dict[int, np.ndarray]:
+    out = {}
+    for k, v in payload.items():
+        if k.startswith(_BLK):
+            out[int(k[len(_BLK):])] = np.asarray(v)
+    return out
+
+
+def assemble_blocks(merged: dict[int, np.ndarray], n_sites: int,
+                    n_samples: int) -> np.ndarray:
+    """Gathered {start: (L, N)} blocks → the walk's (N, M) int32 output.
+    Coverage must tile [0, n_sites) exactly — a hole or overlap means an
+    owner's blocks went missing, which must fail loudly (a short batch
+    would silently corrupt downstream statistics)."""
+    out, cursor = [], 0
+    for start in sorted(merged):
+        blk = merged[start]
+        if start != cursor:
+            raise RuntimeError(
+                f"sharded gather hole: sites [{cursor}, {start}) missing "
+                f"(an owner's sample blocks never arrived)")
+        if blk.shape[1] != n_samples:
+            raise RuntimeError(
+                f"sharded gather block at site {start} carries "
+                f"{blk.shape[1]} samples, expected {n_samples}")
+        out.append(blk)
+        cursor += blk.shape[0]
+    if cursor != n_sites:
+        raise RuntimeError(f"sharded gather covers [0, {cursor}) of "
+                           f"[0, {n_sites})")
+    return np.concatenate(out, axis=0).T.astype(np.int32)
+
+
+__all__ = ["assemble_blocks", "decode_blocks", "decode_handoff",
+           "encode_blocks", "encode_handoff", "payload_nbytes"]

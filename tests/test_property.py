@@ -164,3 +164,83 @@ def test_straggler_ewma_bounded_by_observations(durations, k, alpha):
         m.observe_completion(d)
     assert min(durations) <= m._ewma <= max(durations)
     assert m.deadline == pytest.approx(k * m._ewma)
+
+
+# ---------------------------------------------------------------------------
+# Chain-shard ownership algebra (repro.shard, ROADMAP item 3)
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    n_sites=st.integers(1, 96), n_hosts=st.integers(1, 8),
+    block=st.integers(1, 24),
+)
+def test_shard_ownership_partitions_chain(n_sites, n_hosts, block):
+    """For ANY (n_sites, hosts, block), the hosts' owned-site sets
+    partition the chain — every site is computed exactly once, the
+    load-balance invariant the whole sharded walk rests on."""
+    from repro.shard import ShardMap
+
+    sm = ShardMap(n_sites=n_sites, n_hosts=n_hosts, block=block)
+    owned = [sm.owned_sites(h) for h in range(n_hosts)]
+    assert sorted(i for sites in owned for i in sites) == list(range(n_sites))
+    for h, sites in enumerate(owned):
+        assert all(sm.owner(i) == h for i in sites)
+        # block-cyclic: a host's sites come in runs of ≤ block consecutive
+        runs, prev = 1, None
+        for i in sites:
+            runs = runs + 1 if prev is not None and i == prev + 1 else 1
+            assert runs <= block
+            prev = i
+
+
+@hypothesis.given(
+    segment_len=st.integers(1, 8), mult=st.integers(1, 4),
+    n_sites=st.integers(1, 96), n_hosts=st.integers(1, 6),
+)
+def test_shard_handoffs_follow_chain_order(segment_len, mult, n_sites,
+                                           n_hosts):
+    """With the shard block a whole number of segments (the plan-time
+    alignment rule), every scheduled segment has exactly one owner and the
+    handoff sequence marches left→right: boundaries strictly increase,
+    each transfer's src is the owner on the left of the boundary and its
+    dst the owner on the right."""
+    from repro.shard import ShardMap, chain_segments
+
+    sm = ShardMap(n_sites=n_sites, n_hosts=n_hosts,
+                  block=segment_len * mult)
+    sched = chain_segments(n_sites, segment_len)
+    assert [i for s, e, _ in sched for i in range(s, e)] == \
+        list(range(n_sites))
+    owners = sm.owners_for(sched)           # raises if any segment straddles
+    hs = sm.handoffs(sched)
+    assert len(hs) == sum(1 for a, b in zip(owners, owners[1:]) if a != b)
+    prev_b = -1
+    for b, src, dst in hs:
+        assert b > prev_b
+        prev_b = b
+        assert src != dst
+        assert sm.owner(b - 1) == src and sm.owner(b) == dst
+
+
+@hypothesis.given(
+    n_sites=st.integers(1, 64), segment_len=st.integers(1, 8),
+    breaks=st.lists(st.integers(1, 63), max_size=4), seed=st.integers(0, 99),
+)
+def test_shard_chain_segments_cover_stages_exactly(n_sites, segment_len,
+                                                   breaks, seed):
+    """chain_segments tiles [0, n_sites) exactly once for any χ-stage
+    split, and no segment crosses a stage boundary — the schedule shape
+    the engine and the planner's shard proof must share."""
+    from repro.shard import chain_segments
+
+    cuts = sorted({b for b in breaks if b < n_sites})
+    edges = [0] + cuts + [n_sites]
+    rng = np.random.default_rng(seed)
+    stages = [(a, b, int(rng.integers(2, 9)))
+              for a, b in zip(edges, edges[1:])]
+    sched = chain_segments(n_sites, segment_len, stages)
+    assert [i for s, e, _ in sched for i in range(s, e)] == \
+        list(range(n_sites))
+    for s, e, chi in sched:
+        assert e - s <= segment_len
+        assert any(a <= s and e <= b and chi == c for a, b, c in stages)
