@@ -102,10 +102,29 @@ def payload_to_bytes(payload: dict) -> np.ndarray:
     process to supply the *same* pytree of arrays — a dict with variable
     shapes and non-array metadata is not broadcastable as-is, but
     (length, bytes) is: see :class:`JaxMultiHostRuntime`.  Dtypes ride as
-    names; the Γ bytes stay in storage format (no recompression)."""
+    names; the Γ bytes stay in storage format (no recompression).  The
+    store's segment checksum (``crc``) rides along so a corrupt wire blob
+    is rejected at ``decode_segment`` instead of sampled from.
+
+    A root-side read fault also has to cross the wire (every process must
+    fail the same round, not hang in a collective): a payload carrying an
+    ``error`` string (plus an optional structured ``fault`` dict) encodes
+    as a small error frame instead of a segment."""
     import io
+    import json
 
     bio = io.BytesIO()
+    if payload.get("error") is not None:
+        np.savez(bio,
+                 error=np.frombuffer(str(payload["error"]).encode(),
+                                     dtype=np.uint8),
+                 fault=np.frombuffer(
+                     json.dumps(payload.get("fault") or {}).encode(),
+                     dtype=np.uint8),
+                 start=np.asarray(int(payload.get("start", -1)),
+                                  dtype=np.int64))
+        return np.frombuffer(bio.getvalue(), dtype=np.uint8)
+    crc = payload.get("crc")
     np.savez(bio, gamma=payload["gamma"], lam=payload["lam"],
              gshape=np.asarray(payload["gshape"], dtype=np.int64),
              two_byte=np.asarray(bool(payload["two_byte"])),
@@ -113,23 +132,32 @@ def payload_to_bytes(payload: dict) -> np.ndarray:
              storage_dtype=np.asarray(
                  np.dtype(payload["storage_dtype"]).name),
              compute_dtype=np.asarray(
-                 np.dtype(payload["compute_dtype"]).name))
+                 np.dtype(payload["compute_dtype"]).name),
+             crc=np.asarray(-1 if crc is None else int(crc),
+                            dtype=np.int64))
     return np.frombuffer(bio.getvalue(), dtype=np.uint8)
 
 
 def payload_from_bytes(buf: np.ndarray) -> dict:
     """Inverse of :func:`payload_to_bytes`."""
     import io
+    import json
 
     import jax.numpy as jnp
 
     with np.load(io.BytesIO(np.asarray(buf, dtype=np.uint8).tobytes())) as z:
+        if "error" in z.files:
+            return {"error": z["error"].tobytes().decode(),
+                    "fault": json.loads(z["fault"].tobytes().decode()),
+                    "start": int(z["start"])}
+        crc = int(z["crc"]) if "crc" in z.files else -1
         return {"gamma": z["gamma"], "lam": z["lam"],
                 "gshape": tuple(int(x) for x in z["gshape"]),
                 "two_byte": bool(z["two_byte"]),
                 "start": int(z["start"]),
                 "storage_dtype": getattr(jnp, str(z["storage_dtype"])),
-                "compute_dtype": getattr(jnp, str(z["compute_dtype"]))}
+                "compute_dtype": getattr(jnp, str(z["compute_dtype"])),
+                "crc": None if crc < 0 else crc}
 
 
 def dict_to_bytes(payload: dict) -> np.ndarray:

@@ -79,6 +79,8 @@ from typing import Any, Iterable, Iterator, Optional, Union
 import numpy as np
 
 from repro.runtime.elastic import WorkQueue
+from repro.runtime.faults import (KINDS, CrashLoopLane, DeadLetter, Fault,
+                                  FaultReport, classify, dead_letter_kind)
 from repro.runtime.stragglers import StragglerMitigator
 
 # job lifecycle states (JobHandle.status())
@@ -143,6 +145,10 @@ class _Job:
     skip: frozenset
     state: str = PENDING
     error: Optional[BaseException] = None
+    # fault history (runtime/faults.Fault records) + the dead-letter record
+    # set when bounded retries exhaust a poison batch
+    faults: list = dataclasses.field(default_factory=list)
+    dead_letter: Optional[dict] = None
     blocks: dict = dataclasses.field(default_factory=dict)
     batch_stats: dict = dataclasses.field(default_factory=dict)
     # perfmodel admission numbers (Eq. 3 resident bytes of one active
@@ -186,10 +192,23 @@ class JobHandle:
             out.update(state=self._job.state,
                        skipped=len(self._job.skip),
                        blocks=len(self._job.blocks),
+                       faults=len(self._job.faults),
                        model_bytes=self._job.model_bytes,
                        model_compute_s=self._job.model_compute_s)
             out.update(self._job.straggler.stats())
             return out
+
+    def fault_report(self) -> Optional[dict]:
+        """Structured fault history of this job, or None when fault-free:
+        the per-attempt :class:`~repro.runtime.faults.Fault` records, kind
+        counts, and — when bounded retries exhausted a poison batch — the
+        dead-letter record (``batch``/``attempts``/``kind``)."""
+        with self._service._cond:
+            job = self._job
+            if not job.faults and job.dead_letter is None:
+                return None
+            return FaultReport(faults=list(job.faults),
+                               dead_letter=job.dead_letter).to_dict()
 
     def cancel(self) -> bool:
         """Stop scheduling this job's remaining batches.  Returns whether
@@ -263,12 +282,20 @@ class SamplingService:
     observed).  ``max_active_bytes`` — perfmodel admission budget
     (``None`` = unlimited).  ``steal_poll_s`` — how often an idle lane
     re-checks for stale batches when everything is claimed.
+    ``max_batch_attempts`` — bounded-retry/dead-letter policy: a batch
+    handed out this many times without completing fails its job with a
+    :class:`~repro.runtime.faults.DeadLetter` (kind=poison for repeat
+    worker kills) instead of retrying forever.  ``lane_quarantine_s`` —
+    cooldown before a crash-looping lane (``LaneHealth`` tripped on
+    respawn) is readmitted.
 
     ``observer`` is the telemetry seam (``repro.obs.metrics``): an
     optional callable invoked as ``observer(event, **fields)`` for
     ``job_submit`` / ``job_finished(state=...)`` /
     ``batch_done(duration_s=..., stats=...)`` / ``steal`` /
-    ``rejected_result`` / ``lane_fault`` / ``queue_{claim,requeue,
+    ``rejected_result`` / ``lane_fault`` / ``fault(kind=...)`` /
+    ``lane_quarantine(worker=...)`` / ``lane_readmit(worker=...)`` /
+    ``queue_{claim,requeue,
     complete,steal}`` (per-job WorkQueue events, prefix-forwarded).
     Observer errors are swallowed — telemetry must never perturb
     scheduling.  Also settable after construction (``svc.observer =``).
@@ -278,6 +305,8 @@ class SamplingService:
                  straggler_k: Optional[float] = 3.0,
                  steal_poll_s: float = 0.05,
                  max_active_bytes: Optional[float] = None,
+                 max_batch_attempts: int = 3,
+                 lane_quarantine_s: float = 5.0,
                  observer=None):
         self.observer = observer
         self._lock = threading.RLock()
@@ -303,6 +332,15 @@ class SamplingService:
         self._steals = 0                       # straggler re-issues handed out
         self._rejected_results = 0             # late completions discarded
         self._transport_faults = 0             # lane faults absorbed
+        # fault taxonomy + dead-letter / lane-quarantine policy
+        self.max_batch_attempts = max_batch_attempts
+        self.lane_quarantine_s = lane_quarantine_s
+        self._fault_counts = {k: 0 for k in KINDS}
+        self._dead_letters = 0
+        self._quarantined: dict[str, float] = {}   # lane → readmit monotonic
+        self._lane_quarantines = 0
+        self._lane_readmits = 0
+        self._readmit_timers: list[threading.Timer] = []
         # test/ops hook: called as hook(job, batch_id, worker) right after a
         # worker claims a batch, before it executes — failure-injection
         # (tests), progress taps, tracing
@@ -328,6 +366,13 @@ class SamplingService:
         """Set a terminal job state (caller holds the lock) + telemetry."""
         job.state = state
         self._emit("job_finished", state=state)
+
+    def _record_fault(self, job: _Job, fault: Fault) -> None:
+        """Caller holds the lock: append to the job's fault history and the
+        service-wide per-kind counters + telemetry (``fault`` event)."""
+        job.faults.append(fault)
+        self._fault_counts[fault.kind] += 1
+        self._emit("fault", kind=fault.kind)
 
     def _queue_observer(self, event: str, **fields) -> None:
         """Per-job WorkQueue events, forwarded with a ``queue_`` prefix so
@@ -394,6 +439,49 @@ class SamplingService:
     def workers(self) -> list[str]:
         with self._cond:
             return [n for n in self._threads if n not in self._removed]
+
+    # -- lane health: crash-loop quarantine ----------------------------------
+    def _quarantine_lane(self, name: str) -> None:
+        """Crash-loop response (``LaneHealth`` tripped): retire the lane NOW
+        — its batches requeue, its worker process is reaped — and schedule a
+        cooldown readmit.  The cooldown IS the penalty: the lane returns to
+        service with a clean fault window instead of respawning hot
+        forever."""
+        with self._cond:
+            if self._closing or name in self._quarantined:
+                return
+            self._lane_quarantines += 1
+            self._quarantined[name] = time.monotonic() + self.lane_quarantine_s
+            if self._pool is not None:
+                self._pool.health.forgive(name)
+        self._emit("lane_quarantine", worker=name)
+        self.remove_worker(name)
+        t = threading.Timer(self.lane_quarantine_s, self._readmit_lane,
+                            args=(name,))
+        t.daemon = True
+        with self._cond:
+            if self._closing:
+                return
+            self._readmit_timers.append(t)
+        t.start()
+
+    def _readmit_lane(self, name: str) -> None:
+        """Cooldown expiry: bring a quarantined lane back under its stable
+        ops name (fresh worker process, clean fault window)."""
+        with self._cond:
+            self._quarantined.pop(name, None)
+            if self._closing:
+                return
+            old = self._threads.get(name)
+        if old is not None and old.is_alive():
+            old.join(timeout=30)
+        try:
+            self.add_worker(name)
+        except (ValueError, RuntimeError):
+            return          # revived meanwhile, or the service closed
+        with self._cond:
+            self._lane_readmits += 1
+        self._emit("lane_readmit", worker=name)
 
     # -- submission ----------------------------------------------------------
     def submit(self, source, config=None, *, n_samples: int, key,
@@ -612,6 +700,11 @@ class SamplingService:
                 if b is not None:
                     self._steals += 1
                     self._emit("steal")
+                    self._record_fault(job, Fault(
+                        kind="timeout", batch=b,
+                        message=f"straggler reclaim: batch {b} re-issued to "
+                                f"{worker} after its owner exceeded the "
+                                f"EWMA deadline"))
                     return job, b
         return None
 
@@ -705,25 +798,53 @@ class SamplingService:
                     resume=resume, checkpoint_dir=ck,
                     stop_after_segments=job.stop_after_segments,
                     pipeline=pipeline)
-        except TransportError:
+        except TransportError as e:
             # a LANE fault, not a job fault: the batch requeues (re-offered
             # before fresh work) and the lane's worker process respawns —
-            # the recomputation is bit-identical (batch = f(seed, id))
+            # the recomputation is bit-identical (batch = f(seed, id)).
+            # Unless the batch itself keeps killing lanes: after
+            # max_batch_attempts hand-outs it dead-letters its JOB
+            # (kind=poison) so one bad payload can't crash-loop the fleet.
+            fault = classify(e, batch=b, lane=worker) or Fault(
+                kind="transport", message=str(e), batch=b, lane=worker)
             with self._cond:
                 self._transport_faults += 1
                 self._emit("lane_fault")
+                self._record_fault(job, fault)
                 if job.queue.records[b].owner == worker:
                     job.queue.fail(worker)
+                attempts = job.queue.attempts(b)
+                if (job.state == RUNNING and not job.queue.records[b].done
+                        and attempts >= self.max_batch_attempts):
+                    kind = dead_letter_kind(
+                        [f for f in job.faults if f.batch == b])
+                    dl = Fault(kind=kind, batch=b, lane=worker,
+                               message=f"batch {b} dead-lettered after "
+                                       f"{attempts} attempts "
+                                       f"(last: {fault.message})")
+                    self._record_fault(job, dl)
+                    job.dead_letter = {"batch": b, "attempts": attempts,
+                                       "kind": kind}
+                    job.error = DeadLetter(dl, FaultReport(
+                        faults=list(job.faults),
+                        dead_letter=job.dead_letter))
+                    self._dead_letters += 1
+                    self._finish(job, FAILED)
                 self._cond.notify_all()
                 if self._closing or worker in self._removed:
                     return
             try:
                 self._pool.respawn(worker)
+            except CrashLoopLane:
+                self._quarantine_lane(worker)  # crash-looping: cool it down
             except OSError:
                 self.remove_worker(worker)     # can't respawn: retire lane
             return
         except BaseException as e:     # noqa: BLE001 — reported via the job
             with self._cond:
+                fault = classify(e, batch=b, lane=worker)
+                if fault is not None:          # corruption/timeout/resource
+                    self._record_fault(job, fault)
                 if job.queue.records[b].owner == worker:
                     self._finish(job, FAILED)
                     job.error = e
@@ -769,10 +890,16 @@ class SamplingService:
           ``active_model_bytes``, ``admitted_jobs``, ``queued_jobs``,
           ``backpressure`` (bool)
         * ``stragglers`` — ``duplicates``, ``steals``, ``rejected_results``
+        * ``faults`` / ``dead_letters`` — fault-taxonomy counters: every
+          :data:`~repro.runtime.faults.KINDS` kind always present (zero
+          when clean) + jobs failed by the bounded-retry dead-letter policy
         * ``transport`` — ALWAYS present: ``enabled`` (fleet mode?) plus
           the :meth:`WorkerPool.stats` keys (``workers``/``spawned``/
-          ``reaped``/``faults``/``batches``/``dispatch_bytes``, zeroed for
-          thread lanes) and ``lane_faults`` (faults absorbed by lanes).
+          ``reaped``/``faults``/``batches``/``dispatch_bytes``/
+          ``lane_window_faults``/``backoff_seconds``, zeroed for thread
+          lanes), ``lane_faults`` (faults absorbed by lanes), and the
+          crash-loop surface: ``quarantined`` (lane names on cooldown),
+          ``lane_quarantines`` / ``lane_readmits``.
         """
         with self._cond:
             states = {s: 0 for s in
@@ -790,9 +917,15 @@ class SamplingService:
             else:
                 transport = {"enabled": False, "workers": 0, "spawned": 0,
                              "reaped": 0, "faults": 0, "batches": {},
-                             "dispatch_bytes": 0}
+                             "dispatch_bytes": 0, "lane_window_faults": {},
+                             "backoff_seconds": 0.0}
             transport["lane_faults"] = self._transport_faults
+            transport["quarantined"] = sorted(self._quarantined)
+            transport["lane_quarantines"] = self._lane_quarantines
+            transport["lane_readmits"] = self._lane_readmits
             return {"jobs": states, "sessions": len(self._sessions),
+                    "faults": dict(self._fault_counts),
+                    "dead_letters": self._dead_letters,
                     "coalesced_jobs": self._coalesced,
                     "workers": len(self.workers()),
                     "queue_depth": queue_depth,
@@ -837,7 +970,10 @@ class SamplingService:
             for job in self._jobs.values():
                 if job.state in (PENDING, RUNNING):
                     self._finish(job, CANCELLED)
+            timers = list(self._readmit_timers)
             self._cond.notify_all()
+        for t in timers:
+            t.cancel()
         for t in self._threads.values():
             t.join(timeout=300)
         if self._pool is not None:

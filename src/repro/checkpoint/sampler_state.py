@@ -7,6 +7,7 @@ uninterrupted one — asserted in tests/test_checkpoint.py.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 
@@ -15,6 +16,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sampler import SamplerState
+from repro.runtime.faults import CorruptSegment, Fault
+
+
+def _state_digest(env, key, log_scale, samples) -> str:
+    """sha256 over the checkpoint's logical payload bytes — embedded at
+    save, verified at load, so a resume never proceeds from rotted state."""
+    h = hashlib.sha256()
+    for a in (env, key, log_scale, samples):
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 def save_sampler_state(root: str, site: int, state: SamplerState,
@@ -28,11 +42,23 @@ def save_sampler_state(root: str, site: int, state: SamplerState,
     # loader's sorted()[-1] (and the prune filter) would pick up
     tmp = os.path.join(root, f".tmp_site_{site:06d}.npz")
     final = os.path.join(root, f"site_{site:06d}.npz")
-    np.savez(tmp, env=np.asarray(state.env),
-             key=np.asarray(jax.random.key_data(state.key)),
-             log_scale=np.asarray(state.log_scale),
-             samples=np.asarray(samples_so_far), site=site)
-    os.replace(tmp, final)
+    env = np.asarray(state.env)
+    key = np.asarray(jax.random.key_data(state.key))
+    log_scale = np.asarray(state.log_scale)
+    samples = np.asarray(samples_so_far)
+    digest = _state_digest(env, key, log_scale, samples)
+    with open(tmp, "wb") as f:
+        np.savez(f, env=env, key=key, log_scale=log_scale, samples=samples,
+                 site=site,
+                 sha256=np.frombuffer(digest.encode(), dtype=np.uint8))
+        f.flush()
+        os.fsync(f.fileno())       # the bytes must hit the platter BEFORE
+    os.replace(tmp, final)         # the rename makes them the checkpoint
+    dfd = os.open(root, os.O_RDONLY)
+    try:
+        os.fsync(dfd)              # …and the rename itself must survive
+    finally:
+        os.close(dfd)
     if keep:
         files = sorted(f for f in os.listdir(root)
                        if f.startswith("site_") and f.endswith(".npz"))
@@ -72,8 +98,20 @@ def load_sampler_state(root: str, site: int | None = None):
     else:
         fn = f"site_{site:06d}.npz"
     with np.load(os.path.join(root, fn)) as z:
+        env, key, log_scale = z["env"], z["key"], z["log_scale"]
+        samples = z["samples"]
+        if "sha256" in z.files:    # absent in pre-digest checkpoints
+            want = bytes(z["sha256"]).decode()
+            got = _state_digest(env, key, log_scale, samples)
+            if got != want:
+                raise CorruptSegment(Fault(
+                    kind="corruption", site=int(z["site"]), store=root,
+                    message=f"sampler checkpoint {fn} digest mismatch "
+                            f"(embedded {want[:12]}…, recomputed "
+                            f"{got[:12]}…) — refusing to resume from "
+                            f"rotted state"))
         state = SamplerState(
-            jnp.asarray(z["env"]),
-            jax.random.wrap_key_data(jnp.asarray(z["key"])),
-            jnp.asarray(z["log_scale"]))
-        return int(z["site"]), state, z["samples"]
+            jnp.asarray(env),
+            jax.random.wrap_key_data(jnp.asarray(key)),
+            jnp.asarray(log_scale))
+        return int(z["site"]), state, samples

@@ -3,6 +3,13 @@
 Fault-tolerance contract (the large-scale-runnability requirement):
   * atomic: written to ``step_XXXX.tmp`` then renamed — a crash mid-write
     never corrupts the latest checkpoint;
+  * durable: every leaf file and the manifest are fsync'd (and the parent
+    directory after the rename) — the rename is only atomic against
+    crashes if the bytes it points at actually reached the platter;
+  * verified: the manifest carries a sha256 per leaf file, checked on
+    load — a restore from rotted or torn bytes raises
+    :class:`~repro.runtime.faults.CorruptSegment` instead of silently
+    resuming from garbage (old digest-less checkpoints still load);
   * sharded: each host writes only the leaves (or leaf-shards) it owns —
     here single-process, the shard split is by leaf;
   * self-describing: the manifest stores the treedef, shapes, dtypes, and
@@ -11,6 +18,8 @@ Fault-tolerance contract (the large-scale-runnability requirement):
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import shutil
@@ -18,6 +27,18 @@ import shutil
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime.faults import CorruptSegment, Fault
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory fsync is what makes a
+    rename/create durable, not just ordered)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _leaf_paths(tree):
@@ -51,18 +72,28 @@ def save_checkpoint(root: str, step: int, tree, extra_meta: dict | None = None):
         fn = name.replace("/", "__") + ".npy"
         arr = np.asarray(jax.device_get(leaf))
         if arr.dtype == jnp.bfloat16:
-            np.save(os.path.join(tmp, fn), arr.view(np.uint16))
-            dtype = "bfloat16"
+            save_arr, dtype = arr.view(np.uint16), "bfloat16"
         else:
-            np.save(os.path.join(tmp, fn), arr)
-            dtype = str(arr.dtype)
+            save_arr, dtype = arr, str(arr.dtype)
+        buf = io.BytesIO()
+        np.save(buf, save_arr)
+        data = buf.getvalue()
+        with open(os.path.join(tmp, fn), "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"].append({"path": name, "file": fn,
-                                   "shape": list(arr.shape), "dtype": dtype})
+                                   "shape": list(arr.shape), "dtype": dtype,
+                                   "sha256": hashlib.sha256(data).hexdigest()})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_path(root)          # the rename itself must survive a crash
     # prune older checkpoints, keep last 3
     kept = sorted(d for d in os.listdir(root) if d.startswith("step_")
                   and not d.endswith(".tmp"))
@@ -93,7 +124,18 @@ def load_checkpoint(root: str, template, step: int | None = None):
     out = []
     for path, leaf in leaves:
         e = by_name[_path_str(path)]
-        arr = np.load(os.path.join(d, e["file"]))
+        with open(os.path.join(d, e["file"]), "rb") as f:
+            data = f.read()
+        want = e.get("sha256")             # absent in pre-digest checkpoints
+        if want is not None:
+            got = hashlib.sha256(data).hexdigest()
+            if got != want:
+                raise CorruptSegment(Fault(
+                    kind="corruption", store=d,
+                    message=f"checkpoint leaf {e['file']} digest mismatch "
+                            f"(manifest {want[:12]}…, file {got[:12]}…) — "
+                            f"refusing to resume from rotted bytes"))
+        arr = np.load(io.BytesIO(data))
         if e["dtype"] == "bfloat16":
             arr = jnp.asarray(arr).view(jnp.bfloat16)
         out.append(jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape))

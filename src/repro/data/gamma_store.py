@@ -32,16 +32,21 @@ duplicate synchronous read and leaked the prefetched copy into
 from __future__ import annotations
 
 import hashlib
+import io
 import json
 import os
 import queue
 import threading
 import time
+import zipfile
+import zlib
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime.faults import CorruptSegment, Fault
 
 #: per-store digest manifest (``write_digest_manifest``): maps each site
 #: file name to its leaf digest so a host holding only a *slice* of the
@@ -95,10 +100,33 @@ def decode_gamma(raw: np.ndarray, gshape: tuple[int, ...], two_byte: bool,
     return np.asarray(g.astype(compute_dtype))
 
 
+def segment_checksum(gamma: np.ndarray, lam: np.ndarray) -> int:
+    """CRC32 over a segment payload's packed Γ + Λ bytes — stamped by
+    :meth:`GammaStore.get_segment_raw`, verified by :func:`decode_segment`,
+    so a corrupt broadcast/RPC payload is rejected at decode instead of
+    sampled from."""
+    return zlib.crc32(np.ascontiguousarray(lam).tobytes(),
+                      zlib.crc32(np.ascontiguousarray(gamma).tobytes()))
+
+
 def decode_segment(payload: dict, compute_dtype=None
                    ) -> tuple[np.ndarray, np.ndarray]:
     """Wire payload (see :meth:`GammaStore.get_segment_raw`) → stacked
-    (gammas (L, χ, χ, d), lambdas (L, χ)) compute-dtype host arrays."""
+    (gammas (L, χ, χ, d), lambdas (L, χ)) compute-dtype host arrays.
+
+    Payloads stamped with a ``crc`` (every ``get_segment_raw`` payload)
+    are verified here; a mismatch raises :class:`CorruptSegment` —
+    kind=corruption, carrying the segment start site."""
+    if payload.get("crc") is not None:
+        want = int(np.asarray(payload["crc"]))
+        got = segment_checksum(payload["gamma"], payload["lam"])
+        if got != want:
+            start = int(np.asarray(payload.get("start", -1)))
+            raise CorruptSegment(Fault(
+                kind="corruption", site=start,
+                message=f"segment payload at site {start} failed its wire "
+                        f"checksum (crc {got:#010x} != {want:#010x}) — "
+                        f"rejected at decode, not sampled from"))
     compute = payload["compute_dtype"] if compute_dtype is None \
         else compute_dtype
     g = decode_gamma(payload["gamma"], tuple(payload["gshape"]),
@@ -109,10 +137,15 @@ def decode_segment(payload: dict, compute_dtype=None
 
 class GammaStore:
     def __init__(self, root: str, storage_dtype=jnp.bfloat16,
-                 compute_dtype=jnp.float32):
+                 compute_dtype=jnp.float32, verify: bool = False):
         self.root = root
         self.storage_dtype = storage_dtype
         self.compute_dtype = compute_dtype
+        #: verify every payload read against the digest manifest
+        #: (digests.json) when one is present.  The streaming engine turns
+        #: this on automatically for multi-host / sharded runs; structural
+        #: corruption (a torn npz) is caught on every read regardless.
+        self.verify = verify
         os.makedirs(root, exist_ok=True)
         self._prefetched: dict[int, np.ndarray] = {}
         self._inflight: set[int] = set()
@@ -124,8 +157,15 @@ class GammaStore:
         self.io_bytes = 0          # instrumentation for the benches
         self.io_seconds = 0.0      # worker+sync read wall time
         self.payload_reads = 0     # Γ payload reads (meta() probes excluded)
+        self.verified_reads = 0    # payload reads digest-checked vs manifest
+        self.quarantined_sites = 0
+        self.repaired_sites = 0
+        self.repair_read_bytes = 0  # bytes served to peers for repair
         self._digest: Optional[str] = None
-        self._leaves: Optional[dict[str, str]] = None
+        # per-file leaf cache keyed by (st_mtime_ns, st_size, st_ino): an
+        # unchanged file never re-hashes, a rewritten/rotted one always does
+        self._sigleaves: dict[str, tuple[tuple, str]] = {}
+        self._manifest: Optional[tuple[tuple, dict]] = None
         self._n_sites = sum(1 for f in os.listdir(root)
                             if f.startswith("site_") and f.endswith(".npz"))
 
@@ -140,7 +180,7 @@ class GammaStore:
         if fresh:
             self._n_sites += 1
         self._digest = None            # content changed: recompute lazily
-        self._leaves = None
+        self._sigleaves.pop(site_filename(i), None)
 
     def write_mps(self, mps) -> None:
         for i in range(mps.n_sites):
@@ -160,16 +200,30 @@ class GammaStore:
         return sorted(f for f in os.listdir(self.root)
                       if f.startswith("site_") and f.endswith(".npz"))
 
+    def _stat_sig(self, path: str) -> tuple:
+        st = os.stat(path)
+        return (st.st_mtime_ns, st.st_size, st.st_ino)
+
+    def _leaf_for(self, f: str) -> str:
+        """Leaf digest of one site file, cached per stat signature — the
+        same ``(st_mtime_ns, st_size, st_ino)`` scheme the gateway's store
+        identity cache uses.  Repeated ``digest()`` calls and per-read
+        verification hash each file once until it changes on disk."""
+        path = os.path.join(self.root, f)
+        sig = self._stat_sig(path)
+        cached = self._sigleaves.get(f)
+        if cached is not None and cached[0] == sig:
+            return cached[1]
+        with open(path, "rb") as fh:
+            leaf = leaf_digest(f, fh.read())
+        self._sigleaves[f] = (sig, leaf)
+        return leaf
+
     def site_digests(self) -> dict[str, str]:
         """Per-site Merkle leaves (``{file name: leaf_digest}``) for every
-        site file this store holds.  Cached; invalidated by :meth:`put`."""
-        if self._leaves is None:
-            leaves = {}
-            for f in self._site_files():
-                with open(os.path.join(self.root, f), "rb") as fh:
-                    leaves[f] = leaf_digest(f, fh.read())
-            self._leaves = leaves
-        return dict(self._leaves)
+        site file this store holds.  Leaves are cached per file stat
+        signature (see :meth:`_leaf_for`), so only changed files re-hash."""
+        return {f: self._leaf_for(f) for f in self._site_files()}
 
     def digest(self) -> str:
         """Content digest of the materialized store: the Merkle root
@@ -194,30 +248,192 @@ class GammaStore:
         with open(tmp, "w") as fh:
             json.dump(self.site_digests(), fh, indent=0, sort_keys=True)
         os.replace(tmp, path)
+        self._manifest = None
         return path
+
+    def manifest_leaves(self) -> dict[str, str]:
+        """The digest manifest's leaves (``{}`` when no ``digests.json``),
+        cached per manifest file signature.  These are what verified reads
+        compare against — the manifest is the store's ground truth."""
+        path = os.path.join(self.root, MANIFEST_NAME)
+        try:
+            sig = self._stat_sig(path)
+        except OSError:
+            self._manifest = None
+            return {}
+        if self._manifest is not None and self._manifest[0] == sig:
+            return self._manifest[1]
+        with open(path) as fh:
+            data = json.load(fh)
+        self._manifest = (sig, data)
+        return data
 
     def meta(self, i: int = 0) -> tuple[int, ...]:
         """Γ shape of site i from the npz header — no tensor payload read."""
         with np.load(self._path(i)) as z:
             return tuple(int(x) for x in z["gshape"])
 
+    def quarantine_site(self, i: int) -> Optional[str]:
+        """Move a corrupt site file aside (rename to ``*.quarantine``) so
+        no later read can consume the bad bytes; returns the quarantine
+        path (None when the file is already gone)."""
+        path = self._path(i)
+        qpath = path + ".quarantine"
+        try:
+            os.replace(path, qpath)
+        except OSError:
+            return None
+        with self._lock:
+            self.quarantined_sites += 1
+        self._sigleaves.pop(site_filename(i), None)
+        self._digest = None
+        return qpath
+
     def _read_raw(self, i: int) -> tuple[np.ndarray, np.ndarray,
                                          tuple[int, ...], bool]:
         """One site's storage-format payload: (packed Γ, Λ, gshape, two_byte).
         This is the only place Γ payload bytes leave the disk — the I/O
-        counters here are what the only-root-reads contract asserts on."""
+        counters here are what the only-root-reads contract asserts on.
+
+        Verification happens here, at the choke point: when :attr:`verify`
+        is on and the manifest carries a leaf for site i, the file bytes
+        are digest-checked before decode; a torn/truncated npz is caught
+        structurally on every read regardless.  Bad bytes get one bounded
+        re-read (a transient torn read heals; real rot fails twice), then
+        the file is quarantined and :class:`CorruptSegment` raised — no
+        caller ever sees garbage tensors."""
         t0 = time.perf_counter()
-        with np.load(self._path(i)) as z:
-            raw, lam = z["gamma"], z["lam"]
-            gshape = tuple(int(x) for x in z["gshape"])
-            two_byte = bool(z["two_byte"])
+        path = self._path(i)
+        fname = site_filename(i)
+        fault = None
+        checked = False
+        raw = lam = gshape = two_byte = None
+        for _attempt in range(2):
+            fault = None
+            with open(path, "rb") as fh:   # FileNotFoundError propagates
+                data = fh.read()
+            if self.verify:
+                expected = self.manifest_leaves().get(fname)
+                if expected is not None:
+                    checked = True
+                    if leaf_digest(fname, data) != expected:
+                        fault = Fault(
+                            kind="corruption", site=i, store=self.root,
+                            message=f"Γ site {i} failed digest verification "
+                                    f"against {MANIFEST_NAME} in {self.root}")
+                        continue
+            try:
+                with np.load(io.BytesIO(data)) as z:
+                    raw, lam = z["gamma"], z["lam"]
+                    gshape = tuple(int(x) for x in z["gshape"])
+                    two_byte = bool(z["two_byte"])
+            except (zipfile.BadZipFile, ValueError, KeyError, EOFError,
+                    OSError) as e:
+                fault = Fault(
+                    kind="corruption", site=i, store=self.root,
+                    message=f"Γ site {i} is structurally corrupt "
+                            f"({type(e).__name__}: {e})")
+                continue
+            break
+        if fault is not None:
+            self.quarantine_site(i)
+            raise CorruptSegment(fault)
         # the worker thread and a caller's synchronous fall-back read can
         # race here — unsynchronized += would lose counts
         with self._lock:
             self.io_bytes += raw.nbytes + lam.nbytes
             self.io_seconds += time.perf_counter() - t0
             self.payload_reads += 1
+            if checked:
+                self.verified_reads += 1
         return raw, lam, gshape, two_byte
+
+    def verify_sites(self, sites=None) -> list[int]:
+        """Verify site files against the digest manifest; quarantine any
+        that fail and return their indices.  Cheap on a healthy store —
+        leaves are cached per stat signature, so unchanged files hash
+        once.  Sites with no file or no manifest entry are skipped
+        (nothing to verify against)."""
+        manifest = self.manifest_leaves()
+        if sites is None:
+            sites = [int(f[len("site_"):-len(".npz")])
+                     for f in self._site_files()]
+        bad = []
+        for i in sites:
+            f = site_filename(i)
+            expected = manifest.get(f)
+            if expected is None or not os.path.exists(
+                    os.path.join(self.root, f)):
+                continue
+            try:
+                ok = self._leaf_for(f) == expected
+            except OSError:
+                ok = False
+            if not ok:
+                self.quarantine_site(i)
+                bad.append(i)
+        return bad
+
+    def has_healthy_copy(self, i: int) -> bool:
+        """Does this root hold site i's file with bytes matching the
+        manifest?  The peer-repair eligibility probe — a metadata read,
+        never a Γ payload read."""
+        f = site_filename(i)
+        if not os.path.exists(os.path.join(self.root, f)):
+            return False
+        expected = self.manifest_leaves().get(f)
+        if expected is None:
+            return False
+        try:
+            return self._leaf_for(f) == expected
+        except OSError:
+            return False
+
+    def read_repair_bytes(self, i: int) -> bytes:
+        """Raw file bytes of site i for serving a peer repair, verified
+        against the manifest before leaving this host — never ship rot to
+        a peer.  This is the recovery path: it deliberately bypasses shard
+        ownership enforcement (a healthy replica of a *foreign* site is
+        exactly what repair needs) and is counted separately from payload
+        reads (:attr:`repair_read_bytes`)."""
+        f = site_filename(i)
+        with open(os.path.join(self.root, f), "rb") as fh:
+            data = fh.read()
+        expected = self.manifest_leaves().get(f)
+        if expected is not None and leaf_digest(f, data) != expected:
+            raise CorruptSegment(Fault(
+                kind="corruption", site=i, store=self.root,
+                message=f"repair source for Γ site {i} is itself corrupt"))
+        with self._lock:
+            self.repair_read_bytes += len(data)
+        return data
+
+    def restore_site(self, i: int, data: bytes) -> None:
+        """Atomically re-materialize site i from repair bytes (verified
+        against the manifest when one is present) and clear any
+        quarantined copy — the receiving end of a peer repair."""
+        f = site_filename(i)
+        expected = self.manifest_leaves().get(f)
+        if expected is not None and leaf_digest(f, data) != expected:
+            raise CorruptSegment(Fault(
+                kind="corruption", site=i, store=self.root,
+                message=f"repair payload for Γ site {i} failed "
+                        f"verification — refusing to install it"))
+        path = self._path(i)
+        tmp = path + ".repair_tmp"
+        with open(tmp, "wb") as fh:
+            fh.write(data)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+        try:
+            os.unlink(path + ".quarantine")
+        except OSError:
+            pass
+        self._sigleaves.pop(f, None)
+        self._digest = None
+        with self._lock:
+            self.repaired_sites += 1
 
     def _read(self, i: int):
         raw, lam, gshape, two_byte = self._read_raw(i)
@@ -331,10 +547,11 @@ class GammaStore:
             raw, lam, gshape, two_byte = self._read_raw(i)
             raws.append(raw)
             lams.append(lam)
-        return {"start": start, "gamma": np.stack(raws),
-                "lam": np.stack(lams), "gshape": gshape,
+        gamma, lam = np.stack(raws), np.stack(lams)
+        return {"start": start, "gamma": gamma, "lam": lam, "gshape": gshape,
                 "two_byte": two_byte, "storage_dtype": self.storage_dtype,
-                "compute_dtype": self.compute_dtype}
+                "compute_dtype": self.compute_dtype,
+                "crc": np.uint32(segment_checksum(gamma, lam))}
 
     def close(self):
         self._queue.put(None)

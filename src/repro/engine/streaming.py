@@ -64,6 +64,7 @@ from repro.core import sampler as S
 from repro.core.mps import MPS
 from repro.core.precision import real_dtype_of
 from repro.data import gamma_store as GS
+from repro.runtime.faults import CorruptSegment, Fault
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,8 +154,15 @@ class StreamingEngine:
                 self.store = ShardedGammaStore(
                     store.root, shard, self.runtime.process_index,
                     storage_dtype=store.storage_dtype,
-                    compute_dtype=store.compute_dtype)
+                    compute_dtype=store.compute_dtype, verify=True)
                 self._wrapped_store = self.store
+        # verified Γ I/O is ON by default whenever bytes cross process
+        # boundaries (broadcast or sharded): a flipped bit must surface as
+        # a structured CorruptSegment before any sample is emitted.  A
+        # single-process run keeps the caller's choice — structural
+        # corruption (a torn npz) is caught on every read regardless.
+        if self.runtime.process_count > 1:
+            self.store.verify = True
         shape = self.store.meta(0)        # header-only: no Γ payload read
         self.chi, self.d = shape[0], shape[2]
         self.gamma_dtype = np.dtype(self.store.compute_dtype)
@@ -200,12 +208,15 @@ class StreamingEngine:
         # runtime counters are scoped the same way: deltas since engine
         # creation, so shared runtimes serve many engines cleanly
         self._runtime_io0 = dict(self.runtime.io_counters())
+        self._store_q0 = (self.store.quarantined_sites,
+                          self.store.repaired_sites)
         self.stats = {"segments": 0, "io_wait_s": 0.0, "compute_s": 0.0,
                       "max_live_segments": 0, "store_io_s": 0.0,
                       "io_bytes": 0, "io_hidden_frac": 0.0,
                       "owned_segments": 0, "handoffs": 0,
                       "handoff_send_bytes": 0, "handoff_recv_bytes": 0,
-                      "gather_bytes": 0}
+                      "gather_bytes": 0, "quarantined_sites": 0,
+                      "repaired_sites": 0}
         for k in self._runtime_io0:
             self.stats[k] = 0
         # the shard algebra must hold for the REAL schedule (χ-stages can
@@ -254,8 +265,22 @@ class StreamingEngine:
         contraction of segment k exactly like the local read does."""
         payload = None
         if self.runtime.is_root:
-            payload = self.store.get_segment_raw(start, stop - start)
+            try:
+                payload = self.store.get_segment_raw(start, stop - start)
+            except CorruptSegment as e:
+                # the fault must cross the wire too: a root that raised
+                # while its peers block in the collective would hang the
+                # cluster — instead EVERY process receives the error frame
+                # and fails this round with the same structured fault
+                payload = {"start": start, "error": str(e),
+                           "fault": e.fault.to_dict()}
         payload = self.runtime.broadcast_segment(payload)
+        if payload.get("error") is not None:
+            fd = dict(payload.get("fault") or {})
+            raise CorruptSegment(Fault(
+                kind=fd.get("kind", "corruption"),
+                message=fd.get("message", str(payload["error"])),
+                site=fd.get("site"), store=fd.get("store")))
         if payload["start"] != start:
             # a real error, not an assert: schedule desync across processes
             # must never silently sample the wrong segment (python -O)
@@ -338,6 +363,8 @@ class StreamingEngine:
         engine serves many macro batches, but ``stats`` always describes
         the most recent walk (the pre-cache contract)."""
         self._store_io0 = (self.store.io_seconds, self.store.io_bytes)
+        self._store_q0 = (self.store.quarantined_sites,
+                          self.store.repaired_sites)
         self._runtime_io0 = dict(self.runtime.io_counters())
         with self._live_lock:
             live = self._live           # a warm prefetched segment counts
@@ -346,7 +373,8 @@ class StreamingEngine:
                           io_bytes=0, io_hidden_frac=0.0,
                           owned_segments=0, handoffs=0,
                           handoff_send_bytes=0, handoff_recv_bytes=0,
-                          gather_bytes=0)
+                          gather_bytes=0, quarantined_sites=0,
+                          repaired_sites=0)
         for k in self._runtime_io0:
             self.stats[k] = 0
 
@@ -551,6 +579,55 @@ class StreamingEngine:
         self._finish_walk()
         return np.concatenate(done, axis=0).T.astype(np.int32)
 
+    def _verify_and_repair_sharded(self, me: int) -> None:
+        """Pre-walk self-healing round (sharded plane): every host verifies
+        its OWNED slice against the digest manifest, the union of corrupt
+        sites is allgathered, and each corrupt site is re-materialized from
+        the lowest-ranked peer holding a healthy copy over the existing
+        tagged ``send``/``recv`` — block-cyclic replication (Adamski &
+        Brown) means a peer often holds the very bytes a rotted slice
+        needs.  With no healthy holder anywhere, EVERY process raises
+        :class:`CorruptSegment` in the same round, so the collectives stay
+        aligned and the job fails with a kind=corruption fault instead of
+        hanging or sampling garbage."""
+        if not getattr(self.store, "verify", False):
+            return
+        mine = self.store.verify_sites()
+        rounds = self.runtime.allgather_payloads(
+            {"corrupt": np.asarray(sorted(mine), dtype=np.int64)})
+        bad = sorted({int(s) for pay in rounds
+                      for s in np.asarray(pay["corrupt"]).ravel()})
+        for site in bad:
+            owner = self.shard.owner(site)
+            healthy = int(me != owner and self.store.has_healthy_copy(site))
+            votes = self.runtime.allgather_payloads(
+                {"healthy": np.asarray([healthy], dtype=np.int64)})
+            helpers = [r for r, pay in enumerate(votes)
+                       if int(np.asarray(pay["healthy"]).ravel()[0])]
+            if not helpers:
+                raise CorruptSegment(Fault(
+                    kind="corruption", site=site, store=self.store.root,
+                    message=f"Γ site {site} (owner host {owner}) is corrupt "
+                            f"and no peer holds a healthy copy — "
+                            f"unrepairable; failing the job cleanly"))
+            helper, tag = helpers[0], ("repair", site)
+            if me == helper:
+                data = self.store.read_repair_bytes(site)
+                self.runtime.send(owner, {
+                    "site": np.asarray(site, dtype=np.int64),
+                    "data": np.frombuffer(data, dtype=np.uint8)}, tag=tag)
+            elif me == owner:
+                pay = self.runtime.recv(helper, tag=tag)
+                if int(np.asarray(pay["site"])) != site:
+                    raise RuntimeError(
+                        f"repair desync: host {me} expected bytes for site "
+                        f"{site} but received site "
+                        f"{int(np.asarray(pay['site']))}")
+                self.store.restore_site(
+                    site, np.asarray(pay["data"], dtype=np.uint8).tobytes())
+            else:
+                self.runtime.observe_handoff(helper, tag=tag)
+
     def _sample_sharded(self, n_samples: int, key: jax.Array, *,
                         resume: bool, stop_after_segments: Optional[int],
                         ckpt_dir, pipeline: bool) -> np.ndarray:
@@ -588,6 +665,7 @@ class StreamingEngine:
         schedule = self._segment_schedule()
         owners = list(self._seg_owners)
         me = self.runtime.process_index
+        self._verify_and_repair_sharded(me)
         base_key_data = np.asarray(jax.random.key_data(key))
 
         idx0 = 0
@@ -717,6 +795,10 @@ class StreamingEngine:
         process finishes macro batch b before any starts b+1."""
         self.stats["store_io_s"] = self.store.io_seconds - self._store_io0[0]
         self.stats["io_bytes"] = self.store.io_bytes - self._store_io0[1]
+        self.stats["quarantined_sites"] = (self.store.quarantined_sites
+                                           - self._store_q0[0])
+        self.stats["repaired_sites"] = (self.store.repaired_sites
+                                        - self._store_q0[1])
         if self.stats["store_io_s"] > 0:
             hidden = max(0.0,
                          self.stats["store_io_s"] - self.stats["io_wait_s"])

@@ -33,6 +33,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -42,12 +43,29 @@ import numpy as np
 from repro import api
 from repro.core import dynamic_bond as DB
 from repro.core import mps as M
-from repro.data.gamma_store import GammaStore
+from repro.data.gamma_store import MANIFEST_NAME, GammaStore
 from repro.kernels import dispatch
 from repro.runtime.elastic import WorkQueue
+from repro.runtime.faults import DeadLetter, FaultError
 
 
 def main() -> None:
+    try:
+        _main()
+    except FaultError as e:
+        # the structured failure path: a verified-I/O / transport fault
+        # (quarantined Γ site, dead-lettered poison batch, …) exits with a
+        # machine-readable fault record instead of a stack trace — the
+        # operator sees WHAT rotted and WHERE, and exit code 2
+        # distinguishes "your data is bad" from "the driver crashed"
+        record = {"fault": e.fault.to_dict(), "error": str(e)}
+        if isinstance(e, DeadLetter):
+            record["report"] = e.report.to_dict()
+        print(json.dumps(record, indent=1), file=sys.stderr)
+        raise SystemExit(2)
+
+
+def _main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sites", type=int, default=64)
     ap.add_argument("--chi", type=int, default=64)
@@ -119,6 +137,13 @@ def main() -> None:
         if source.n_sites == 0:
             print(f"writing Γ store ({args.sites} sites) to {root}")
             source.write_mps(build_mps())
+            source.write_digest_manifest()
+        # verified Γ I/O (runtime/faults.py): with a digest manifest on
+        # disk every site read is sha256-checked — a rotted file is
+        # quarantined and the run exits 2 with a fault record instead of
+        # emitting samples from bad bytes.  A zip-level CRC only covers
+        # member payloads; the manifest covers the whole file.
+        source.verify = os.path.exists(os.path.join(root, MANIFEST_NAME))
     else:
         source = build_mps()
 

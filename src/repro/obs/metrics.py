@@ -402,6 +402,16 @@ class _ServiceObserver:
         self.walk_io = registry.counter(
             f"{p}_walk_io_bytes_total",
             "Per-walk engine byte counters", ["channel"])
+        self.faults = registry.counter(
+            f"{p}_faults_total",
+            "Faults recorded by the service, by taxonomy kind "
+            "(corruption/transport/poison/timeout/resource)", ["kind"])
+        self.lane_quarantines = registry.counter(
+            f"{p}_lane_quarantines_total",
+            "Crash-looping lanes placed on cooldown quarantine")
+        self.lane_readmits = registry.counter(
+            f"{p}_lane_readmits_total",
+            "Quarantined lanes readmitted after cooldown")
 
     def __call__(self, event: str, **fields) -> None:
         if event == "job_submit":
@@ -427,6 +437,12 @@ class _ServiceObserver:
             self.rejected_results.inc()
         elif event == "lane_fault":
             self.transport_lane_faults.inc()
+        elif event == "fault":
+            self.faults.labels(kind=fields.get("kind", "unknown")).inc()
+        elif event == "lane_quarantine":
+            self.lane_quarantines.inc()
+        elif event == "lane_readmit":
+            self.lane_readmits.inc()
         elif event.startswith("transport_"):
             self.transport_events.labels(event=event[len("transport_"):]
                                          ).inc()
@@ -473,6 +489,11 @@ def instrument_service(service, registry: MetricsRegistry,
                            "Duplicated batches from straggler reclaims")
     g_tworkers = registry.gauge(f"{p}_transport_workers",
                                 "Live persistent worker processes")
+    g_quar = registry.gauge(f"{p}_quarantined_lanes",
+                            "Lanes currently on crash-loop cooldown")
+    g_dl = registry.gauge(f"{p}_dead_letters",
+                          "Jobs failed by the bounded-retry dead-letter "
+                          "policy")
 
     def collect() -> None:
         st = service.stats()
@@ -488,6 +509,8 @@ def instrument_service(service, registry: MetricsRegistry,
         g_budget.set(adm["budget_bytes"] or 0)
         g_dup.set(st["stragglers"]["duplicates"])
         g_tworkers.set(st["transport"]["workers"])
+        g_quar.set(len(st["transport"].get("quarantined", ())))
+        g_dl.set(st.get("dead_letters", 0))
 
     registry.add_collector(collect)
     return obs

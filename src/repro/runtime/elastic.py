@@ -30,6 +30,7 @@ class BatchRecord:
     owner: Optional[str] = None
     started_at: Optional[float] = None
     done: bool = False
+    attempts: int = 0     # hand-outs (claims + steals): the retry bound
 
 
 class WorkQueue:
@@ -94,9 +95,15 @@ class WorkQueue:
     def _hand_out(self, r: BatchRecord, w: str, now: Optional[float]) -> int:
         r.owner = w
         r.started_at = now if now is not None else time.monotonic()
+        r.attempts += 1
         self._claims += 1
         self._emit("claim", batch=r.batch_id, worker=w)
         return r.batch_id
+
+    def attempts(self, b: int) -> int:
+        """Hand-out count of batch ``b`` — what the service's bounded-retry
+        / dead-letter policy (``max_batch_attempts``) is measured against."""
+        return self.records[b].attempts
 
     def claim(self, w: str, now: Optional[float] = None) -> Optional[int]:
         if w not in self.workers:

@@ -1,0 +1,170 @@
+"""Structured fault taxonomy: one failure model for the whole stack.
+
+Every failure the system can survive — a rotted Γ site file, a corrupted
+wire frame, a worker death, a straggler reclaim, a payload that
+deterministically kills its worker — folds into one structured
+:class:`Fault` with a *kind* from a small closed set and enough context
+(site / batch / lane / store) to act on it.  Faults ride job state
+through ``SamplingService.stats()``, the gateway's job status, and
+``MetricsRegistry`` labels, so an operator sees *what kind* of trouble a
+fleet is in, not just "error".
+
+Kinds (:data:`KINDS`):
+
+* ``corruption`` — bytes failed verification: a Γ site file whose Merkle
+  leaf digest mismatches the manifest, a torn npz, a wire payload whose
+  checksum does not match.  The offending file is quarantined
+  (``*.quarantine``) and, in sharded mode, repair from a healthy peer is
+  attempted before the job is failed.
+* ``transport`` — the fleet RPC plane faulted: worker death, dropped
+  result, broken pipe.  The batch requeues and recomputes bit-identically
+  (batch = f(seed, id)), bounded by ``max_batch_attempts``.
+* ``poison`` — one payload repeatedly killed its worker: after
+  ``max_batch_attempts`` the batch dead-letters its *job* instead of
+  crash-looping the lane forever.
+* ``timeout`` — a deadline fired: the RPC response deadline, or a
+  straggler's claim reclaimed by the EWMA deadline.
+* ``resource`` — the host ran out of something (memory, disk, fds).
+
+Exception types: :class:`FaultError` is the common base — an exception
+*carrying* a :class:`Fault`.  :class:`CorruptSegment` (data plane),
+:class:`DeadLetter` (a job failed by bounded retries, carrying the full
+:class:`FaultReport`), and :class:`CrashLoopLane` (a lane exceeding its
+fault window) specialize it.  :func:`classify` folds foreign exception
+types (``TransportError``, ``MemoryError``, ``TimeoutError``, ...) into
+a :class:`Fault` so callers never branch on exception classes twice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+#: the closed set of fault kinds — metrics label values, report keys
+KINDS = ("corruption", "transport", "poison", "timeout", "resource")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One classified failure event with its blast-radius context."""
+    kind: str
+    message: str
+    site: Optional[int] = None       # Γ chain site (data-plane faults)
+    batch: Optional[int] = None      # macro batch id (fleet faults)
+    lane: Optional[str] = None       # service lane / pool worker name
+    store: Optional[str] = None      # GammaStore root (data-plane faults)
+    at: float = dataclasses.field(default_factory=time.time)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {KINDS})")
+
+    def to_dict(self) -> dict:
+        """JSON-safe dict; context keys with no value are omitted."""
+        out = {"kind": self.kind, "message": self.message, "at": self.at}
+        for k in ("site", "batch", "lane", "store"):
+            v = getattr(self, k)
+            if v is not None:
+                out[k] = v
+        return out
+
+    def with_context(self, **ctx) -> "Fault":
+        """A copy with missing context fields filled in (never overwrites
+        context the original fault already carries)."""
+        updates = {k: v for k, v in ctx.items()
+                   if v is not None and getattr(self, k, None) is None}
+        return dataclasses.replace(self, **updates) if updates else self
+
+
+@dataclasses.dataclass
+class FaultReport:
+    """The fault history of one job — what the gateway serves on job
+    status and what a dead-lettered job fails with."""
+    faults: list = dataclasses.field(default_factory=list)
+    dead_letter: Optional[dict] = None   # {batch, attempts, kind} when poisoned
+
+    def add(self, fault: Fault) -> None:
+        self.faults.append(fault)
+
+    def counts(self) -> dict:
+        out = {k: 0 for k in KINDS}
+        for f in self.faults:
+            out[f.kind] += 1
+        return out
+
+    def to_dict(self) -> dict:
+        return {"faults": [f.to_dict() for f in self.faults],
+                "counts": self.counts(),
+                "dead_letter": self.dead_letter}
+
+
+class FaultError(RuntimeError):
+    """An exception carrying a structured :class:`Fault`."""
+
+    def __init__(self, fault: Fault):
+        super().__init__(fault.message)
+        self.fault = fault
+
+
+class CorruptSegment(FaultError):
+    """Bytes failed verification: digest mismatch, torn npz, or a wire
+    payload whose checksum does not match.  kind=corruption."""
+
+
+class DeadLetter(FaultError):
+    """A batch exhausted ``max_batch_attempts`` and failed its job; the
+    attached :attr:`report` is the job's full :class:`FaultReport`."""
+
+    def __init__(self, fault: Fault, report: FaultReport):
+        super().__init__(fault)
+        self.report = report
+
+
+class CrashLoopLane(FaultError):
+    """A lane exceeded its fault window — quarantine it (with a cooldown
+    readmit) instead of respawning it hot."""
+
+
+def classify(exc: BaseException, **context) -> Optional[Fault]:
+    """Fold an exception into a :class:`Fault`, or None for exceptions
+    that are not infrastructure faults (a plain job error — bad config,
+    a numerical assert — stays a job error).
+
+    ``context`` (site= / batch= / lane= / store=) fills in whatever the
+    exception itself did not record."""
+    if isinstance(exc, FaultError):
+        return exc.fault.with_context(**context)
+    # lazy import: transport pulls in subprocess machinery; faults stays
+    # importable from anywhere (checkpoint, data plane) without it
+    from repro.runtime.transport import TransportError, WorkerDied
+    if isinstance(exc, WorkerDied):
+        return Fault(kind="transport", message=str(exc), **context)
+    if isinstance(exc, TransportError):
+        kind = "timeout" if "deadline" in str(exc) else "transport"
+        return Fault(kind=kind, message=str(exc), **context)
+    if isinstance(exc, (TimeoutError,)):
+        return Fault(kind="timeout", message=str(exc), **context)
+    if isinstance(exc, (MemoryError, OSError)):
+        return Fault(kind="resource", message=f"{type(exc).__name__}: {exc}",
+                     **context)
+    return None
+
+
+def dead_letter_kind(batch_faults: list) -> str:
+    """The kind a dead-lettered batch fails with: ``poison`` when the
+    payload repeatedly took its worker down (≥2 transport faults on one
+    batch — the crash-loop signature), else the batch's dominant kind."""
+    crashes = sum(1 for f in batch_faults if f.kind == "transport")
+    if crashes >= 2:
+        return "poison"
+    if not batch_faults:
+        return "transport"
+    tally: dict[str, int] = {}
+    for f in batch_faults:
+        tally[f.kind] = tally.get(f.kind, 0) + 1
+    return max(tally, key=lambda k: (tally[k], k))
+
+
+__all__ = ["KINDS", "Fault", "FaultReport", "FaultError", "CorruptSegment",
+           "DeadLetter", "CrashLoopLane", "classify", "dead_letter_kind"]

@@ -11,7 +11,9 @@ fleet of long-lived workers can claim batches in any order).
 Layers, bottom up:
 
 * **frames** — length-prefixed messages on a byte stream: an 8-byte
-  big-endian length, then the body.  A request is one JSON frame; a
+  big-endian length plus a 4-byte CRC32 of the body, then the body (a
+  corrupt frame is rejected at decode as a lane fault, never parsed into
+  garbage).  A request is one JSON frame; a
   response is a JSON header frame (``{"kind": "result" | "error", ...}``)
   followed, for results, by one raw ``.npy`` frame.  Deliberately dumb:
   any queue/RPC system (gRPC, ZMQ, a Redis list) can carry the same
@@ -40,6 +42,7 @@ from __future__ import annotations
 import io
 import json
 import os
+import random
 import select
 import struct
 import subprocess
@@ -50,13 +53,21 @@ from typing import Optional
 
 import numpy as np
 
-_LEN = struct.Struct(">Q")
+import zlib
+
+#: frame header: 8-byte big-endian body length + 4-byte CRC32 of the body.
+#: The checksum means a corrupt frame is rejected at decode (a
+#: :class:`TransportError` — lane fault, batch requeues) instead of parsed
+#: into garbage a worker would faithfully compute on.
+_HDR = struct.Struct(">QI")
+_LEN = struct.Struct(">Q")     # legacy alias: header length parsing in tests
 SHUTDOWN = {"kind": "shutdown"}
 
 
 class TransportError(RuntimeError):
-    """A transport-level fault (worker death, drop, deadline).  The batch
-    is NOT lost — callers requeue it and recompute bit-identically."""
+    """A transport-level fault (worker death, drop, deadline, corrupt
+    frame).  The batch is NOT lost — callers requeue it and recompute
+    bit-identically."""
 
 
 class WorkerDied(TransportError):
@@ -68,23 +79,28 @@ class WorkerDied(TransportError):
 # ---------------------------------------------------------------------------
 
 def write_frame(stream, body: bytes) -> None:
-    stream.write(_LEN.pack(len(body)))
+    stream.write(_HDR.pack(len(body), zlib.crc32(body)))
     stream.write(body)
     stream.flush()
 
 
 def read_frame(stream) -> bytes:
-    """Blocking read of one frame; raises :class:`WorkerDied` on EOF."""
-    head = stream.read(_LEN.size)
-    if len(head) != _LEN.size:
+    """Blocking read of one frame; raises :class:`WorkerDied` on EOF and
+    :class:`TransportError` on a checksum mismatch."""
+    head = stream.read(_HDR.size)
+    if len(head) != _HDR.size:
         raise WorkerDied("stream closed mid-frame")
-    (n,) = _LEN.unpack(head)
+    n, crc = _HDR.unpack(head)
     body = b""
     while len(body) < n:
         chunk = stream.read(n - len(body))
         if not chunk:
             raise WorkerDied("stream closed mid-frame")
         body += chunk
+    if zlib.crc32(body) != crc:
+        raise TransportError(
+            f"frame checksum mismatch ({zlib.crc32(body):#010x} != "
+            f"{crc:#010x}) — corrupt frame rejected at decode")
     return body
 
 
@@ -164,8 +180,9 @@ class WorkerProcess:
         """``read_frame`` with a wall deadline enforced via select()."""
         fd = self._proc.stdout.fileno()
         buf = b""
-        need = _LEN.size
+        need = _HDR.size
         body_len = None
+        body_crc = None
         while True:
             remaining = deadline - time.monotonic()
             if remaining <= 0:
@@ -191,12 +208,20 @@ class WorkerProcess:
             buf += chunk
             if len(buf) == need:
                 if body_len is None:
-                    (body_len,) = _LEN.unpack(buf)
+                    body_len, body_crc = _HDR.unpack(buf)
                     buf, need = b"", body_len
                     if body_len == 0:
-                        return b""
+                        body = b""
+                    else:
+                        continue
                 else:
-                    return buf
+                    body = buf
+                if zlib.crc32(body) != body_crc:
+                    raise TransportError(
+                        f"worker {self.name!r} sent a corrupt frame "
+                        f"(crc {zlib.crc32(body):#010x} != "
+                        f"{body_crc:#010x}) — rejected at decode")
+                return body
 
     def call(self, payload: dict) -> np.ndarray:
         """Dispatch one job-batch payload; block for its streamed result."""
@@ -260,6 +285,79 @@ class WorkerProcess:
 # the pool: elastic membership + chaos injection points
 # ---------------------------------------------------------------------------
 
+class LaneHealth:
+    """Per-lane fault accounting: exponential respawn backoff with jitter,
+    and a sliding fault window that turns a crash-looping lane into a
+    :class:`~repro.runtime.faults.CrashLoopLane` instead of a hot respawn.
+
+    Shared by :class:`WorkerPool` and any in-process pool stand-in (the
+    fault-injection tests), so the quarantine policy is one implementation
+    everywhere."""
+
+    def __init__(self, backoff_base: float = 0.05, backoff_max: float = 2.0,
+                 fault_window_s: float = 30.0,
+                 max_faults_per_window: int = 5):
+        self.backoff_base = backoff_base
+        self.backoff_max = backoff_max
+        self.fault_window_s = fault_window_s
+        self.max_faults_per_window = max_faults_per_window
+        self._faults: dict[str, list[float]] = {}
+        self._streak: dict[str, int] = {}     # consecutive respawns per lane
+        self.backoff_seconds = 0.0            # total backoff slept (telemetry)
+
+    def record_fault(self, name: str, now: Optional[float] = None) -> None:
+        now = time.monotonic() if now is None else now
+        self._faults.setdefault(name, []).append(now)
+
+    def record_success(self, name: str) -> None:
+        self._streak.pop(name, None)
+
+    def forgive(self, name: str) -> None:
+        """Clear a lane's fault window and streak — called when the lane is
+        quarantined (the cooldown IS the penalty; readmit starts clean)."""
+        self._faults.pop(name, None)
+        self._streak.pop(name, None)
+
+    def window_faults(self, name: str, now: Optional[float] = None) -> int:
+        now = time.monotonic() if now is None else now
+        kept = [t for t in self._faults.get(name, ())
+                if now - t <= self.fault_window_s]
+        if kept:
+            self._faults[name] = kept
+        else:
+            self._faults.pop(name, None)
+        return len(kept)
+
+    def check_respawn(self, name: str, now: Optional[float] = None) -> float:
+        """Gate one respawn of ``name``: raises
+        :class:`~repro.runtime.faults.CrashLoopLane` when the lane's fault
+        window is exhausted, else returns the backoff delay (exponential
+        in the consecutive-respawn streak, ±50% jitter) the caller should
+        sleep before spawning."""
+        from repro.runtime.faults import CrashLoopLane, Fault
+        n_window = self.window_faults(name, now)
+        if n_window >= self.max_faults_per_window:
+            raise CrashLoopLane(Fault(
+                kind="transport", lane=name,
+                message=f"lane {name!r} crash-looping: {n_window} faults "
+                        f"inside {self.fault_window_s}s — quarantine it "
+                        f"(cooldown readmit) instead of respawning hot"))
+        streak = self._streak.get(name, 0)
+        self._streak[name] = streak + 1
+        if streak == 0:
+            return 0.0
+        delay = min(self.backoff_base * (2 ** (streak - 1)), self.backoff_max)
+        delay *= 0.5 + random.random()        # jitter: ±50%, decorrelates
+        self.backoff_seconds += delay
+        return delay
+
+    def stats(self) -> dict:
+        now = time.monotonic()
+        return {"lane_window_faults": {n: self.window_faults(n, now)
+                                       for n in sorted(self._faults)},
+                "backoff_seconds": self.backoff_seconds}
+
+
 class WorkerPool:
     """Named persistent workers, spawned/reaped on demand.
 
@@ -276,7 +374,7 @@ class WorkerPool:
 
     def __init__(self, python: Optional[str] = None,
                  env: Optional[dict] = None, timeout: float = 600.0,
-                 observer=None):
+                 observer=None, health: Optional[LaneHealth] = None):
         self.python = python
         self.env = env
         self.timeout = timeout
@@ -285,6 +383,7 @@ class WorkerPool:
         self.spawned = 0
         self.reaped = 0
         self.faults = 0               # TransportErrors surfaced to callers
+        self.health = LaneHealth() if health is None else health
         # telemetry seam (repro.obs.metrics): optional callable invoked as
         # observer(event, ...) for transport_{spawn,reap,fault,dispatch,
         # result}; errors swallowed — telemetry never perturbs dispatch
@@ -316,7 +415,16 @@ class WorkerPool:
         self._emit("transport_reap", worker=name)
 
     def respawn(self, name: str) -> WorkerProcess:
-        """Replace a dead/hung worker under its stable lane name."""
+        """Replace a dead/hung worker under its stable lane name.
+
+        Gated by :class:`LaneHealth`: consecutive respawns back off
+        exponentially (with jitter) so a flapping lane doesn't hot-loop
+        fork(), and a lane whose fault window is exhausted raises
+        :class:`~repro.runtime.faults.CrashLoopLane` — the caller
+        quarantines it (cooldown readmit) instead of respawning."""
+        delay = self.health.check_respawn(name)   # may raise CrashLoopLane
+        if delay > 0:
+            time.sleep(delay)
         self.reap(name, kill=True)
         return self.spawn(name)
 
@@ -345,19 +453,23 @@ class WorkerPool:
                         raise TransportError(
                             f"result from {name!r} dropped by injector")
             self._emit("transport_result", worker=name, nbytes=out.nbytes)
+            self.health.record_success(name)
             return out
         except TransportError:
             self.faults += 1
+            self.health.record_fault(name)
             self._emit("transport_fault", worker=name)
             raise
 
     def stats(self) -> dict:
-        return {"workers": len(self.workers),
-                "spawned": self.spawned, "reaped": self.reaped,
-                "faults": self.faults,
-                "batches": {n: w.batches for n, w in self.workers.items()},
-                "dispatch_bytes": sum(w.dispatch_bytes
-                                      for w in self.workers.values())}
+        out = {"workers": len(self.workers),
+               "spawned": self.spawned, "reaped": self.reaped,
+               "faults": self.faults,
+               "batches": {n: w.batches for n, w in self.workers.items()},
+               "dispatch_bytes": sum(w.dispatch_bytes
+                                     for w in self.workers.values())}
+        out.update(self.health.stats())
+        return out
 
     def close(self) -> None:
         for name in list(self.workers):

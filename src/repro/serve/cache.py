@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import os
 import shutil
 import threading
@@ -120,8 +121,8 @@ class ResultCache:
 
     ``get_or_begin`` is the single entry point; its status return drives
     the gateway's hit / attach / miss paths.  ``stats()`` has a stable
-    schema (hits/misses/attaches/evictions/entries/disk_entries/
-    disk_bytes, always present)."""
+    schema (hits/misses/attaches/evictions/corrupt_entries/entries/
+    disk_entries/disk_bytes, always present)."""
 
     def __init__(self, cache_dir: Optional[str] = None,
                  max_bytes: Optional[int] = None,
@@ -137,8 +138,10 @@ class ResultCache:
         self.misses = 0
         self.attaches = 0
         self.evictions = 0
+        self.corrupt_entries = 0   # disk entries dropped as unreadable
         # the telemetry seam (repro.obs): observer(event) for
-        # "cache_hit" / "cache_miss" / "cache_attach" / "cache_evict"
+        # "cache_hit" / "cache_miss" / "cache_attach" / "cache_evict" /
+        # "cache_corrupt"
         self.observer = None
 
     def _emit(self, event: str, **fields) -> None:
@@ -168,8 +171,17 @@ class ResultCache:
             entry.finish()
             os.utime(d)                    # LRU recency = dir mtime
             return entry
-        except (OSError, ValueError, KeyError):
-            shutil.rmtree(d, ignore_errors=True)   # corrupt entry: drop it
+        except (OSError, ValueError, KeyError) as e:
+            # corrupt entry: drop it — but LOUDLY, not silently.  A cache
+            # entry that stopped deserializing means disk rot or a torn
+            # write; operators need the count (metrics) and the key (log),
+            # and the request falls through to a clean recompute.
+            self.corrupt_entries += 1      # caller holds self._lock
+            self._emit("cache_corrupt", key=key)
+            logging.getLogger(__name__).warning(
+                "result cache: dropping corrupt disk entry %s (%s: %s)",
+                key, type(e).__name__, e)
+            shutil.rmtree(d, ignore_errors=True)
             return None
 
     def _store_disk(self, entry: Entry) -> None:
@@ -295,6 +307,7 @@ class ResultCache:
             running = sum(e.state == RUNNING for e in self._entries.values())
             return {"hits": self.hits, "misses": self.misses,
                     "attaches": self.attaches, "evictions": self.evictions,
+                    "corrupt_entries": self.corrupt_entries,
                     "entries": len(self._entries), "running": running,
                     "disk_entries": len(disk),
                     "disk_bytes": sum(s for _, _, s in disk),

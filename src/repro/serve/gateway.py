@@ -117,6 +117,11 @@ class _Record:
             out["progress"] = {
                 k: v for k, v in self.handle.progress.items()
                 if isinstance(v, (int, float, bool, str))}
+            report = self.handle.fault_report()
+            if report is not None:
+                # the structured failure surface: fault taxonomy records +
+                # the dead-letter when bounded retries gave the job up
+                out["fault_report"] = report
         return out
 
 
@@ -167,12 +172,16 @@ class Gateway:
                                    "Result-cache in-memory entries")
         g_active = registry.gauge(f"{prefix}_tenant_active_jobs",
                                   "Executing jobs across tenants")
+        g_corrupt = registry.gauge(f"{prefix}_cache_corrupt_entries",
+                                   "Corrupt result-cache disk entries "
+                                   "dropped (disk rot / torn writes)")
 
         def collect() -> None:
             cs = self.cache.stats()
             g_disk.set(cs["disk_bytes"])
             g_entries.set(cs["entries"])
             g_active.set(self.tenants.stats()["active_jobs"])
+            g_corrupt.set(cs.get("corrupt_entries", 0))
 
         registry.add_collector(collect)
 

@@ -42,14 +42,15 @@ class ShardedGammaStore(GammaStore):
     """One host's ownership-scoped view of a (possibly sliced) store."""
 
     def __init__(self, root: str, shard: ShardMap, host: int,
-                 storage_dtype=jnp.bfloat16, compute_dtype=jnp.float32):
+                 storage_dtype=jnp.bfloat16, compute_dtype=jnp.float32,
+                 verify: bool = False):
         if not 0 <= host < shard.n_hosts:
             raise ValueError(f"host {host} outside the shard map's "
                              f"[0, {shard.n_hosts}) hosts")
         self.shard = shard
         self.host = int(host)
         super().__init__(root, storage_dtype=storage_dtype,
-                         compute_dtype=compute_dtype)
+                         compute_dtype=compute_dtype, verify=verify)
         # n_sites is the GLOBAL chain length: schedules, identity padding
         # and digests are all chain-wide notions even when this root holds
         # only a slice of the files
@@ -115,8 +116,7 @@ class ShardedGammaStore(GammaStore):
                 elif f in manifest:
                     leaves[f] = manifest[f]
                 elif os.path.exists(os.path.join(self.root, f)):
-                    with open(os.path.join(self.root, f), "rb") as fh:
-                        leaves[f] = leaf_digest(f, fh.read())
+                    leaves[f] = self._leaf_for(f)
                 else:
                     raise FileNotFoundError(
                         f"sharded digest needs {MANIFEST_NAME} covering "
@@ -128,16 +128,22 @@ class ShardedGammaStore(GammaStore):
     def site_digests(self) -> dict[str, str]:
         """Leaves for this host's OWNED files only (foreign files on a
         shared root are not this host's to answer for — and hashing them
-        would defeat the capacity-scaling story)."""
-        if self._leaves is None:
-            leaves = {}
-            for f in self._site_files():
-                i = int(f[len("site_"):-len(".npz")])
-                if self.shard.owns(self.host, i):
-                    with open(os.path.join(self.root, f), "rb") as fh:
-                        leaves[f] = leaf_digest(f, fh.read())
-            self._leaves = leaves
-        return dict(self._leaves)
+        would defeat the capacity-scaling story).  Leaves are cached per
+        file stat signature (see :meth:`GammaStore._leaf_for`)."""
+        leaves = {}
+        for f in self._site_files():
+            i = int(f[len("site_"):-len(".npz")])
+            if self.shard.owns(self.host, i):
+                leaves[f] = self._leaf_for(f)
+        return leaves
+
+    def verify_sites(self, sites=None) -> list[int]:
+        """Pre-walk verification of this host's OWNED slice only — the
+        engine's repair round calls this before the lockstep walk so a
+        rotted site surfaces while a healthy peer can still serve it."""
+        if sites is None:
+            sites = list(self.shard.owned_sites(self.host))
+        return super().verify_sites(sites)
 
 
 def materialize_shard(src_root: str, dst_root: str, shard: ShardMap,
