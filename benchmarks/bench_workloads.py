@@ -1,0 +1,123 @@
+"""Workloads bench: clamping overhead, ingest throughput, scenario scores.
+
+Three paper-facing numbers for the workloads subsystem (PR 10):
+
+* **clamp overhead** — clamped vs unclamped sampling throughput on the
+  same chain/seed.  The clamped walk adds one `where` + one gathered
+  log per site, so the ratio should sit near 1.0; a drop means the
+  conditional path stopped sharing the unclamped arithmetic.
+* **ingest throughput** — BYO-MPS ingest MB/s end to end (validate →
+  QR canonicalize → embed → store write + digest manifest).
+* **scenario scores** — each registered scenario's score + wall time,
+  so eval-harness quality rides the same BENCH.json trajectory as perf.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/bench_workloads.py [--smoke] [--json P]
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+import common
+from repro import api
+from repro.core import mps as M
+from repro.workloads import ingest as IG
+from repro.workloads import scenarios as SC
+
+
+def _throughput(mps, n: int, key, clamp=None) -> float:
+    """Samples/s through the session front door (median of 3)."""
+    config = api.SamplerConfig(clamp=clamp)
+    with api.SamplingSession(mps, config) as session:
+        def run():
+            return session.sample(n, key)
+        seconds = common.time_fn(run, warmup=1, iters=3)
+    return n / seconds
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sites", type=int, default=0)
+    ap.add_argument("--chi", type=int, default=0)
+    ap.add_argument("--samples", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="BENCH trajectory file ('' disables; default: "
+                         "benchmarks/BENCH.json for full runs, disabled "
+                         "for --smoke)")
+    args = ap.parse_args()
+    json_path = (args.json if args.json is not None
+                 else ("" if args.smoke else common.BENCH_JSON))
+
+    sites = args.sites or (16 if args.smoke else 64)
+    chi = args.chi or (8 if args.smoke else 32)
+    n = args.samples or (256 if args.smoke else 2048)
+    d = 3
+
+    common.header()
+
+    # -- clamp overhead ------------------------------------------------------
+    mps = M.gbs_like_mps(jax.random.key(0), sites, chi, d)
+    key = jax.random.key(1)
+    clamp = {sites // 3: 1, (2 * sites) // 3: 0}
+    free_sps = _throughput(mps, n, key)
+    clamped_sps = _throughput(mps, n, key, clamp=clamp)
+    overhead = free_sps / clamped_sps
+    common.emit("unclamped_samples_per_s", 1.0 / free_sps, f"{free_sps:.0f}")
+    common.emit("clamped_samples_per_s", 1.0 / clamped_sps,
+                f"{clamped_sps:.0f}")
+    common.emit("clamp_overhead_x", 0.0, f"{overhead:.3f}")
+
+    # -- ingest throughput ---------------------------------------------------
+    ing_sites = sites
+    ing_chi = chi
+    rng = np.random.default_rng(0)
+    dims = [1] + [ing_chi] * (ing_sites - 1) + [1]
+    tensors = [rng.normal(size=(dims[i], dims[i + 1], 2))
+               + 1j * rng.normal(size=(dims[i], dims[i + 1], 2))
+               for i in range(ing_sites)]
+    in_bytes = sum(t.nbytes for t in tensors)
+    root = tempfile.mkdtemp(prefix="bench_ingest_")
+    try:
+        t0 = time.perf_counter()
+        store, report = IG.ingest_mps(tensors, root, semantics="born")
+        ingest_s = time.perf_counter() - t0
+        store.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    ingest_mb_s = in_bytes / 1e6 / ingest_s
+    common.emit("ingest", ingest_s, f"{ingest_mb_s:.1f}MB/s")
+
+    # -- scenarios -----------------------------------------------------------
+    scen_cfg = SC.ScenarioConfig(
+        n_samples=(500 if args.smoke else 4000), json_path="")
+    scenarios = {}
+    for name in SC.available_scenarios():
+        result = SC.run_scenario(name, scen_cfg)
+        scenarios[name] = {"passed": result.passed,
+                           "score": round(result.score, 6),
+                           "wall_s": round(result.wall_s, 3)}
+        common.emit(f"scenario_{name}", result.wall_s,
+                    f"{'PASS' if result.passed else 'FAIL'}:"
+                    f"{result.score:.4g}")
+
+    common.append_bench_record(
+        json_path, "workloads",
+        {"sites": sites, "chi": chi, "d": d, "n_samples": n,
+         "clamp": sorted(clamp.items()), "smoke": bool(args.smoke)},
+        unclamped_samples_per_s=round(free_sps, 1),
+        clamped_samples_per_s=round(clamped_sps, 1),
+        clamp_overhead_x=round(overhead, 4),
+        ingest_mb_per_s=round(ingest_mb_s, 2),
+        ingest_max_isometry_error=report.max_isometry_error,
+        scenarios=scenarios)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Conditional (clamped) sampling: exact, rejection-free conditioning.
+
+The workloads subsystem (``repro.workloads``) lets any sampling run pin a
+subset of sites to fixed outcomes.  Because every site's uniform draw is
+an independent ``fold_in(base_key, site)`` (paper §4.1), forcing site i
+through the normal collapse path changes *nothing* about the other
+sites' draws — the clamped walk samples exactly from
+``P(free sites | clamped sites)`` with zero rejected samples, and the
+per-sample ``log_prob`` it returns is the exact Born weight
+``ln P(clamped outcomes | sampled prefix)`` of the clamped branch.
+
+This script shows the three things you can do with that:
+
+1. condition a generative model on observed sites and read off the
+   posterior marginals of the rest;
+2. estimate the probability of the clamped event itself (``E[exp
+   log_prob] = P(clamp)``) — compared against the exact joint here;
+3. score fully-specified outcomes: clamping *every* site turns the
+   sampler into an exact likelihood evaluator (``log_prob`` = log joint).
+
+Run:  PYTHONPATH=src python examples/conditional_sampling.py
+"""
+import itertools
+
+import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro import api                              # noqa: E402
+from repro.core import mps as M                    # noqa: E402
+
+SITES, CHI, D, N = 6, 4, 3, 4000
+CLAMP = {2: 1, 4: 0}                               # pin site 2 → 1, site 4 → 0
+
+
+def main() -> None:
+    mps = M.random_linear_mps(jax.random.key(0), SITES, CHI, D)
+
+    # -- 1. posterior marginals of the free sites --------------------------
+    config = api.SamplerConfig(clamp=CLAMP)
+    with api.SamplingSession(mps, config) as session:
+        samples = session.sample(N, jax.random.key(1))
+        log_prob = session.stats["log_prob"]       # (N,) ln P(clamp | prefix)
+    samples = np.asarray(samples)
+    assert all(np.all(samples[:, s] == v) for s, v in CLAMP.items())
+
+    # exact conditionals by brute-force joint restriction (small chain)
+    joint = M.enumerate_probabilities(mps)
+    outs = np.array(list(itertools.product(range(D), repeat=SITES)))
+    sel = np.all([outs[:, s] == v for s, v in CLAMP.items()], axis=0)
+    cond = joint[sel] / joint[sel].sum()
+    outs_c = outs[sel]
+
+    w = np.exp(np.asarray(log_prob, dtype=np.float64))
+    print(f"conditioned on {CLAMP}:  (estimate vs exact)")
+    for i in range(SITES):
+        if i in CLAMP:
+            continue
+        est = [float(w[samples[:, i] == s].sum() / w.sum())
+               for s in range(D)]
+        exact = [float(cond[outs_c[:, i] == s].sum()) for s in range(D)]
+        pairs = "  ".join(f"{e:.3f}/{x:.3f}" for e, x in zip(est, exact))
+        print(f"  site {i}: {pairs}")
+
+    # -- 2. the clamp marginal from the weights ----------------------------
+    p_exact = float(joint[sel].sum())
+    print(f"P(clamp): estimated {w.mean():.5f}  exact {p_exact:.5f}")
+
+    # -- 3. full clamp = exact likelihood evaluation -----------------------
+    outcome = tuple(int(x) for x in samples[0])    # score one drawn config
+    config = api.SamplerConfig(clamp=dict(enumerate(outcome)))
+    with api.SamplingSession(mps, config) as session:
+        session.sample(1, jax.random.key(2))
+        lp = float(session.stats["log_prob"][0])
+    exact_lp = float(np.log(joint[np.ravel_multi_index(outcome,
+                                                       (D,) * SITES)]))
+    print(f"log P{outcome}: clamped walk {lp:.8f}  joint {exact_lp:.8f}")
+    assert abs(lp - exact_lp) < 1e-8
+
+
+if __name__ == "__main__":
+    main()

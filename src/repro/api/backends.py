@@ -169,6 +169,9 @@ class InMemBackend(Backend):
         _warm_kernel_autotuner(plan, n, mps.chi, mps.phys_dim,
                                mps.gammas.dtype)
 
+        if plan.clamp is not None:
+            return self._sample_clamped(req, mps, cfg)
+
         if plan.scheme == "seq":
             if plan.stages is not None:
                 prof = np.asarray(plan.chi_profile)
@@ -205,6 +208,49 @@ class InMemBackend(Backend):
                 req.mesh, seg, env, key, s0, plan.pconfig, cfg,
                 log_scale=log_scale)
             blocks.append(np.asarray(samples))
+        return np.concatenate(blocks, axis=0).T.astype(np.int32)
+
+    def _sample_clamped(self, req: SampleRequest, mps, cfg) -> np.ndarray:
+        """Conditional sampling (``plan.clamp``, repro.workloads): one
+        χ-stage loop over the clamped segment runner, for every scheme.
+
+        seq runs the clamped in-memory segment; dp the clamped shard_map
+        segment; tp_* route through the dp walk over the mesh's non-model
+        axes (``core.clamped.dp_equivalent_pconfig`` — §4.1 makes every
+        schedule draw-identical per seed, so a clamped tp cell would emit
+        the same bits).  The per-sample ``log_prob`` lands in
+        ``req.stats`` → ``session.stats``.
+        """
+        from repro.core import clamped as CL
+        from repro.core import dynamic_bond as DB
+        from repro.core import parallel as PP
+        from repro.core.mps import MPS
+        from repro.workloads.clamp import clamp_map, segment_clamp_arrays
+
+        plan, n, key = req.plan, req.n_samples, req.key
+        cmap = clamp_map(plan.clamp)
+        pconf = (CL.dp_equivalent_pconfig(plan.pconfig)
+                 if plan.pconfig is not None else None)
+        stages = plan.stages or ((0, mps.n_sites, mps.chi),)
+        env = PP.segment_env_init(n, stages[0][2], mps.gammas.dtype)
+        log_scale = log_prob = None
+        blocks = []
+        for s0, s1, chi_s in stages:
+            seg = MPS(mps.gammas[s0:s1, :chi_s, :chi_s, :],
+                      mps.lambdas[s0:s1, :chi_s], mps.semantics)
+            env = DB.fit_env(env, chi_s)
+            mask, vals = segment_clamp_arrays(cmap, s0, s1 - s0, n)
+            if pconf is None:
+                samples, env, log_scale, log_prob = CL.clamped_segment(
+                    seg.gammas, seg.lambdas, env, key, s0, mask, vals, cfg,
+                    log_scale=log_scale, log_prob=log_prob,
+                    micro_batch=plan.micro_batch)
+            else:
+                samples, env, log_scale, log_prob = CL.sample_segment_clamped(
+                    req.mesh, seg, env, key, s0, mask, vals, pconf, cfg,
+                    log_scale=log_scale, log_prob=log_prob)
+            blocks.append(np.asarray(samples))
+        req.stats["log_prob"] = np.asarray(log_prob)
         return np.concatenate(blocks, axis=0).T.astype(np.int32)
 
 
@@ -244,7 +290,8 @@ class StreamedBackend(Backend):
                 pconfig=plan.pconfig,
                 chi_profile=plan.chi_profile,
                 runtime=req.runtime,
-                shard=shard)
+                shard=shard,
+                clamp=plan.clamp)
 
         if req.engines is None:         # direct Backend use: walk and release
             eng = build()
@@ -268,7 +315,8 @@ class StreamedBackend(Backend):
         # thread) until session close
         eng_key = (engine_scheme, plan.semantics, plan.segment_len,
                    plan.micro_batch, plan.chi_profile, plan.checkpoint_every,
-                   plan.sampler_config, plan.pconfig, plan.shard_block)
+                   plan.sampler_config, plan.pconfig, plan.shard_block,
+                   plan.clamp)
         eng = req.engines.get(eng_key)
         if eng is None:
             new = build()

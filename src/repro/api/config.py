@@ -46,6 +46,14 @@ field                   meaning
                         number of segments), or AUTO (one segment per
                         block).  Streamed backend only; composes with
                         DP-over-samples and dynamic χ
+``clamp``               conditional sampling (``repro.workloads``): a
+                        ``{site: outcome}`` / ``{site: per-sample array}``
+                        mapping fixing outcomes at a subset of sites; the
+                        walk forces those outcomes into the collapse path
+                        and returns the clamped branch's Born weight as a
+                        per-sample ``log_prob`` in ``session.stats``.
+                        ``None``/``{}`` = unclamped (bit-identical to the
+                        plain sampler)
 ``store_root``          where a streamed session materializes Γ when built
                         from an in-memory MPS (default: temp dir)
 ``checkpoint_dir``      per-segment checkpoint directory (streamed backend)
@@ -67,6 +75,7 @@ from repro.core.parallel import ParallelConfig
 from repro.core.perfmodel import (Hardware, TPU_V5E, Workload,
                                   choose_tp_scheme)
 from repro.core.sampler import SamplerConfig as CoreSamplerConfig
+from repro.workloads.clamp import normalize_clamp, validate_clamp
 
 AUTO = "auto"
 
@@ -97,12 +106,22 @@ class SamplerConfig:
     # §3.1 broadcast plane; int = sites per ownership block; AUTO = one
     # segment per block
     shard: Union[int, str, None] = None
+    # conditional sampling (repro.workloads): {site: outcome} or
+    # {site: per-sample outcomes}; normalized at construction to the
+    # canonical hashable spec (service coalescing cells and streamed
+    # engine keys contain this config).  None/{} = unclamped.
+    clamp: Optional[Any] = None
     store_root: Optional[str] = None
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 1
     # planner inputs for the AUTO fields
     hardware: Hardware = TPU_V5E
     device_budget: Optional[float] = None
+
+    def __post_init__(self):
+        # malformed specs raise ValueError here — the gateway turns that
+        # into a clean 400 ("invalid config: ...") via config_from_dict
+        object.__setattr__(self, "clamp", normalize_clamp(self.clamp))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +147,11 @@ class SessionPlan:
     # process count at execution time, so the same plan serializes cleanly
     # to a remote worker (which runs the degenerate 1-host shard).
     shard_block: Optional[int] = None
+    # conditional sampling: the normalized clamp spec (repro.workloads),
+    # range-validated against this plan's chain/batch; None = unclamped —
+    # a None-clamp plan executes the UNCHANGED unclamped code paths, so
+    # empty-clamp bit-identity holds by construction.
+    clamp: Optional[tuple] = None
 
     @property
     def cell(self) -> tuple[str, str, str, str, str]:
@@ -353,6 +377,19 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
                             block=shard_block)
             smap.owners_for(chain_segments(n_sites, segment_len, stages))
 
+    # -- conditional sampling (repro.workloads clamp) -----------------------
+    clamp = config.clamp                # already normalized by __post_init__
+    if clamp is not None:
+        if backend == "remote":
+            # rides the serialized config; the WORKER validates against the
+            # store it opens (chain length / d are not known here)
+            pass
+        else:
+            validate_clamp(clamp, n_sites=n_sites, d=d, n_samples=n_samples)
+        if scheme == "baseline19":
+            raise ValueError("clamped sampling does not compose with the "
+                             "[19] pipeline baseline")
+
     pconfig = None
     if scheme in ("dp", "tp_single", "tp_double"):
         # shard the batch over EVERY non-model mesh axis ("pod" folds into
@@ -374,4 +411,4 @@ def resolve_plan(config: SamplerConfig, *, n_samples: int, n_sites: int,
                        stages=stages,
                        checkpoint_every=config.checkpoint_every,
                        sampler_config=sampler_config, pconfig=pconfig,
-                       shard_block=shard_block)
+                       shard_block=shard_block, clamp=clamp)

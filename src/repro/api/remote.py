@@ -68,6 +68,12 @@ def config_to_dict(config) -> dict:
     out["hardware"] = dataclasses.asdict(config.hardware)
     if out.get("chi_profile") is not None:
         out["chi_profile"] = [int(c) for c in out["chi_profile"]]
+    if out.get("clamp") is not None:
+        # canonical pair-list form: json would coerce the tuples anyway,
+        # but an explicit shape keeps payload_cell's sorted dump stable
+        # (the worker-side SamplerConfig re-normalizes on construction)
+        out["clamp"] = [[int(s), list(o) if isinstance(o, tuple) else int(o)]
+                        for s, o in out["clamp"]]
     return out
 
 

@@ -121,7 +121,14 @@ class StreamingEngine:
                  checkpoint_dir: Optional[str] = None,
                  chi_profile=None,
                  runtime: Optional[ClusterRuntime] = None,
-                 shard=None):
+                 shard=None, clamp=None):
+        from repro.workloads.clamp import clamp_map
+        # conditional sampling (repro.workloads): a normalized clamp spec
+        # forces outcomes at a subset of sites; per-segment (mask, vals)
+        # operands are built on the fly in _run_segment_clamped and the
+        # walk carries a per-sample log_prob alongside log_scale, surfaced
+        # through stats["log_prob"].  None = unclamped (unchanged paths).
+        self.clamp_map = clamp_map(clamp)
         self.store = store
         self._source_store = store
         self._wrapped_store = None
@@ -340,6 +347,31 @@ class StreamingEngine:
                                  self.pconfig, self.config,
                                  log_scale=log_scale)
 
+    def _run_segment_clamped(self, seg: MPS, env, log_scale, log_prob, key,
+                             start: int):
+        """Clamped twin of ``_run_segment``: routes through the
+        ``core.clamped`` walks with per-segment (mask, vals) built from the
+        clamp spec.  Identity pad sites past the chain end are unclamped by
+        construction, so they stay exact no-ops (outcome 0, zero weight).
+        Returns ``(samples, env', log_scale', log_prob')``."""
+        from repro.core import clamped as CL
+        from repro.workloads.clamp import segment_clamp_arrays
+
+        n = env.shape[0]
+        mask, vals = segment_clamp_arrays(self.clamp_map, start,
+                                          seg.n_sites, n)
+        if self.plan.scheme == "inmem":
+            return CL.clamped_segment(
+                seg.gammas, seg.lambdas, env, key, start, mask, vals,
+                self.config, log_scale=log_scale, log_prob=log_prob,
+                micro_batch=self.plan.micro_batch)
+        # tp schemes run the clamped dp walk over the non-model axes
+        # (every schedule draws the same randoms per seed — §4.1)
+        return CL.sample_segment_clamped(
+            self.mesh, seg, env, key, start, mask, vals,
+            CL.dp_equivalent_pconfig(self.pconfig), self.config,
+            log_scale=log_scale, log_prob=log_prob)
+
     def _load_sample_blocks(self, up_to_site: int,
                             ckpt_dir: str) -> list[np.ndarray]:
         """Read back the per-segment sample blocks covering [0, up_to_site)."""
@@ -377,6 +409,7 @@ class StreamingEngine:
                           repaired_sites=0)
         for k in self._runtime_io0:
             self.stats[k] = 0
+        self.stats.pop("log_prob", None)   # set per walk, clamped only
 
     def _take_warm(self, seg_key) -> Optional[Future]:
         """Claim the gang-scheduled first-segment fetch if it matches this
@@ -443,6 +476,16 @@ class StreamingEngine:
 
         ckpt_dir = (self.checkpoint_dir if checkpoint_dir is self._UNSET
                     else checkpoint_dir)
+        if self.clamp_map is not None and (resume or ckpt_dir):
+            # the checkpoint unit is SamplerState(env, key, log_scale) —
+            # it has no log_prob slot, so a resumed clamped walk would
+            # silently drop the conditional weights accumulated before the
+            # kill.  Refuse loudly; clamped macro batches are idempotent
+            # work items (run_queue) — rerun the batch instead.
+            raise ValueError(
+                "clamped walks do not checkpoint or resume (the sampler "
+                "state has no log_prob slot) — drop checkpoint_dir/resume "
+                "and rely on idempotent macro batches")
         if ckpt_dir:
             os.makedirs(ckpt_dir, exist_ok=True)
         if self.shard is not None and self.runtime.process_count > 1:
@@ -469,6 +512,8 @@ class StreamingEngine:
         env = PP.segment_env_init(n_samples, schedule[0][2], self.gamma_dtype)
         log_scale = jnp.zeros((n_samples,),
                               dtype=real_dtype_of(env.dtype))
+        log_prob = (jnp.zeros((n_samples,), dtype=real_dtype_of(env.dtype))
+                    if self.clamp_map is not None else None)
         if resume:
             if not ckpt_dir:
                 raise ValueError("resume=True needs a checkpoint_dir")
@@ -533,8 +578,13 @@ class StreamingEngine:
             with self.runtime.compute_lock():
                 seg = MPS(gd, ld, self.semantics)
                 env = fit_env(env, chi_s)  # χ-stage transition (no-op within)
-                samples, env, log_scale = self._run_segment(
-                    seg, env, log_scale, key, start)
+                if self.clamp_map is None:
+                    samples, env, log_scale = self._run_segment(
+                        seg, env, log_scale, key, start)
+                else:
+                    samples, env, log_scale, log_prob = \
+                        self._run_segment_clamped(seg, env, log_scale,
+                                                  log_prob, key, start)
                 samples = np.asarray(samples[:real])  # drop identity pads
                 jax.block_until_ready((env, log_scale))
             self.stats["compute_s"] += time.perf_counter() - t0
@@ -576,6 +626,8 @@ class StreamingEngine:
                     self._release(gd, ld)      # the ≤2-live bound breaks
                 break
 
+        if self.clamp_map is not None:
+            self.stats["log_prob"] = np.asarray(log_prob)
         self._finish_walk()
         return np.concatenate(done, axis=0).T.astype(np.int32)
 
@@ -672,6 +724,8 @@ class StreamingEngine:
         blocks: dict[int, np.ndarray] = {}     # start site → (L, N) block
         env = PP.segment_env_init(n_samples, schedule[0][2], self.gamma_dtype)
         log_scale = jnp.zeros((n_samples,), dtype=real_dtype_of(env.dtype))
+        log_prob = (jnp.zeros((n_samples,), dtype=real_dtype_of(env.dtype))
+                    if self.clamp_map is not None else None)
 
         if resume:
             if not ckpt_dir:
@@ -733,6 +787,14 @@ class StreamingEngine:
                         "the predecessor owner is sampling a different "
                         "(n_samples, key) job")
                 env, log_scale = jnp.asarray(env_h), jnp.asarray(ls_h)
+                if self.clamp_map is not None:
+                    lp_h = SW.decode_handoff_log_prob(payload)
+                    if lp_h is None:
+                        raise RuntimeError(
+                            "clamped walk received a handoff without the "
+                            "log_prob carry — is the predecessor owner "
+                            "running an unclamped plan?")
+                    log_prob = jnp.asarray(lp_h)
                 self.stats["handoffs"] += 1
                 self.stats["handoff_recv_bytes"] += SW.payload_nbytes(payload)
                 if ckpt_dir:              # durable BEFORE computing from it
@@ -757,8 +819,13 @@ class StreamingEngine:
             with self.runtime.compute_lock():
                 seg = MPS(gd, ld, self.semantics)
                 env = fit_env(env, chi_s)
-                samples, env, log_scale = self._run_segment(
-                    seg, env, log_scale, key, start)
+                if self.clamp_map is None:
+                    samples, env, log_scale = self._run_segment(
+                        seg, env, log_scale, key, start)
+                else:
+                    samples, env, log_scale, log_prob = \
+                        self._run_segment_clamped(seg, env, log_scale,
+                                                  log_prob, key, start)
                 samples = np.asarray(samples[:real])
                 jax.block_until_ready((env, log_scale))
             self.stats["compute_s"] += time.perf_counter() - t0
@@ -774,7 +841,8 @@ class StreamingEngine:
                     S.SamplerState(env, key, log_scale),
                     np.zeros((0, n_samples), dtype=np.int32), keep=0)
             if idx + 1 < len(schedule) and owners[idx + 1] != me:
-                payload = SW.encode_handoff(env, log_scale, key, site_done)
+                payload = SW.encode_handoff(env, log_scale, key, site_done,
+                                            log_prob=log_prob)
                 self.runtime.send(owners[idx + 1], payload, tag=site_done)
                 self.stats["handoffs"] += 1
                 self.stats["handoff_send_bytes"] += SW.payload_nbytes(payload)
@@ -786,6 +854,16 @@ class StreamingEngine:
             self.stats["gather_bytes"] += SW.payload_nbytes(pay)
             merged.update(SW.decode_blocks(pay))
         out = SW.assemble_blocks(merged, self.n_sites, n_samples)
+        if self.clamp_map is not None:
+            # the completed carry lives with the LAST segment's owner; one
+            # extra tiny gather makes stats["log_prob"] identical on every
+            # process, matching the sample-block contract
+            mine = (np.asarray(log_prob) if owners[-1] == me
+                    else np.zeros((0,), dtype=np.float64))
+            for pay in self.runtime.allgather_payloads({"log_prob": mine}):
+                arr = np.asarray(pay["log_prob"])
+                if arr.size:
+                    self.stats["log_prob"] = arr
         self._finish_walk()
         return out
 

@@ -85,6 +85,10 @@ def _main() -> None:
                          "XLA reference, or auto (pallas on TPU)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--clamp", default=None,
+                    help="conditional sampling: 'site=outcome,...' forces "
+                         "those sites and reports the per-sample conditional "
+                         "log-probability (repro.workloads)")
     ap.add_argument("--dynamic-bond", action="store_true")
     ap.add_argument("--micro-batch", type=int, default=0,
                     help="N₂ per data shard (0 = whole batch)")
@@ -157,6 +161,13 @@ def _main() -> None:
         chi_profile = tuple(int(c) for c in buck)
         print("table1:", DB.table1_metrics(prof, args.chi))
 
+    clamp = None
+    if args.clamp:
+        from repro.workloads.clamp import parse_clamp_arg
+        clamp = parse_clamp_arg(args.clamp)
+        print(f"clamp: {clamp} (clamped walks skip chain checkpoints — "
+              f"macro-batch idempotence is the restart story)")
+
     scheme = args.scheme
     if runtime.name == "remote" and scheme not in ("auto", "seq"):
         print(f"runtime=remote resolves placement on the worker — "
@@ -178,6 +189,7 @@ def _main() -> None:
         chi_profile=chi_profile,
         segment_len=args.segment_len or api.AUTO,
         checkpoint_every=1,
+        clamp=clamp,
     )
 
     n1 = args.macro_batches
@@ -202,9 +214,15 @@ def _main() -> None:
               f"{plan.kernels!r} (backend={jax.default_backend()}; "
               f"registered ops: {len(dispatch.registered_ops())})")
 
+        lp_blocks: dict[int, np.ndarray] = {}
+
         def save_batch(b: int, out: np.ndarray) -> None:
             np.save(os.path.join(args.out, f"batch_{b:05d}.npy"),
                     np.asarray(out).astype(np.int8))
+            if clamp is not None:
+                lp = session.stats.get("log_prob")
+                if lp is not None and len(lp) == out.shape[0]:
+                    lp_blocks[b] = np.asarray(lp, dtype=np.float64)
             print(f"macro batch {b} done ({per_batch} samples)", flush=True)
 
         if args.service:
@@ -218,7 +236,7 @@ def _main() -> None:
             job_key = jax.random.fold_in(base, 0) if n1 == 1 else base
             # fleet lanes have no local chain walk — per-batch idempotence
             # (skip_batches from the files on disk) is the restart story
-            ck_root = (None if args.service_fleet
+            ck_root = (None if args.service_fleet or clamp is not None
                        else os.path.join(args.out, "chain_ckpt"))
             with api.SamplingService(workers=args.service_workers,
                                      pool=args.service_fleet or None) as svc:
@@ -252,12 +270,22 @@ def _main() -> None:
         else:
             session.run_queue(
                 queue, per_batch, base, worker="driver",
-                checkpoint_root=os.path.join(args.out, "chain_ckpt"),
+                checkpoint_root=(None if clamp is not None else
+                                 os.path.join(args.out, "chain_ckpt")),
                 on_batch=save_batch)
         if session.stats:
             print("streaming stats:",
                   {k: (round(v, 4) if isinstance(v, float) else v)
-                   for k, v in session.stats.items()})
+                   for k, v in session.stats.items()
+                   if k != "log_prob"})
+        if clamp is not None and lp_blocks:
+            # the conditional weights: ln P(clamped outcomes | earlier
+            # sites) per sample — exp-mean estimates the clamp marginal
+            lp = np.concatenate([lp_blocks[b] for b in sorted(lp_blocks)])
+            w = np.exp(lp)
+            print(f"clamp log_prob: n={lp.size} mean={lp.mean():.6f} "
+                  f"min={lp.min():.6f} max={lp.max():.6f}  "
+                  f"P(clamp) ≈ {w.mean():.6g}")
         # where the Γ bytes moved: disk I/O lives on the store counters,
         # interconnect/dispatch bytes on the runtime's
         print("runtime counters:", runtime.io_counters())

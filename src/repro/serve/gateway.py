@@ -296,6 +296,13 @@ class Gateway:
         if n_samples % macro_batches:
             raise _HTTPError(400, f"n_samples={n_samples} must divide over "
                                   f"{macro_batches} macro batches")
+        # the override schema is the SamplerConfig dataclass itself, so new
+        # client-side fields (e.g. the workloads `clamp` spec, a {site:
+        # outcome} object — conditional jobs) are accepted here without a
+        # gateway change; a malformed value (clamp included) fails
+        # SamplerConfig construction below → clean 400, and the resolved
+        # digest folds it into the ResultCache key, so a clamped job can
+        # never serve an unclamped job's cached frames (or vice versa)
         overrides = body.get("config") or {}
         if not isinstance(overrides, dict):
             raise _HTTPError(400, "config must be a JSON object")

@@ -35,10 +35,16 @@ def payload_nbytes(payload: dict) -> int:
 
 # -- env handoff -------------------------------------------------------------
 
-def encode_handoff(env, log_scale, key, site: int) -> dict:
-    return {"env": np.asarray(env), "log_scale": np.asarray(log_scale),
-            "key": np.asarray(jax.random.key_data(key)),
-            "site": np.asarray(int(site), dtype=np.int64)}
+def encode_handoff(env, log_scale, key, site: int, log_prob=None) -> dict:
+    """``log_prob`` rides only on clamped walks (repro.workloads): the
+    accumulated per-sample conditional weight is part of the carry, so it
+    crosses ownership boundaries exactly like ``log_scale`` does."""
+    payload = {"env": np.asarray(env), "log_scale": np.asarray(log_scale),
+               "key": np.asarray(jax.random.key_data(key)),
+               "site": np.asarray(int(site), dtype=np.int64)}
+    if log_prob is not None:
+        payload["log_prob"] = np.asarray(log_prob)
+    return payload
 
 
 def decode_handoff(payload: dict
@@ -46,6 +52,12 @@ def decode_handoff(payload: dict
     """→ (env, log_scale, base-key data, boundary site)."""
     return (np.asarray(payload["env"]), np.asarray(payload["log_scale"]),
             np.asarray(payload["key"]), int(payload["site"]))
+
+
+def decode_handoff_log_prob(payload: dict):
+    """The clamped-walk carry, or ``None`` on an unclamped handoff."""
+    lp = payload.get("log_prob")
+    return None if lp is None else np.asarray(lp)
 
 
 # -- sample-block gather ------------------------------------------------------
@@ -93,4 +105,5 @@ def assemble_blocks(merged: dict[int, np.ndarray], n_sites: int,
 
 
 __all__ = ["assemble_blocks", "decode_blocks", "decode_handoff",
-           "encode_blocks", "encode_handoff", "payload_nbytes"]
+           "decode_handoff_log_prob", "encode_blocks", "encode_handoff",
+           "payload_nbytes"]

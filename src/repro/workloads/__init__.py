@@ -1,0 +1,34 @@
+"""Workload subsystem: conditional sampling, BYO-MPS ingest, scenarios.
+
+Three pillars over the execution stack (ROADMAP item 5):
+
+- :mod:`repro.workloads.clamp` — the conditional/clamped-sampling spec
+  carried on ``SamplerConfig.clamp`` through plan → engine → kernels;
+  clamped sites force their outcome into the collapse path and the walk
+  returns the clamped branch's Born weight as a per-sample ``log_prob``
+  (exact marginals, rejection-free conditioning).
+- :mod:`repro.workloads.ingest` — canonicalize an externally-trained MPS
+  (site-tensor list or ``.npz`` bundle) into the repo's Γ/λ form,
+  validate isometry, and write a digest-manifested ``GammaStore``.
+- :mod:`repro.workloads.scenarios` — an eval-harness-style registry
+  (build → sample → score) with each scenario emitting a reproducible
+  ``BENCH.json`` row; driven by ``launch/scenarios.py``.
+
+Only :mod:`.clamp` is imported eagerly: ``repro.api.config`` normalizes
+clamp specs at config construction, and :mod:`.scenarios` imports the
+api back — the lazy attributes below keep that cycle open.
+"""
+from repro.workloads.clamp import (ClampSpec, clamp_map, normalize_clamp,
+                                   parse_clamp_arg, segment_clamp_arrays,
+                                   validate_clamp)
+
+__all__ = ["ClampSpec", "clamp_map", "ingest", "normalize_clamp",
+           "parse_clamp_arg", "scenarios", "segment_clamp_arrays",
+           "validate_clamp"]
+
+
+def __getattr__(name):
+    if name in ("ingest", "scenarios"):
+        import importlib
+        return importlib.import_module(f"repro.workloads.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,180 @@
+"""Clamp specs: the conditional-sampling contract (workloads pillar 1).
+
+A *clamp* fixes the outcome of a subset of sites while the sampler walks
+the rest of the chain as usual — a forced draw into the existing collapse
+path, not a rejection filter.  The spec is carried on the session-level
+:class:`repro.api.SamplerConfig` and travels the whole stack (plan →
+engine → kernel dispatch → remote payload → gateway schema), so it must
+be (a) hashable — session plans and service coalescing cells contain the
+config — and (b) JSON-round-trippable — the v2 job-batch payload and the
+gateway job schema serialize it.
+
+Canonical form (what :func:`normalize_clamp` produces)::
+
+    ((site, outcome), ...)            # sorted by site
+    ((site, (o_0, ..., o_{N-1})), ...)  # per-sample outcomes
+
+Accepted inputs: ``None`` / ``{}`` (no clamp — normalizes to ``None`` so
+an empty clamp routes through the *unchanged* unclamped code path,
+bit-identical by construction), a ``{site: outcome}`` mapping (JSON
+object keys arrive as strings — coerced), a ``{site: [per-sample
+outcomes]}`` mapping, or an already-canonical pair sequence.
+
+This module is a leaf (numpy only): ``repro.api.config`` normalizes with
+it at config construction, ``repro.core.clamped`` builds traced arrays
+from it, and the gateway's 400-on-malformed behaviour is exactly the
+:class:`ValueError` raised here surfacing through ``config_from_dict``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import numpy as np
+
+ClampSpec = Optional[tuple]
+
+
+def _as_site(k) -> int:
+    try:
+        site = int(k)
+    except (TypeError, ValueError):
+        raise ValueError(f"clamp site {k!r} is not an integer") from None
+    if isinstance(k, float) and k != site:
+        raise ValueError(f"clamp site {k!r} is not an integer")
+    if site < 0:
+        raise ValueError(f"clamp site {site} is negative")
+    return site
+
+
+def _as_outcome(site: int, v) -> Union[int, tuple]:
+    if isinstance(v, (str, bytes, dict)):
+        raise ValueError(f"clamp outcome for site {site} must be an integer "
+                         f"or a per-sample integer sequence, got {v!r}")
+    if np.isscalar(v) or (isinstance(v, np.ndarray) and v.ndim == 0):
+        try:
+            o = int(v)
+        except (TypeError, ValueError):
+            raise ValueError(f"clamp outcome {v!r} for site {site} is not "
+                             f"an integer") from None
+        if o < 0:
+            raise ValueError(f"clamp outcome {o} for site {site} is negative")
+        return o
+    try:
+        seq = [int(x) for x in np.asarray(v).ravel().tolist()]
+    except (TypeError, ValueError):
+        raise ValueError(f"clamp outcome {v!r} for site {site} is not an "
+                         f"integer or integer sequence") from None
+    if not seq:
+        raise ValueError(f"clamp for site {site} is an empty sequence")
+    if any(o < 0 for o in seq):
+        raise ValueError(f"clamp for site {site} contains negative outcomes")
+    return tuple(seq)
+
+
+def normalize_clamp(clamp) -> ClampSpec:
+    """Any accepted input → the canonical hashable spec (or ``None``).
+
+    Raises ``ValueError`` on malformed specs — the gateway surfaces this
+    as a clean 400 via ``config_from_dict``."""
+    if clamp is None:
+        return None
+    if isinstance(clamp, dict):
+        items = clamp.items()
+    elif isinstance(clamp, (tuple, list)):
+        items = []
+        for pair in clamp:
+            if (isinstance(pair, (str, bytes)) or
+                    not hasattr(pair, "__len__") or len(pair) != 2):
+                raise ValueError(f"clamp entry {pair!r} is not a "
+                                 f"(site, outcome) pair")
+            items.append((pair[0], pair[1]))
+    else:
+        raise ValueError(f"clamp must be a mapping or a (site, outcome) "
+                         f"pair sequence, got {type(clamp).__name__}")
+    out = {}
+    for k, v in items:
+        site = _as_site(k)
+        if site in out:
+            raise ValueError(f"clamp names site {site} twice")
+        out[site] = _as_outcome(site, v)
+    if not out:
+        return None                     # empty ≡ unclamped, literally
+    return tuple(sorted(out.items()))
+
+
+def validate_clamp(clamp: ClampSpec, *, n_sites: int, d: int,
+                   n_samples: Optional[int] = None) -> None:
+    """Range-check a normalized spec against a concrete chain/batch.
+
+    Plan-time validation: site ∈ [0, n_sites), outcome ∈ [0, d), and a
+    per-sample sequence must cover exactly ``n_samples`` samples."""
+    if clamp is None:
+        return
+    for site, outcome in clamp:
+        if site >= n_sites:
+            raise ValueError(f"clamp site {site} is outside the chain "
+                             f"(n_sites={n_sites})")
+        vals = outcome if isinstance(outcome, tuple) else (outcome,)
+        for o in vals:
+            if o >= d:
+                raise ValueError(f"clamp outcome {o} at site {site} is "
+                                 f"outside the physical dimension (d={d})")
+        if isinstance(outcome, tuple) and n_samples is not None \
+                and len(outcome) != n_samples:
+            raise ValueError(f"per-sample clamp at site {site} covers "
+                             f"{len(outcome)} samples, batch has "
+                             f"{n_samples}")
+
+
+def clamp_map(clamp: ClampSpec) -> Optional[dict]:
+    """Canonical spec → ``{site: int | (N,) int32 array}`` for array
+    construction (``None`` for no clamp)."""
+    if clamp is None:
+        return None
+    return {site: (np.asarray(outcome, dtype=np.int32)
+                   if isinstance(outcome, tuple) else int(outcome))
+            for site, outcome in clamp}
+
+
+def segment_clamp_arrays(cmap: dict, start: int, length: int,
+                         n_samples: int) -> tuple[np.ndarray, np.ndarray]:
+    """Traced-operand view of the clamp for sites [start, start+length).
+
+    Returns ``(mask (L,) bool, vals (L, N) int32)``.  Sites past the
+    chain end (the streaming engine's identity pad sites) are simply
+    absent from ``cmap`` and stay unmasked, so pads contribute neither
+    forced outcomes nor log-probability."""
+    mask = np.zeros((length,), dtype=bool)
+    vals = np.zeros((length, n_samples), dtype=np.int32)
+    for site, outcome in cmap.items():
+        if start <= site < start + length:
+            mask[site - start] = True
+            vals[site - start, :] = outcome   # scalar broadcasts; (N,) copies
+    return mask, vals
+
+
+def parse_clamp_arg(text: str) -> Optional[dict]:
+    """CLI syntax ``"site=outcome,site=outcome,..."`` → a clamp mapping.
+
+    Used by ``launch/sample.py --clamp``; raises ``ValueError`` with the
+    offending token on malformed input."""
+    if not text:
+        return None
+    out = {}
+    for tok in text.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        if "=" not in tok:
+            raise ValueError(f"clamp token {tok!r} is not site=outcome")
+        s, o = tok.split("=", 1)
+        try:
+            out[int(s)] = int(o)
+        except ValueError:
+            raise ValueError(f"clamp token {tok!r} is not "
+                             f"integer=integer") from None
+    return out or None
+
+
+__all__ = ["ClampSpec", "clamp_map", "normalize_clamp", "parse_clamp_arg",
+           "segment_clamp_arrays", "validate_clamp"]

@@ -1,0 +1,395 @@
+"""Workloads subsystem: clamped sampling, BYO-MPS ingest, scenarios.
+
+The tentpole contracts under test:
+
+* **conditioning is exact and rejection-free** — a clamped walk forces
+  outcomes through the normal collapse path and returns the Born weight
+  of the clamped branch as per-sample ``log_prob``; self-normalized
+  weighted frequencies reproduce the conditionals of the exact joint,
+  and a fully-clamped walk's ``log_prob`` IS the log joint;
+* **clamping perturbs nothing it doesn't touch** — per-site draws are
+  independent ``fold_in(base, i)`` uniforms, so sites before the clamp
+  are bit-identical to the unclamped run, an empty clamp IS the
+  unclamped config, and {inmem, streamed} × {seq, dp} agree bit-exactly
+  on clamped output;
+* **ingest only accepts what it can sample correctly** — structural
+  violations and non-canonical Born chains raise :class:`IngestError`;
+  the canonicalizing path preserves the state exactly.
+"""
+import itertools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.core import clamped as CL
+from repro.core import mps as M
+from repro.core import sampler as S
+from repro.data.gamma_store import GammaStore
+from repro.workloads import clamp as WC
+from repro.workloads import ingest as IG
+from repro.workloads import scenarios as SC
+
+
+# ---------------------------------------------------------------------------
+# clamp spec: normalization / validation / CLI parsing
+# ---------------------------------------------------------------------------
+
+def test_normalize_clamp_forms():
+    canon = ((2, 1), (4, 0))
+    assert WC.normalize_clamp({4: 0, 2: 1}) == canon
+    assert WC.normalize_clamp([[4, 0], [2, 1]]) == canon
+    assert WC.normalize_clamp({"2": 1, "4": 0}) == canon   # JSON string keys
+    assert WC.normalize_clamp(canon) == canon
+    assert WC.normalize_clamp(None) is None
+    assert WC.normalize_clamp({}) is None                  # empty == absent
+    per_sample = WC.normalize_clamp({1: [0, 1, 0]})
+    assert per_sample == ((1, (0, 1, 0)),)
+
+
+@pytest.mark.parametrize("bad", [
+    {2: 1, "2": 0},          # duplicate site
+    {-1: 0},                 # negative site
+    {1: -2},                 # negative outcome
+    {1: ()},                 # empty per-sample sequence
+    {1.5: 0},                # non-integer site
+    {"abc": 0},              # unparseable site
+    "2=1",                   # a raw string is not a clamp spec
+])
+def test_normalize_clamp_rejects(bad):
+    with pytest.raises(ValueError):
+        WC.normalize_clamp(bad)
+
+
+def test_validate_clamp_ranges():
+    clamp = WC.normalize_clamp({2: 1})
+    WC.validate_clamp(clamp, n_sites=6, d=3)
+    with pytest.raises(ValueError):
+        WC.validate_clamp(clamp, n_sites=2, d=3)           # site out of range
+    with pytest.raises(ValueError):
+        WC.validate_clamp(clamp, n_sites=6, d=1)           # outcome >= d
+    per = WC.normalize_clamp({0: (0, 1, 2)})
+    WC.validate_clamp(per, n_sites=6, d=3, n_samples=3)
+    with pytest.raises(ValueError):
+        WC.validate_clamp(per, n_sites=6, d=3, n_samples=4)  # length mismatch
+
+
+def test_segment_clamp_arrays():
+    cmap = WC.clamp_map(WC.normalize_clamp({2: 1, 5: np.array([0, 2])}))
+    mask, vals = WC.segment_clamp_arrays(cmap, 2, 3, 2)    # sites [2, 5)
+    assert mask.tolist() == [True, False, False]
+    assert vals[0].tolist() == [1, 1]
+    mask2, vals2 = WC.segment_clamp_arrays(cmap, 5, 2, 2)  # sites [5, 7)
+    assert mask2.tolist() == [True, False]
+    assert vals2[0].tolist() == [0, 2]
+
+
+def test_parse_clamp_arg():
+    assert WC.parse_clamp_arg("2=1,4=0") == {2: 1, 4: 0}
+    with pytest.raises(ValueError):
+        WC.parse_clamp_arg("2")
+
+
+# ---------------------------------------------------------------------------
+# clamped walk vs the exact oracle (core level)
+# ---------------------------------------------------------------------------
+
+def _conditional_oracle(mps, clamp_site, clamp_val):
+    """Exact conditionals P(site i = s | clamp) by joint restriction."""
+    d, sites = mps.phys_dim, mps.n_sites
+    joint = M.enumerate_probabilities(mps)
+    outs = np.array(list(itertools.product(range(d), repeat=sites)))
+    sel = outs[:, clamp_site] == clamp_val
+    cond = joint[sel] / joint[sel].sum()
+    return outs[sel], cond, float(joint[sel].sum())
+
+
+@pytest.mark.parametrize("mps_fixture", ["linear_mps_small", "born_mps_6x4"])
+def test_clamped_marginals_match_joint_restriction(request, mps_fixture):
+    mps = request.getfixturevalue(mps_fixture)
+    d, n = mps.phys_dim, 4000
+    clamp_site, clamp_val = 2, 1
+    clamp = WC.normalize_clamp({clamp_site: clamp_val})
+    cmap = WC.clamp_map(clamp)
+    mask, vals = WC.segment_clamp_arrays(cmap, 0, mps.n_sites, n)
+    cfg = S.SamplerConfig(semantics=mps.semantics)
+    samples, lp = CL.sample_clamped(mps, n, jax.random.key(7), cfg,
+                                    mask, vals)
+    samples, lp = np.asarray(samples), np.asarray(lp, dtype=np.float64)
+    assert np.all(samples[:, clamp_site] == clamp_val)
+    outs_c, cond, p_branch = _conditional_oracle(mps, clamp_site, clamp_val)
+    w = np.exp(lp)
+    for i in range(mps.n_sites):
+        if i == clamp_site:
+            continue
+        for s in range(d):
+            est = w[samples[:, i] == s].sum() / w.sum()
+            exact = cond[outs_c[:, i] == s].sum()
+            assert abs(est - exact) < 0.06, (i, s, est, exact)
+    # E[w] = P(clamp): w varies only through the sampled prefix
+    assert abs(w.mean() - p_branch) < 0.02
+
+
+def test_fully_clamped_log_prob_is_log_joint(linear_mps_small):
+    mps = linear_mps_small
+    d, sites = mps.phys_dim, mps.n_sites
+    outcome = (1, 0, 2, 1, 0, 1)
+    clamp = WC.normalize_clamp(dict(enumerate(outcome)))
+    mask, vals = WC.segment_clamp_arrays(WC.clamp_map(clamp), 0, sites, 8)
+    _, lp = CL.sample_clamped(mps, 8, jax.random.key(0), S.SamplerConfig(),
+                              mask, vals)
+    joint = M.enumerate_probabilities(mps)
+    expect = np.log(joint[np.ravel_multi_index(outcome, (d,) * sites)])
+    np.testing.assert_allclose(np.asarray(lp), expect, rtol=1e-10)
+
+
+def test_clamp_leaves_untouched_draws_bit_identical(linear_mps_small):
+    """Per-site uniforms are independent fold_ins, so forcing site 2
+    cannot change any site before it — same draws, same outcomes."""
+    mps, n = linear_mps_small, 64
+    key = jax.random.key(5)
+    base = np.asarray(S.sample(mps, n, key))
+    mask, vals = WC.segment_clamp_arrays(
+        WC.clamp_map(WC.normalize_clamp({2: 1})), 0, mps.n_sites, n)
+    clamped, lp = CL.sample_clamped(mps, n, key, S.SamplerConfig(),
+                                    mask, vals)
+    clamped = np.asarray(clamped)
+    assert np.array_equal(clamped[:, :2], base[:, :2])
+    # rows where the free walk already drew 1 at site 2 are untouched
+    hit = base[:, 2] == 1
+    assert hit.any()
+    assert np.array_equal(clamped[hit], base[hit])
+    assert np.all(np.asarray(lp) < 0)
+
+
+def test_unmasked_clamped_chain_is_the_sampler(linear_mps_small):
+    mps, n = linear_mps_small, 32
+    key = jax.random.key(9)
+    mask = np.zeros(mps.n_sites, dtype=bool)
+    vals = np.zeros((mps.n_sites, n), dtype=np.int32)
+    out, lp = CL.sample_clamped(mps, n, key, S.SamplerConfig(), mask, vals)
+    assert np.array_equal(np.asarray(out), np.asarray(S.sample(mps, n, key)))
+    assert np.all(np.asarray(lp) == 0.0)
+
+
+def test_per_sample_clamp_arrays(linear_mps_small):
+    mps, n = linear_mps_small, 6
+    forced = np.array([0, 1, 2, 0, 1, 2], dtype=np.int32)
+    clamp = WC.normalize_clamp({3: forced})
+    WC.validate_clamp(clamp, n_sites=mps.n_sites, d=mps.phys_dim,
+                      n_samples=n)
+    mask, vals = WC.segment_clamp_arrays(WC.clamp_map(clamp), 0,
+                                         mps.n_sites, n)
+    out, lp = CL.sample_clamped(mps, n, jax.random.key(1), S.SamplerConfig(),
+                                mask, vals)
+    assert np.array_equal(np.asarray(out)[:, 3], forced)
+    assert np.all(np.isfinite(np.asarray(lp)))
+
+
+# ---------------------------------------------------------------------------
+# session level: {inmem, streamed} × {seq, dp} agreement
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chain(tmp_path_factory, linear_mps_10x6):
+    root = str(tmp_path_factory.mktemp("workloads_gamma"))
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        store.write_mps(linear_mps_10x6)
+        store.write_digest_manifest()
+    return root, linear_mps_10x6
+
+
+def _session_sample(source, cfg_kwargs, n, key, mesh=None):
+    with api.SamplingSession(source, api.SamplerConfig(**cfg_kwargs),
+                             mesh=mesh) as sess:
+        out = sess.sample(n, key)
+        return np.asarray(out), dict(sess.stats)
+
+
+@pytest.mark.parametrize("scheme", ["seq", "dp"])
+def test_empty_clamp_is_the_unclamped_config(chain, scheme):
+    root, mps = chain
+    n, key = 24, jax.random.key(3)
+    mesh = jax.make_mesh((1,), ("data",)) if scheme == "dp" else None
+    for source in (mps, root):
+        base, _ = _session_sample(source, {"scheme": scheme}, n, key, mesh)
+        empty, st = _session_sample(source, {"scheme": scheme, "clamp": {}},
+                                    n, key, mesh)
+        assert np.array_equal(base, empty)
+        assert "log_prob" not in st        # the unclamped path really ran
+
+
+@pytest.mark.parametrize("scheme", ["seq", "dp"])
+def test_clamped_streamed_matches_clamped_inmem(chain, scheme):
+    root, mps = chain
+    n, key, clamp = 24, jax.random.key(3), {2: 1, 7: 0}
+    mesh = jax.make_mesh((1,), ("data",)) if scheme == "dp" else None
+    inmem, st_i = _session_sample(mps, {"scheme": scheme, "clamp": clamp},
+                                  n, key, mesh)
+    # open the store at full precision: a bare root string resolves to the
+    # float32 compute default, which would quantize the weights
+    with GammaStore(root, storage_dtype=jnp.float64,
+                    compute_dtype=jnp.float64) as store:
+        streamed, st_s = _session_sample(
+            store, {"scheme": scheme, "clamp": clamp, "segment_len": 3},
+            n, key, mesh)
+    assert np.array_equal(inmem, streamed)
+    np.testing.assert_array_equal(st_i["log_prob"], st_s["log_prob"])
+    assert np.all(inmem[:, 2] == 1) and np.all(inmem[:, 7] == 0)
+    assert st_i["log_prob"].shape == (n,)
+
+
+def test_clamp_refuses_checkpoint_resume(chain, tmp_path):
+    root, _ = chain
+    cfg = api.SamplerConfig(clamp={2: 1}, segment_len=3,
+                            checkpoint_dir=str(tmp_path / "ck"))
+    with api.SamplingSession(root, cfg) as sess:
+        with pytest.raises(ValueError, match="clamped walks do not"):
+            sess.sample(8, jax.random.key(0))
+
+
+def test_clamp_out_of_range_rejected_at_plan(linear_mps_small):
+    with api.SamplingSession(linear_mps_small,
+                             api.SamplerConfig(clamp={99: 0})) as sess:
+        with pytest.raises(ValueError, match="site"):
+            sess.sample(8, jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# remote payload round trip
+# ---------------------------------------------------------------------------
+
+def test_clamp_survives_remote_config_round_trip():
+    import json
+
+    from repro.api.remote import config_from_dict, config_to_dict
+    cfg = api.SamplerConfig(clamp={4: (0, 1, 0), 2: 1})
+    wire = json.loads(json.dumps(config_to_dict(cfg)))
+    back = config_from_dict(wire)
+    assert back.clamp == cfg.clamp == ((2, 1), (4, (0, 1, 0)))
+
+
+def test_malformed_clamp_rejected_at_config():
+    with pytest.raises(ValueError):
+        api.SamplerConfig(clamp={"abc": 0})
+    with pytest.raises(ValueError):
+        api.SamplerConfig(clamp=[[2, 1], [2, 0]])
+
+
+# ---------------------------------------------------------------------------
+# BYO-MPS ingest
+# ---------------------------------------------------------------------------
+
+def _ragged_born(seed=0, dims=(1, 2, 3, 2, 1), d=2):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(dims[i], dims[i + 1], d))
+            + 1j * rng.normal(size=(dims[i], dims[i + 1], d))
+            for i in range(len(dims) - 1)]
+
+
+def _statevec(tensors, d):
+    M_ = len(tensors)
+    out = np.zeros((d,) * M_, dtype=complex)
+    for s in itertools.product(range(d), repeat=M_):
+        m = np.eye(1)
+        for i, si in enumerate(s):
+            m = m @ tensors[i][:, :, si]
+        out[s] = m[0, 0]
+    return out.reshape(-1)
+
+
+def test_ingest_canonicalization_preserves_the_state():
+    tensors = _ragged_born()
+    mps, report = IG.build_mps(tensors, semantics="born")
+    assert report.canonicalized and report.max_isometry_error < 1e-12
+    psi = _statevec(tensors, 2)
+    p_true = np.abs(psi) ** 2
+    p_true /= p_true.sum()
+    np.testing.assert_allclose(M.enumerate_probabilities(mps), p_true,
+                               atol=1e-10)
+
+
+def test_ingest_rejects_noncanonical_without_canonicalize():
+    with pytest.raises(IG.IngestError, match="canonicalize=True"):
+        IG.build_mps(_ragged_born(), semantics="born", canonicalize=False)
+
+
+@pytest.mark.parametrize("mutate,msg", [
+    (lambda t: t[:-1], "boundary"),                       # right bond != 1
+    (lambda t: t[:1] + [t[1][:, :, :1]] + t[2:], "physical dimension"),
+    (lambda t: t[:1] + [np.zeros((3, 2, 2))] + t[2:], "bond mismatch"),
+    (lambda t: [], "empty"),
+])
+def test_ingest_structural_rejection(mutate, msg):
+    with pytest.raises(IG.IngestError, match=msg):
+        IG.build_mps(mutate(_ragged_born()), semantics="born")
+
+
+def test_ingest_linear_rejects_negativity():
+    rng = np.random.default_rng(1)
+    tensors = [np.abs(rng.normal(size=s))
+               for s in [(1, 2, 3), (2, 2, 3), (2, 1, 3)]]
+    IG.build_mps(tensors, semantics="linear")              # clean passes
+    tensors[1][0, 0, 0] = -0.5
+    with pytest.raises(IG.IngestError, match="non-negative"):
+        IG.build_mps(tensors, semantics="linear")
+
+
+def test_ingest_npz_and_store_round_trip(tmp_path):
+    tensors = _ragged_born(seed=3)
+    npz = tmp_path / "external_mps.npz"
+    np.savez(npz, *tensors)
+    store, report = IG.ingest_mps(
+        str(npz), str(tmp_path / "store"), semantics="born",
+        storage_dtype=jnp.complex128, compute_dtype=jnp.complex128)
+    with store:
+        assert store.n_sites == report.n_sites == len(tensors)
+        assert report.digest == store.digest()             # manifest written
+        mps, _ = IG.build_mps(tensors, semantics="born")
+        for i in range(store.n_sites):
+            g, lam = store.get(i, prefetch_next=False)
+            np.testing.assert_array_equal(g, np.asarray(mps.gammas[i]))
+            np.testing.assert_array_equal(lam, np.asarray(mps.lambdas[i]))
+        # the ingested store is sample-ready through the public session
+        with api.SamplingSession(store, api.SamplerConfig(
+                semantics="born")) as sess:
+            out = sess.sample(16, jax.random.key(0))
+        assert out.shape == (16, len(tensors))
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+def test_scenario_registry_catalogue():
+    names = SC.available_scenarios()
+    for expected in ("gbs", "conditional_marginals",
+                     "mnist_classify_generate"):
+        assert expected in names and names[expected]
+    with pytest.raises(KeyError, match="unknown scenario"):
+        SC.run_scenario("no_such_scenario")
+
+
+def test_conditional_marginals_scenario_passes():
+    result = SC.run_scenario("conditional_marginals",
+                             SC.ScenarioConfig(n_samples=2000, json_path=""))
+    assert result.passed, result
+    assert result.score < result.threshold
+    assert result.metrics["branch_err"] < 5e-3
+
+
+def test_scenario_record_schema(tmp_path):
+    import json
+    path = str(tmp_path / "traj.json")
+    result = SC.run_scenario("mnist_classify_generate",
+                             SC.ScenarioConfig(n_samples=400,
+                                               json_path=path))
+    assert result.passed
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows[-1]["bench"] == "scenario"
+    assert rows[-1]["config"]["scenario"] == "mnist_classify_generate"
+    assert {"passed", "score", "threshold", "wall_s", "utc"} <= set(rows[-1])
